@@ -1,0 +1,89 @@
+"""Inject generated tables + bench numbers into EXPERIMENTS.md markers."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.roofline import load_artifacts, merged_table
+from benchmarks.make_experiments_tables import (dryrun_table, roofline_md,
+                                                variants_md)
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def paper_validation_md() -> str:
+    path = os.path.join(ROOT, "artifacts", "bench_results.json")
+    if not os.path.exists(path):
+        return "_(run `python -m benchmarks.run` to populate)_"
+    with open(path) as f:
+        r = json.load(f)
+    out = []
+    if "fig4_mnist" in r:
+        out.append("**Fig. 4 (MNIST-784-like, L2).** RPF recall@1 vs fraction"
+                   " searched:")
+        out.append("")
+        out.append("| L | recall@1 | % of DB searched |  | LSH (T,K) | recall@1 | % searched |")
+        out.append("|---|---|---|---|---|---|---|")
+        rpf = r["fig4_mnist"]["rpf"]
+        lsh = r["fig4_mnist"]["lsh"]
+        for i in range(max(len(rpf), len(lsh))):
+            a = rpf[i] if i < len(rpf) else None
+            b = lsh[i] if i < len(lsh) else None
+            out.append(
+                "| " + (f"{a['L']} | {a['recall']:.3f} | "
+                        f"{a['frac_searched']*100:.3f}" if a else " | | ")
+                + " |  | "
+                + (f"({b['n_tables']},{b['bits']}) | {b['recall']:.3f} | "
+                   f"{b['frac_searched']*100:.3f}" if b else " | | ") + " |")
+        out.append("")
+    if "fig5_iss" in r:
+        out.append("**Fig. 5 (ISS-595-like, chi-square).**")
+        out.append("")
+        out.append("| L | recall@1 | % searched |")
+        out.append("|---|---|---|")
+        for a in r["fig5_iss"]["rpf"]:
+            out.append(f"| {a['L']} | {a['recall']:.3f} | "
+                       f"{a['frac_searched']*100:.3f} |")
+        for b in r["fig5_iss"]["lsh"]:
+            out.append(f"| LSH({b['n_tables']},{b['bits']}) | "
+                       f"{b['recall']:.3f} | {b['frac_searched']*100:.3f} |")
+        out.append("")
+    if "speedup_table" in r:
+        s = r["speedup_table"]
+        out.append(f"**Speedup vs exhaustive** (N={s['n_db']}, chi2, L={s['L']}): "
+                   f"{s['wallclock_speedup']}× wall-clock on this CPU, "
+                   f"{s['bytes_speedup']}× bytes-touched (hardware-"
+                   f"independent), recall {s['recall']:.3f} "
+                   f"(paper: {s['paper_claim']}).")
+    if "tree_stats" in r:
+        t = r["tree_stats"]
+        out.append(f"\n**Tree structure** (§3.4): occupancy max "
+                   f"{t['occ_max']:.0f} (C=12; tie-bound fat leaves), "
+                   f"mean depth {t['depth_mean']:.1f} "
+                   f"(paper formula ~{t['paper_expected_depth']}).")
+    if "retrieval_compare" in r:
+        t = r["retrieval_compare"]
+        out.append(f"\n**RecSys retrieval integration**: RPF recall@{t['k']} "
+                   f"vs brute = {t['recall_vs_brute']:.3f} at "
+                   f"{t['reduction']}× candidate reduction "
+                   f"({t['n_items']}-item catalog).")
+    return "\n".join(out)
+
+
+def main():
+    arts = load_artifacts()
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        doc = f.read()
+    doc = doc.replace("<!-- PAPER_VALIDATION -->", paper_validation_md())
+    doc = doc.replace("<!-- DRYRUN_TABLE -->", dryrun_table(arts))
+    doc = doc.replace("<!-- ROOFLINE_TABLE -->", roofline_md())
+    doc = doc.replace("<!-- VARIANTS_TABLE -->", variants_md(arts))
+    with open(path, "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md assembled;",
+          len(arts), "artifacts,", len(merged_table()), "roofline rows")
+
+
+if __name__ == "__main__":
+    main()

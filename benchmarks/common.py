@@ -1,0 +1,38 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "bench_results.json")
+
+
+def timer(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out
+
+
+def record(results: dict, name: str, payload):
+    os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)), exist_ok=True)
+    existing = {}
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            existing = json.load(f)
+    existing[name] = payload
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(existing, f, indent=1)
+    results[name] = payload
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run artifacts.  Run after `dryrun --all` (+ unroll variants):
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables > artifacts/tables.md
+"""
+from __future__ import annotations
+
+import json
+
+from repro.configs import ASSIGNED, get_arch
+from repro.roofline import load_artifacts, merged_table, roofline_terms
+
+
+def dryrun_table(arts: dict) -> str:
+    rows = ["| arch | cell | mesh | compile s | HLO GFLOP/dev | temp GiB/dev "
+            "| coll GiB/dev | collective mix |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch_id in ASSIGNED:
+        for cell in get_arch(arch_id).cells:
+            for mesh in ("single", "multipod"):
+                r = arts.get((arch_id, cell.name, mesh, "base"))
+                if r is None:
+                    if cell.skip and mesh == "single":
+                        rows.append(f"| {arch_id} | {cell.name} | — | — | — "
+                                    f"| — | — | SKIPPED: {cell.skip_reason} |")
+                    continue
+                mix = ", ".join(
+                    f"{k.split('-')[1] if '-' in k else k}:"
+                    f"{v/2**30:.2f}G"
+                    for k, v in r["collectives"]["bytes"].items() if v)
+                rows.append(
+                    f"| {arch_id} | {cell.name} | {mesh} "
+                    f"| {r['compile_s']} "
+                    f"| {r['cost']['flops']/1e9:.1f} "
+                    f"| {r['memory']['temp_bytes']/2**30:.2f} "
+                    f"| {r['collectives']['total_bytes']/2**30:.3f} "
+                    f"| {mix or '—'} |")
+    return "\n".join(rows)
+
+
+def roofline_md(mesh: str = "single") -> str:
+    rows = merged_table(mesh=mesh)
+    out = ["| arch | cell | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS | MF/HLO ratio | RL fraction | temp GiB | fits "
+           "| src |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for t in rows:
+        out.append(
+            f"| {t['arch']} | {t['cell']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | **{t['dominant']}** "
+            f"| {t['model_flops']:.2e} | {t['model_flops_ratio']:.3f} "
+            f"| {t['roofline_fraction']:.3f} | {t['temp_gib']:.1f} "
+            f"| {'Y' if t['fits_hbm'] else 'N'} | {t['traffic_source']} |")
+    return "\n".join(out)
+
+
+def variants_md(arts: dict) -> str:
+    """All non-base variants vs their base (the §Perf raw numbers)."""
+    out = ["| arch/cell | variant | GFLOP/dev | mem GB acc/dev | coll GiB/dev"
+           " | temp GiB |", "|---|---|---|---|---|---|"]
+    for (arch, cell, mesh, variant), r in sorted(arts.items()):
+        if mesh != "single":
+            continue
+        out.append(
+            f"| {arch}/{cell} | {variant} "
+            f"| {r['cost']['flops']/1e9:.1f} "
+            f"| {r['cost']['bytes_accessed']/1e9:.1f} "
+            f"| {r['collectives']['total_bytes']/2**30:.3f} "
+            f"| {r['memory']['temp_bytes']/2**30:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    arts = load_artifacts()
+    print("## §Dry-run (scan/base variants; both production meshes)\n")
+    print(dryrun_table(arts))
+    print("\n\n## §Roofline (single pod; traffic from unroll variants)\n")
+    print(roofline_md())
+    print("\n\n## §Variants (raw per-variant numbers)\n")
+    print(variants_md(arts))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+from repro.roofline import format_table, merged_table
+
+
+def main(fast: bool = True) -> dict:
+    rows = merged_table(mesh="single")
+    if not rows:
+        print("  (no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return {}
+    print(format_table(rows))
+    return {f"{r['arch']}/{r['cell']}": r for r in rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--paper-scale]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
+artifacts/bench_results.json consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (fig4_mnist, fig5_iss, retrieval_compare,
+                        roofline_table, speedup_table, tree_stats)
+from benchmarks.common import csv_row, record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--paper-scale", action="store_true",
+                   help="full N=60000/250736 runs (slow on CPU)")
+    p.add_argument("--only", default="",
+                   help="comma list: fig4,fig5,speedup,tree,retrieval,roof")
+    args = p.parse_args()
+    fast = not args.paper_scale
+    only = set(args.only.split(",")) if args.only else None
+
+    results: dict = {}
+    rows: list[str] = []
+
+    def want(name):
+        return only is None or name in only
+
+    if want("fig4"):
+        r = fig4_mnist.main(fast=fast)
+        record(results, "fig4_mnist", r)
+        best = max(r["rpf"], key=lambda x: x["recall"])
+        rows.append(csv_row(
+            "fig4_rpf_best", best["query_us"],
+            f"recall={best['recall']:.4f}@L={best['L']}"
+            f";frac={best['frac_searched']:.4f}"))
+        if r["lsh"]:
+            bl = max(r["lsh"], key=lambda x: x["recall"])
+            rows.append(csv_row(
+                "fig4_lsh_best", bl["query_us"],
+                f"recall={bl['recall']:.4f};frac={bl['frac_searched']:.4f}"))
+    if want("fig5"):
+        r = fig5_iss.main(fast=fast)
+        record(results, "fig5_iss", r)
+        best = max(r["rpf"], key=lambda x: x["recall"])
+        rows.append(csv_row(
+            "fig5_rpf_best", best["query_us"],
+            f"recall={best['recall']:.4f}@L={best['L']}"
+            f";frac={best['frac_searched']:.4f}"))
+    if want("speedup"):
+        r = speedup_table.main(fast=fast)
+        record(results, "speedup_table", r)
+        rows.append(csv_row(
+            "speedup_vs_exhaustive", r["indexed_us"],
+            f"wallclock={r['wallclock_speedup']}x"
+            f";bytes={r['bytes_speedup']}x;recall={r['recall']:.3f}"))
+    if want("tree"):
+        r = tree_stats.main(fast=fast)
+        record(results, "tree_stats", r)
+        rows.append(csv_row(
+            "tree_stats", 0.0,
+            f"occ_max={r['occ_max']};depth_mean={r['depth_mean']:.1f}"))
+    if want("retrieval"):
+        r = retrieval_compare.main(fast=fast)
+        record(results, "retrieval_compare", r)
+        rows.append(csv_row(
+            "retrieval_rpf", r["rpf_us"],
+            f"recall_vs_brute={r['recall_vs_brute']:.3f}"
+            f";reduction={r['reduction']}x"))
+    if want("roof"):
+        r = roofline_table.main(fast=fast)
+        record(results, "roofline", r)
+        if r:
+            worst = min(r.values(), key=lambda t: t["roofline_fraction"]
+                        if t["roofline_fraction"] > 0 else 9e9)
+            rows.append(csv_row(
+                "roofline_worst_cell", 0.0,
+                f"{worst['arch']}/{worst['cell']}"
+                f";frac={worst['roofline_fraction']:.3f}"))
+
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for row in rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

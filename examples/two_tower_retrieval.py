@@ -1,0 +1,73 @@
+"""Train a two-tower retrieval model, index the item tower with the paper's
+RPF, and serve retrieval — the full train->index->serve pipeline.
+
+  PYTHONPATH=src python examples/two_tower_retrieval.py
+
+Steps:
+  1. train a two-tower model with in-batch softmax on synthetic interactions,
+  2. encode the item catalog, build the RPF index over item embeddings,
+  3. serve user queries through the index, compare recall vs brute force.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ForestConfig, build_forest, exact_knn, query_forest
+from repro.models import recsys as rs
+from repro.train.optimizer import adamw, cosine_schedule
+from repro.train.train_state import init_train_state, make_train_step
+from repro.train.train_loop import LoopConfig, train
+
+N_USERS, N_ITEMS, D = 2000, 20_000, 64
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # planted taste structure: users like items in their cluster
+    n_tastes = 32
+    user_taste = rng.integers(0, n_tastes, N_USERS)
+    item_taste = rng.integers(0, n_tastes, N_ITEMS)
+    taste_items = [np.where(item_taste == t)[0] for t in range(n_tastes)]
+
+    def batch(bs=256):
+        u = rng.integers(0, N_USERS, bs)
+        i = np.array([rng.choice(taste_items[user_taste[uu]]) for uu in u])
+        return jnp.asarray(u), jnp.asarray(i)
+
+    params = rs.init_two_tower(jax.random.key(0), N_USERS, N_ITEMS, d=D)
+    opt = adamw(cosine_schedule(3e-3, 20, 300), weight_decay=1e-4)
+    state = init_train_state(params, opt)
+
+    def lf(p, b):
+        return rs.two_tower_loss(p, b[0], b[1]), {}
+
+    step = make_train_step(lf, opt)
+    state, hist = train(state, step, iter(lambda: batch(), None),
+                        LoopConfig(total_steps=200, log_every=50))
+    print(f"two-tower loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}")
+
+    # ---- encode catalog + build the paper's index ------------------------
+    item_emb = rs.two_tower_item(state.params, jnp.arange(N_ITEMS))
+    item_emb = item_emb / jnp.linalg.norm(item_emb, axis=1, keepdims=True)
+    cfg = ForestConfig(n_trees=60, capacity=16, split_ratio=0.3)
+    forest = build_forest(jax.random.key(1), item_emb, cfg)
+
+    # ---- retrieve for a user batch ---------------------------------------
+    users = jnp.arange(64)
+    u_emb = rs.two_tower_user(state.params, users)
+    u_emb = u_emb / jnp.linalg.norm(u_emb, axis=1, keepdims=True)
+    _, rpf_ids = query_forest(forest, u_emb, item_emb, k=20, cfg=cfg)
+    _, bf_ids = exact_knn(u_emb, item_emb, k=20, metric="l2")
+    recall = float((np.asarray(rpf_ids)[:, :, None]
+                    == np.asarray(bf_ids)[:, None, :]).any(1).mean())
+    rcfg = cfg.resolved(N_ITEMS)
+    print(f"RPF retrieval recall@20 vs brute force: {recall:.3f} "
+          f"(touching <= {cfg.n_trees * rcfg.leaf_pad}/{N_ITEMS} items/query)")
+    # taste-consistency: retrieved items should share the user's taste
+    top = np.asarray(rpf_ids)[:, 0]
+    taste_hit = (item_taste[top] == user_taste[:64]).mean()
+    print(f"top-1 item matches user taste for {taste_hit*100:.0f}% of users")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Async, elastic checkpointing (no orbax in this environment).
+
+Format: a checkpoint directory per step containing one .npy per pytree leaf
+(leaf names are '/'-joined tree paths) + manifest.json (step, tree structure,
+shapes/dtypes, mesh metadata).  Writes go to ``<dir>.tmp`` then atomically
+rename — a crash mid-write never corrupts the latest checkpoint.
+
+Elasticity: leaves are stored as *global logical arrays*; restore device_puts
+them under ANY target mesh/sharding (tested 8->4 and 4->8 device reshapes).
+At real multi-host scale the same layout maps to per-shard files keyed by the
+shard index — single-process here, so device_get produces the global array
+directly.
+
+Async: `save(..., block=False)` snapshots to host then writes on a background
+thread; `wait()` joins. A SIGTERM handler (install_preemption_handler) flips a
+flag the train loop polls to checkpoint-and-exit cleanly (preemption safety).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_path_str(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, block: bool = True,
+             extra: Optional[dict] = None) -> str:
+        self.wait()
+        named = _flatten_with_names(tree)
+        # snapshot to host memory first (cheap for the caller; the device
+        # buffers are free to be donated to the next step immediately).
+        # non-native float dtypes (bf16/fp8) are stored as f32 — LOSSLESS
+        # upcasts — with the true dtype recorded in the manifest.
+        host = []
+        for n, x in named:
+            a = np.asarray(jax.device_get(x))
+            store = a
+            if a.dtype.kind not in "fiub" or str(a.dtype) == "bfloat16":
+                store = a.astype(np.float32)
+            host.append((n, store, str(a.dtype)))
+        treedef = jax.tree_util.tree_structure(tree)
+        path = os.path.join(self.dir, f"step_{step:010d}")
+
+        def _write():
+            tmp = path + ".tmp"
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            manifest = {
+                "step": step,
+                "leaves": [{"name": n, "shape": list(a.shape), "dtype": dt}
+                           for n, a, dt in host],
+                "treedef": str(treedef),
+                "extra": extra or {},
+            }
+            for n, a, _ in host:
+                np.save(os.path.join(tmp, n.replace("/", "__") + ".npy"), a)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(path, ignore_errors=True)
+            os.rename(tmp, path)
+            self._gc()
+
+        if block:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        return path
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``target_tree``; optional sharding
+        tree reshards onto a (possibly different) mesh — the elastic path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        import json as _json
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = _json.load(f)
+        stored_dtypes = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+        named = _flatten_with_names(target_tree)
+        arrays = []
+        for n, leaf in named:
+            a = np.load(os.path.join(path, n.replace("/", "__") + ".npy"))
+            arrays.append(jnp_dtype_cast(a, stored_dtypes.get(n)))
+        treedef = jax.tree_util.tree_structure(target_tree)
+        restored = jax.tree_util.tree_unflatten(treedef, arrays)
+        if shardings is not None:
+            restored = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), restored, shardings)
+        else:
+            restored = jax.tree.map(
+                lambda a, t: jax.device_put(a).astype(t.dtype),
+                restored, target_tree)
+        return restored, step
+
+
+def jnp_dtype_cast(a: np.ndarray, dtype_str: Optional[str]):
+    """Cast a stored array back to its original (possibly non-numpy-native)
+    dtype via jnp (bf16 was stored as lossless f32)."""
+    import jax.numpy as jnp
+    if dtype_str is None or str(a.dtype) == dtype_str:
+        return jnp.asarray(a)
+    return jnp.asarray(a).astype(jnp.dtype(dtype_str))
+
+
+_PREEMPTED = threading.Event()
+
+
+def install_preemption_handler():
+    """SIGTERM -> set flag; the train loop checkpoints and exits cleanly."""
+    def _handler(signum, frame):
+        _PREEMPTED.set()
+    signal.signal(signal.SIGTERM, _handler)
+    return _PREEMPTED
+
+
+def preempted() -> bool:
+    return _PREEMPTED.is_set()

@@ -1,0 +1,25 @@
+"""The paper's ISS-595 3-D shape descriptor experiment (Zhong 2015, §4/Fig. 5).
+
+N=250736 descriptors from 72 vehicle models, 595-D non-negative histograms,
+chi-square divergence; C=12, r=0.3, K=1; L swept; recall@1 vs exact NN;
+plus the 81x-speedup-at-96%-recall wall-clock claim (speedup_table bench).
+"""
+from repro.configs.base import ArchSpec, ShapeCell
+from repro.core.forest import ForestConfig
+
+CONFIG = ForestConfig(n_trees=160, capacity=12, split_ratio=0.3, n_proj=1)
+
+L_SWEEP = (10, 20, 40, 80, 160, 320)
+N_DB = 250_736
+N_TEST = 30_000
+DIM = 595
+METRIC = "chi2"
+N_MODELS = 72
+
+CELLS = (
+    ShapeCell("index_build", "train", batch=N_DB),
+    ShapeCell("query_batch", "serve", batch=1024),
+)
+
+ARCH = ArchSpec(arch_id="rpf-iss595", family="ann", config=CONFIG,
+                cells=CELLS, notes="paper Fig. 5 + 81x speedup reproduction")

@@ -1,0 +1,25 @@
+"""The paper's own MNIST-784 experiment config (Zhong 2015, §4 / Fig. 4).
+
+N=60000 database vectors, 784-D, unit-normalized; C=12, r=0.3, K=1;
+L swept over {1,2,5,10,20,40,80,160,320,640}; Euclidean distance; recall@1
+against exact NN. Data: deterministic MNIST-statistics generator (offline
+container — DESIGN.md §6.5).
+"""
+from repro.configs.base import ArchSpec, ShapeCell
+from repro.core.forest import ForestConfig
+
+CONFIG = ForestConfig(n_trees=80, capacity=12, split_ratio=0.3, n_proj=1)
+
+L_SWEEP = (1, 2, 5, 10, 20, 40, 80, 160, 320, 640)
+N_DB = 60_000
+N_TEST = 10_000
+DIM = 784
+METRIC = "l2"
+
+CELLS = (
+    ShapeCell("index_build", "train", batch=N_DB),
+    ShapeCell("query_batch", "serve", batch=1024),
+)
+
+ARCH = ArchSpec(arch_id="rpf-mnist784", family="ann", config=CONFIG,
+                cells=CELLS, notes="paper Fig. 4 reproduction")

@@ -1,0 +1,11 @@
+"""Core library: the paper's random-partition-forest ANN index + baselines."""
+from repro.core.forest import (Forest, ForestConfig, build_forest,
+                               gather_candidates, query_forest, traverse)
+from repro.core.knn import exact_knn
+from repro.core.search import mask_duplicates, recall_at_k, rerank_topk
+
+__all__ = [
+    "Forest", "ForestConfig", "build_forest", "gather_candidates",
+    "query_forest", "traverse", "exact_knn", "mask_duplicates",
+    "recall_at_k", "rerank_topk",
+]

@@ -1,0 +1,55 @@
+"""Early-exit wave scheduling over tree groups (beyond-paper, DESIGN.md §7).
+
+The L trees are queried in waves of ``wave`` trees; after each wave the
+current top-k distances are compared with the previous wave's — when the
+relative improvement of the mean k-th distance drops below ``tol`` the search
+stops.  Easy queries (dense neighborhoods) finish after 1-2 waves; hard ones
+use the full forest — a per-query accuracy-compute tradeoff the static-L
+paper configuration cannot express.  Trees are independent (paper §5), so any
+prefix of the forest is itself a valid (smaller) forest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import Forest, ForestConfig, gather_candidates, traverse
+from repro.core.search import mask_duplicates, rerank_topk
+from repro.core.sharded_index import merge_topk_pairs
+
+
+def _merge_dedup(d1, i1, d2, i2, k):
+    """Top-k merge that drops repeated ids (the same neighbor is usually
+    found by several waves)."""
+    d = jnp.concatenate([d1, d2], axis=1)
+    i = jnp.concatenate([i1, i2], axis=1)
+    keep = mask_duplicates(i, i >= 0)
+    d = jnp.where(keep, d, jnp.inf)
+    return merge_topk_pairs(d, jnp.where(keep, i, -1), k)
+
+
+def adaptive_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
+                   cfg: ForestConfig, wave: int = 10, tol: float = 0.01,
+                   metric: str = "l2"):
+    """Returns (dists, ids, trees_used). Host-side loop over tree waves."""
+    cfg = cfg.resolved(db.shape[0])
+    n_trees = forest.n_trees
+    best_d = jnp.full((queries.shape[0], k), jnp.inf)
+    best_i = jnp.full((queries.shape[0], k), -1, jnp.int32)
+    prev_kth = None
+    used = 0
+    for w0 in range(0, n_trees, wave):
+        sub = jax.tree.map(lambda a: a[w0:w0 + wave], forest)
+        leaves = traverse(sub, queries, cfg.max_depth)
+        ids, mask = gather_candidates(sub, leaves, cfg.leaf_pad)
+        d, i = rerank_topk(queries, ids, mask, db, k=k, metric=metric)
+        best_d, best_i = _merge_dedup(best_d, best_i, d, i, k)
+        used = min(w0 + wave, n_trees)
+        kth = float(jnp.mean(jnp.where(jnp.isfinite(best_d[:, -1]),
+                                       best_d[:, -1], 0.0)))
+        if prev_kth is not None and prev_kth > 0 \
+                and (prev_kth - kth) / prev_kth < tol:
+            break
+        prev_kth = kth
+    return best_d, best_i, used

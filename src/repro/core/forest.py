@@ -1,0 +1,352 @@
+"""Random Binary Partition Forest (the paper's core contribution), TPU-native.
+
+Paper semantics (Zhong 2015, §3):
+  * L independent random binary partition trees.
+  * Internal node test (Eq. 1):  t(x) = sum_k x[d_k] * xi_k - psi >= 0, with the
+    random index set {d_k} (size K, default K=1), random coefficients xi in [0,1],
+    and psi a *data-adaptive* threshold: a random percentile in [r, 1-r] of the
+    projected values of the points at that node.
+  * A node is split when it holds more than C (capacity) points, so leaves hold
+    between ~r*C and C points and the partition adapts to data density.
+  * Query: descend each tree (one coordinate gather + one compare per level, no
+    backtracking), union the L leaf point-sets, rerank exactly.
+
+TPU-native re-expression (see DESIGN.md §2):
+  * level-synchronous build — all overflowing nodes of a depth split together,
+    per-node percentile thresholds computed with one segmented sort per level;
+  * flat SoA tree storage (compact node ids, child_base pointers);
+  * CSR leaf storage (perm + offset/count) for O(1) candidate slicing;
+  * batched query traversal: a fori_loop of gather+compare over a query batch.
+
+Everything is jit-able with static shapes; `vmap` over trees gives the forest.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_mod
+
+
+class ForestConfig(NamedTuple):
+    """Hyper-parameters of the random partition forest (paper §3.4)."""
+
+    n_trees: int = 80          # L
+    capacity: int = 12         # C: max points per leaf
+    split_ratio: float = 0.3   # r in (0, 0.5]
+    n_proj: int = 1            # K: coordinates per random test (paper default 1)
+    max_depth: int = 0         # 0 -> auto bound from N, C, r
+    max_nodes: int = 0         # 0 -> auto bound
+    leaf_pad: int = 0          # padded candidate slots per (query, tree); 0 -> C
+
+    def resolved(self, n_points: int) -> "ForestConfig":
+        r = float(self.split_ratio)
+        rc = max(r * self.capacity, 1.0)
+        depth = self.max_depth
+        if depth <= 0:
+            # depth budget: Eq. 1 guarantees each split keeps <= (1-r) of the
+            # points on DISTINCT values, but tie-escape splits on heavily
+            # tied data (sparse histograms, raw pixels) can be as uneven as
+            # ~85/15 — budget for the worse of the two (traversal is one
+            # compare per level, so a generous budget costs little)
+            shrink = max(1.0 - r, 0.85)
+            depth = int(math.ceil(math.log(max(n_points / rc, 2.0))
+                                  / math.log(1.0 / shrink))) + 6
+        nodes = self.max_nodes
+        if nodes <= 0:
+            nodes = int(4.0 * n_points / rc) + 64
+        pad = self.leaf_pad if self.leaf_pad > 0 else self.capacity
+        return self._replace(max_depth=depth, max_nodes=nodes, leaf_pad=pad)
+
+
+class Forest(NamedTuple):
+    """Flat SoA forest. All arrays carry a leading (L,) tree axis.
+
+    A node is internal iff child_base >= 0; its children are child_base and
+    child_base + 1.  Leaf points of node ``n`` of tree ``l`` are
+    ``perm[l, leaf_offset[l, n] : leaf_offset[l, n] + leaf_count[l, n]]``.
+    """
+
+    proj_idx: jax.Array    # (L, max_nodes, K) int32  random coordinate indices
+    proj_coef: jax.Array   # (L, max_nodes, K) f32    random coefficients xi
+    thresh: jax.Array      # (L, max_nodes)    f32    psi
+    child_base: jax.Array  # (L, max_nodes)    int32  left-child id, -1 for leaf
+    perm: jax.Array        # (L, N)            int32  point ids sorted by leaf
+    leaf_offset: jax.Array  # (L, max_nodes)   int32
+    leaf_count: jax.Array   # (L, max_nodes)   int32
+    n_nodes: jax.Array      # (L,)             int32  allocated node count
+
+    @property
+    def n_trees(self) -> int:
+        return self.thresh.shape[0]
+
+    @property
+    def max_nodes(self) -> int:
+        return self.thresh.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# build (level-synchronous, single tree; vmapped for the forest)
+# ---------------------------------------------------------------------------
+
+
+def _project(x: jax.Array, idx: jax.Array, coef: jax.Array) -> jax.Array:
+    """y_i = sum_k x[i, idx[i, k]] * coef[i, k]  with per-row index sets."""
+    gathered = jnp.take_along_axis(x, idx, axis=1)  # (N, K)
+    return jnp.sum(gathered * coef, axis=1)
+
+
+def _build_one_tree(key: jax.Array, x: jax.Array, cfg: ForestConfig) -> Forest:
+    """Build a single tree over points ``x`` (N, d). Returns Forest w/o L axis."""
+    n, d = x.shape
+    m = cfg.max_nodes
+    k_proj = cfg.n_proj
+    r = cfg.split_ratio
+
+    def level(carry, level_key):
+        assign, proj_idx, proj_coef, thresh, child_base, n_nodes = carry
+        k_feat, k_coef, k_quant = jax.random.split(level_key, 3)
+
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), assign,
+                                     num_segments=m)
+        is_leaf = child_base < 0
+        node_ids = jnp.arange(m, dtype=jnp.int32)
+        alive = node_ids < n_nodes
+        overfull = is_leaf & alive & (counts > cfg.capacity)
+
+        # --- candidate random tests for every slot (Eq. 1) ----------------
+        cand_idx = jax.random.randint(k_feat, (m, k_proj), 0, d,
+                                      dtype=jnp.int32)
+        cand_coef = jax.random.uniform(k_coef, (m, k_proj), jnp.float32)
+        if k_proj == 1:
+            cand_coef = jnp.ones_like(cand_coef)  # scale-invariant for K=1
+        test_idx = jnp.where(overfull[:, None], cand_idx, proj_idx)
+        test_coef = jnp.where(overfull[:, None], cand_coef, proj_coef)
+
+        # --- per-point projections under the candidate tests --------------
+        y = _project(x, test_idx[assign], test_coef[assign])  # (N,)
+
+        # --- per-node value range + random percentile threshold -----------
+        order = jnp.lexsort((y, assign))
+        assign_sorted = assign[order]
+        y_sorted = y[order]
+        start = jnp.searchsorted(assign_sorted, node_ids, side="left")
+        last = jnp.clip(start + counts - 1, 0, n - 1)
+        lo = y_sorted[jnp.clip(start, 0, n - 1)]
+        hi = y_sorted[last]
+        # ties guard: a constant projection can't split — the node stays open
+        # and redraws a fresh random coordinate at the next level (the
+        # paper's incremental builder has the same retry implicitly)
+        degenerate = ~(hi > lo)
+        splitting = overfull & ~degenerate
+
+        # --- allocate children compactly -----------------------------------
+        n_split = jnp.sum(splitting.astype(jnp.int32))
+        rank = jnp.cumsum(splitting.astype(jnp.int32)) - 1
+        new_child_base = jnp.where(splitting, n_nodes + 2 * rank, child_base)
+        budget_overflow = (n_nodes + 2 * n_split) > m
+        new_child_base = jnp.where(budget_overflow, child_base,
+                                   new_child_base)
+        splitting = jnp.where(budget_overflow, jnp.zeros_like(splitting),
+                              splitting)
+        new_n_nodes = jnp.where(budget_overflow, n_nodes,
+                                n_nodes + 2 * n_split)
+
+        # paper Eq. 1: psi is a uniform random VALUE in the interval between
+        # the r and (1-r) percentile points of the sorted projections,
+        # psi ~ U[y_{r n}, y_{(1-r) n}]
+        u = jax.random.uniform(k_quant, (m,))
+        last_idx = jnp.maximum(start, start + counts - 1)
+        pos_a = jnp.clip(start + jnp.floor(
+            r * counts.astype(jnp.float32)).astype(jnp.int32), start,
+            last_idx)
+        pos_b = jnp.clip(start + jnp.floor(
+            (1.0 - r) * counts.astype(jnp.float32)).astype(jnp.int32), start,
+            last_idx)
+        a = y_sorted[jnp.clip(pos_a, 0, n - 1)]
+        b_ = y_sorted[jnp.clip(pos_b, 0, n - 1)]
+        cand_thresh = a + u * (b_ - a)
+        # tie escape: on heavily-tied data (sparse histograms, raw MNIST
+        # pixels) the percentile interval collapses onto the min value and
+        # the left child (y < psi) would be empty; fall back to a uniform
+        # value split over the node's full (lo, hi] range — progress is
+        # guaranteed since lo < hi for splitting nodes
+        cand_thresh = jnp.where(
+            cand_thresh > lo, cand_thresh,
+            lo + jnp.maximum(u, 0.05) * (hi - lo))
+
+        proj_idx = jnp.where(splitting[:, None], cand_idx, proj_idx)
+        proj_coef = jnp.where(splitting[:, None], cand_coef, proj_coef)
+        thresh = jnp.where(splitting, cand_thresh, thresh)
+
+        # --- reassign points of splitting nodes ---------------------------
+        node_splits = splitting[assign]
+        go_right = y >= thresh[assign]
+        new_assign = jnp.where(
+            node_splits,
+            new_child_base[assign] + go_right.astype(jnp.int32),
+            assign,
+        )
+        return (new_assign, proj_idx, proj_coef, thresh, new_child_base,
+                new_n_nodes), n_split
+
+    init = (
+        jnp.zeros((n,), jnp.int32),                       # assign: all at root
+        jnp.zeros((m, k_proj), jnp.int32),                # proj_idx
+        jnp.ones((m, k_proj), jnp.float32),               # proj_coef
+        jnp.zeros((m,), jnp.float32),                     # thresh
+        jnp.full((m,), -1, jnp.int32),                    # child_base
+        jnp.asarray(1, jnp.int32),                        # n_nodes (root)
+    )
+    level_keys = jax.random.split(key, cfg.max_depth)
+    (assign, proj_idx, proj_coef, thresh, child_base, n_nodes), _ = jax.lax.scan(
+        level, init, level_keys)
+
+    # --- CSR leaf storage -------------------------------------------------
+    order = jnp.argsort(assign)
+    assign_sorted = assign[order]
+    node_ids = jnp.arange(m, dtype=jnp.int32)
+    leaf_offset = jnp.searchsorted(assign_sorted, node_ids, side="left")
+    leaf_end = jnp.searchsorted(assign_sorted, node_ids, side="right")
+    leaf_count = (leaf_end - leaf_offset).astype(jnp.int32)
+    leaf_count = jnp.where(child_base < 0, leaf_count, 0)
+
+    return Forest(
+        proj_idx=proj_idx,
+        proj_coef=proj_coef,
+        thresh=thresh,
+        child_base=child_base,
+        perm=order.astype(jnp.int32),
+        leaf_offset=leaf_offset.astype(jnp.int32),
+        leaf_count=leaf_count,
+        n_nodes=n_nodes,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tree_chunk"))
+def build_forest(key: jax.Array, x: jax.Array, cfg: ForestConfig,
+                 tree_chunk: int = 0) -> Forest:
+    """Build the L-tree forest (vmap over trees; they are fully independent).
+
+    ``tree_chunk`` > 0 builds trees in chunks of that size via lax.map to bound
+    peak memory for very large L (the paper sweeps L up to 640).
+    """
+    cfg = cfg.resolved(x.shape[0])
+    keys = jax.random.split(key, cfg.n_trees)
+    build = functools.partial(_build_one_tree, x=x, cfg=cfg)
+    if tree_chunk and cfg.n_trees > tree_chunk:
+        return jax.lax.map(lambda k: build(k), keys, batch_size=tree_chunk)
+    return jax.vmap(lambda k: build(k))(keys)
+
+
+# ---------------------------------------------------------------------------
+# query: batched traversal + candidate retrieval
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def traverse(forest: Forest, queries: jax.Array, max_depth: int) -> jax.Array:
+    """Map each query to its leaf node in every tree.
+
+    queries: (B, d) -> leaf ids (L, B). One gather + compare per level, exactly
+    the paper's "one random coordinate access ... one float comparison per node
+    visited".
+    """
+
+    def one_tree(tree: Forest):
+        def step(_, node):
+            idx = tree.proj_idx[node]          # (B, K)
+            coef = tree.proj_coef[node]        # (B, K)
+            y = jnp.sum(jnp.take_along_axis(queries, idx, axis=1) * coef, axis=1)
+            go_right = y >= tree.thresh[node]
+            child = tree.child_base[node] + go_right.astype(jnp.int32)
+            return jnp.where(tree.child_base[node] < 0, node, child)
+
+        node0 = jnp.zeros((queries.shape[0],), jnp.int32)
+        return jax.lax.fori_loop(0, max_depth, step, node0)
+
+    return jax.vmap(one_tree)(forest)
+
+
+@functools.partial(jax.jit, static_argnames=("pad",))
+def gather_candidates(forest: Forest, leaves: jax.Array, pad: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Retrieve the (padded) union of leaf point-sets.
+
+    leaves: (L, B) leaf node ids -> (B, L*pad) candidate ids, (B, L*pad) bool mask.
+    Invalid slots hold id 0 and mask False.
+    """
+    L, B = leaves.shape
+    slot = jnp.arange(pad, dtype=jnp.int32)
+
+    def one_tree(tree: Forest, leaf: jax.Array):
+        off = tree.leaf_offset[leaf]            # (B,)
+        cnt = tree.leaf_count[leaf]             # (B,)
+        pos = off[:, None] + slot[None, :]      # (B, pad)
+        mask = slot[None, :] < cnt[:, None]
+        n = tree.perm.shape[0]
+        ids = tree.perm[jnp.clip(pos, 0, n - 1)]
+        return jnp.where(mask, ids, 0), mask
+
+    ids, mask = jax.vmap(one_tree)(forest, leaves)       # (L, B, pad)
+    ids = jnp.transpose(ids, (1, 0, 2)).reshape(B, L * pad)
+    mask = jnp.transpose(mask, (1, 0, 2)).reshape(B, L * pad)
+    return ids, mask
+
+
+def query_forest(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
+                 cfg: ForestConfig, metric: str = "l2",
+                 dedup: bool = True) -> tuple[jax.Array, jax.Array]:
+    """End-to-end query: traverse -> retrieve -> rerank -> top-k.
+
+    Returns (dists (B, k), ids (B, k)); invalid slots have id -1 and dist +inf.
+    """
+    cfg = cfg.resolved(db.shape[0])
+    leaves = traverse(forest, queries, cfg.max_depth)
+    cand_ids, mask = gather_candidates(forest, leaves, cfg.leaf_pad)
+    from repro.core.search import rerank_topk  # local import to avoid cycle
+
+    return rerank_topk(queries, cand_ids, mask, db, k=k, metric=metric,
+                       dedup=dedup)
+
+
+# ---------------------------------------------------------------------------
+# structural statistics (paper §3.4 discussion; used in tests + benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def forest_stats(forest: Forest, cfg: ForestConfig, n_points: int) -> dict:
+    cfg = cfg.resolved(n_points)
+    child = np.asarray(forest.child_base)
+    count = np.asarray(forest.leaf_count)
+    n_nodes = np.asarray(forest.n_nodes)
+    stats = []
+    for l in range(child.shape[0]):
+        alive = np.arange(child.shape[1]) < n_nodes[l]
+        leaf = (child[l] < 0) & alive
+        occ = count[l][leaf & (count[l] > 0)]
+        # depth per node via forward sweep
+        depth = np.full(child.shape[1], -1, np.int32)
+        depth[0] = 0
+        for i in range(int(n_nodes[l])):
+            if child[l, i] >= 0:
+                depth[child[l, i]] = depth[i] + 1
+                depth[child[l, i] + 1] = depth[i] + 1
+        leaf_depths = depth[leaf & (count[l] > 0)]
+        stats.append(dict(
+            n_nodes=int(n_nodes[l]),
+            n_leaves=int(leaf.sum()),
+            occ_mean=float(occ.mean()) if occ.size else 0.0,
+            occ_max=int(occ.max()) if occ.size else 0,
+            overflow_points=int(occ[occ > cfg.capacity].sum()) if occ.size else 0,
+            depth_mean=float(leaf_depths.mean()) if leaf_depths.size else 0.0,
+            depth_max=int(leaf_depths.max()) if leaf_depths.size else 0,
+        ))
+    agg = {k: float(np.mean([s[k] for s in stats])) for k in stats[0]}
+    agg["per_tree"] = stats
+    return agg

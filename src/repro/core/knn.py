@@ -1,0 +1,40 @@
+"""Exact (brute-force) k-NN — the paper's ground-truth oracle ("ENN")."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as dist_mod
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "db_chunk"))
+def exact_knn(queries: jax.Array, db: jax.Array, k: int, metric: str = "l2",
+              db_chunk: int = 0) -> tuple[jax.Array, jax.Array]:
+    """(B, d) x (N, d) -> exact top-k (dists, ids). Streams DB chunks."""
+    b = queries.shape[0]
+    n = db.shape[0]
+    pairwise = dist_mod.PAIRWISE[metric]
+    if not db_chunk or n <= db_chunk:
+        d = pairwise(queries, db)
+        neg, ids = jax.lax.top_k(-d, k)
+        return -neg, ids
+
+    assert n % db_chunk == 0, "pad the DB to a multiple of db_chunk"
+    n_blk = n // db_chunk
+
+    def body(carry, blk):
+        best_d, best_i = carry
+        db_blk = jax.lax.dynamic_slice_in_dim(db, blk * db_chunk, db_chunk, 0)
+        d = pairwise(queries, db_blk)
+        ids = blk * db_chunk + jnp.arange(db_chunk, dtype=jnp.int32)[None, :]
+        all_d = jnp.concatenate([best_d, d], axis=1)
+        all_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, d.shape)], axis=1)
+        neg, pos = jax.lax.top_k(-all_d, k)
+        return (-neg, jnp.take_along_axis(all_i, pos, axis=1)), None
+
+    init = (jnp.full((b, k), jnp.inf, queries.dtype),
+            jnp.full((b, k), -1, jnp.int32))
+    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_blk))
+    return best_d, best_i

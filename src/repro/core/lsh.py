@@ -1,0 +1,88 @@
+"""Locality-Sensitive Hashing baseline (the paper's comparison system, §2/§4).
+
+E2LSH-style p-stable hashing for L2:  h(x) = floor((a.x + b) / w), with K
+concatenated hashes per table and L tables.  The paper compares against a
+*cascade* of LSH structures at increasing radii (0.4/0.53/0.63/0.88 on MNIST):
+a query probes radii in order until enough candidates are found.  Buckets are
+host-side hash maps (as in the original Andoni E2LSH software); the distance
+rerank reuses the same JAX/Pallas rerank stage as the forest for a fair
+accuracy-vs-cost comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LSHConfig:
+    n_tables: int = 10          # L
+    n_bits: int = 12            # K hashes concatenated per table
+    width: float = 0.5          # w (bucket width, scales with target radius)
+    seed: int = 0
+
+
+class LSHIndex:
+    """One radius level: L tables of K p-stable hashes each."""
+
+    def __init__(self, x: np.ndarray, cfg: LSHConfig):
+        self.cfg = cfg
+        n, d = x.shape
+        rng = np.random.default_rng(cfg.seed)
+        # (L, K, d) gaussian projections; (L, K) uniform offsets
+        self.a = rng.normal(size=(cfg.n_tables, cfg.n_bits, d)).astype(np.float32)
+        self.b = rng.uniform(0.0, cfg.width,
+                             size=(cfg.n_tables, cfg.n_bits)).astype(np.float32)
+        keys = self._hash(x)                    # (L, N, K) int32
+        self.tables: list[dict] = []
+        for l in range(cfg.n_tables):
+            table: dict = {}
+            for i, key in enumerate(map(tuple, keys[l])):
+                table.setdefault(key, []).append(i)
+            self.tables.append(table)
+
+    def _hash(self, x: np.ndarray) -> np.ndarray:
+        # (L, n, K) = floor((x @ a^T + b) / w)
+        proj = np.einsum("nd,lkd->lnk", x, self.a)
+        return np.floor((proj + self.b[:, None, :]) / self.cfg.width).astype(
+            np.int32)
+
+    def candidates(self, q: np.ndarray) -> set:
+        keys = self._hash(q[None, :])[:, 0, :]  # (L, K)
+        out: set = set()
+        for l in range(self.cfg.n_tables):
+            out.update(self.tables[l].get(tuple(keys[l]), ()))
+        return out
+
+
+class CascadedLSH:
+    """Multi-radius cascade (paper §2: 'a cascade of LSH tables ... searched in
+    order of decreasing resolution, until either a match is found or all hash
+    tables have been searched')."""
+
+    def __init__(self, x: np.ndarray, radii: list[float], n_tables: int = 10,
+                 n_bits: int = 12, width_scale: float = 1.0, seed: int = 0):
+        self.x = np.asarray(x, np.float32)
+        self.levels = [
+            LSHIndex(self.x, LSHConfig(n_tables=n_tables, n_bits=n_bits,
+                                       width=width_scale * r, seed=seed + 31 * i))
+            for i, r in enumerate(radii)
+        ]
+
+    def retrieve(self, q: np.ndarray, min_candidates: int = 1) -> np.ndarray:
+        cand: set = set()
+        for level in self.levels:               # increasing radius
+            cand.update(level.candidates(q))
+            if len(cand) >= min_candidates:
+                break
+        return np.fromiter(cand, dtype=np.int64) if cand else np.empty(0, np.int64)
+
+    def query(self, q: np.ndarray, k: int, min_candidates: int = 1
+              ) -> tuple[np.ndarray, np.ndarray, int]:
+        cand = self.retrieve(q, min_candidates)
+        if cand.size == 0:
+            return np.full(k, np.inf), np.full(k, -1), 0
+        d = np.sum((self.x[cand] - q[None, :]) ** 2, axis=1)
+        top = np.argsort(d)[:k]
+        return d[top], cand[top], cand.size

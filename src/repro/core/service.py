@@ -1,0 +1,87 @@
+"""ANN index service: lifecycle + the paper's incremental-update path (§5).
+
+The paper: "upon the query of a new data point, we can easily update the
+indexer by saving the novel point in the arrived leaf node and split the node
+when necessary."  Here: inserts append to a host-side overflow buffer mapped
+by (tree, leaf); queries probe the static CSR AND the overflow; a background
+rebuild folds the overflow into a fresh forest once it exceeds
+``rebuild_frac`` of the DB (amortized O(log N) per insert).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import (Forest, ForestConfig, build_forest,
+                               gather_candidates, traverse)
+from repro.core.search import rerank_topk
+
+
+class AnnService:
+    def __init__(self, db: np.ndarray, cfg: ForestConfig, metric: str = "l2",
+                 seed: int = 0, rebuild_frac: float = 0.1):
+        self.metric = metric
+        self.cfg = cfg
+        self.seed = seed
+        self.rebuild_frac = rebuild_frac
+        self._lock = threading.Lock()
+        self.db = np.asarray(db, np.float32)
+        self._build(self.db)
+
+    def _build(self, db: np.ndarray):
+        self.rcfg = self.cfg.resolved(db.shape[0])
+        self.forest = build_forest(jax.random.key(self.seed),
+                                   jnp.asarray(db), self.cfg)
+        self.db_dev = jnp.asarray(db)
+        self.overflow_x: list[np.ndarray] = []   # appended points
+        # overflow ids start after the static db
+        self.n_static = db.shape[0]
+
+    # ------------------------------------------------------------------ api
+    def insert(self, x: np.ndarray) -> int:
+        """Paper §5 incremental update. Returns the new point's id."""
+        with self._lock:
+            self.overflow_x.append(np.asarray(x, np.float32))
+            new_id = self.n_static + len(self.overflow_x) - 1
+            if len(self.overflow_x) >= self.rebuild_frac * self.n_static:
+                self._rebuild_locked()
+            return new_id
+
+    def _rebuild_locked(self):
+        db = np.concatenate([self.db] + [o[None] for o in self.overflow_x])
+        self.db = db
+        self._build(db)
+
+    def query(self, q: np.ndarray, k: int = 10
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """q (B, d) -> (dists (B,k), ids (B,k)); probes index + overflow."""
+        q = jnp.asarray(np.atleast_2d(q).astype(np.float32))
+        with self._lock:
+            leaves = traverse(self.forest, q, self.rcfg.max_depth)
+            ids, mask = gather_candidates(self.forest, leaves,
+                                          self.rcfg.leaf_pad)
+            d, i = rerank_topk(q, ids, mask, self.db_dev, k=k,
+                               metric=self.metric)
+            if self.overflow_x:
+                # brute-force the (small) overflow and merge
+                ox = jnp.asarray(np.stack(self.overflow_x))
+                from repro.core.distances import PAIRWISE
+                od = PAIRWISE[self.metric](q, ox)
+                oi = self.n_static + jnp.arange(ox.shape[0])[None, :]
+                cat_d = jnp.concatenate([d, od], axis=1)
+                cat_i = jnp.concatenate(
+                    [i, jnp.broadcast_to(oi, od.shape)], axis=1)
+                neg, pos = jax.lax.top_k(-jnp.where(cat_i >= 0, cat_d,
+                                                    jnp.inf), k)
+                d = -neg
+                i = jnp.take_along_axis(cat_i, pos, axis=1)
+        return np.asarray(d), np.asarray(i)
+
+    def stats(self) -> dict:
+        return {"n_static": self.n_static,
+                "n_overflow": len(self.overflow_x),
+                "n_trees": self.cfg.n_trees}

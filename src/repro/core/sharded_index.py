@@ -1,0 +1,139 @@
+"""Distributed random-partition-forest index (multi-pod shard_map runtime).
+
+Sharding model (DESIGN.md §3.1):
+  * DB rows sharded over the ``db_axes`` mesh axes (e.g. ("pod", "data")) —
+    each DB shard builds forests over *its own rows only*, so index build needs
+    ZERO communication (the paper's 'easily parallelizable and distributable'
+    property, made concrete).
+  * Within a DB shard, the L trees are sharded over ``tree_axis`` ("model"):
+    each cell owns L / |model| trees.
+  * Query: the query batch is replicated; every (db, tree) cell traverses its
+    trees, reranks against its local DB rows, and emits a local top-k of
+    (distance, global-id) pairs; a global top-k merge all-gathers the tiny
+    (B, k) payloads over model then db axes — O(cells * k * 8B) bytes/query,
+    independent of DB size.
+
+Fault tolerance: a cell's index state is a pure function of (db shard, rng
+key), so recovery from a lost node = rebuild of one shard, no global state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.forest import (Forest, ForestConfig, build_forest,
+                               gather_candidates, traverse)
+from repro.kernels import ops
+
+
+class ShardedIndex(NamedTuple):
+    """Forest pytree with two leading sharded axes: (db_shards, tree_shards)."""
+
+    forest: Forest      # arrays: (D, T, L_local, ...), P(db_axes, tree_axis)
+    n_local: int        # rows per DB shard (static)
+    cfg: ForestConfig   # resolved for n_local
+
+    @property
+    def trees_per_cell(self) -> int:
+        return self.forest.thresh.shape[2]
+
+
+def _db_spec(db_axes: Sequence[str]) -> P:
+    return P(tuple(db_axes))
+
+
+def build_sharded_index(key: jax.Array, db: jax.Array, cfg: ForestConfig,
+                        mesh: Mesh, db_axes: Sequence[str] = ("data",),
+                        tree_axis: str = "model") -> ShardedIndex:
+    """db: (N, d) sharded over rows by ``db_axes``. Returns a ShardedIndex."""
+    d_shards = 1
+    for a in db_axes:
+        d_shards *= mesh.shape[a]
+    t_shards = mesh.shape[tree_axis]
+    n_local = db.shape[0] // d_shards
+    l_local = max(1, cfg.n_trees // t_shards)
+    local_cfg = cfg._replace(n_trees=l_local).resolved(n_local)
+
+    def _build(db_local):
+        db_local = db_local.reshape(n_local, db.shape[1])
+        di = jax.lax.axis_index(tuple(db_axes))
+        ti = jax.lax.axis_index(tree_axis)
+        k = jax.random.fold_in(jax.random.fold_in(key, di), ti)
+        forest = build_forest(k, db_local, local_cfg)
+        # add the (db, tree) leading shard axes for the out_specs
+        return jax.tree.map(lambda x: x[None, None], forest)
+
+    spec = P(tuple(db_axes), tree_axis)
+    forest = jax.shard_map(
+        _build, mesh=mesh,
+        in_specs=(_db_spec(db_axes),),
+        out_specs=jax.tree.map(lambda _: spec, Forest(
+            proj_idx=0, proj_coef=0, thresh=0, child_base=0, perm=0,
+            leaf_offset=0, leaf_count=0, n_nodes=0)),
+        check_vma=False,
+    )(db)
+    return ShardedIndex(forest=forest, n_local=n_local, cfg=local_cfg)
+
+
+def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
+                  db_axes: Sequence[str] = ("data",), tree_axis: str = "model",
+                  k: int = 10, metric: str = "l2", dedup: bool = True,
+                  kernel_mode: str = "auto"):
+    """Build the jit-able sharded query step: (index, queries, db) -> top-k.
+
+    The returned function is the unit the launcher lowers/compiles for the
+    dry-run, and the serving hot loop.
+    """
+    cfg = index_cfg.resolved(n_local)
+    all_axes = tuple(db_axes) + (tree_axis,)
+
+    def _query(forest_cell: Forest, queries: jax.Array, db_local: jax.Array):
+        forest_cell = jax.tree.map(lambda x: x[0, 0], forest_cell)
+        db_local = db_local.reshape(n_local, -1)
+        # 1) descend the local trees (paper: one gather + compare per level)
+        leaves = traverse(forest_cell, queries, cfg.max_depth)
+        cand_ids, mask = gather_candidates(forest_cell, leaves, cfg.leaf_pad)
+        if dedup:
+            from repro.core.search import mask_duplicates
+            mask = mask_duplicates(cand_ids, mask)
+        # 2) exact rerank against local DB rows (fused kernel on TPU)
+        cand = db_local[jnp.where(mask, cand_ids, 0)]
+        loc_d, loc_i = ops.rerank_candidates(
+            queries, cand, cand_ids, mask, k=k, metric=metric,
+            mode=kernel_mode)
+        # 3) globalize ids, then tiny all-gather merge over tree + db axes
+        di = jax.lax.axis_index(tuple(db_axes))
+        glob_i = jnp.where(loc_i >= 0, loc_i + di * n_local, -1)
+        gd = jax.lax.all_gather(loc_d, all_axes, axis=1, tiled=True)
+        gi = jax.lax.all_gather(glob_i, all_axes, axis=1, tiled=True)
+        neg, pos = jax.lax.top_k(-jnp.where(gi >= 0, gd, jnp.inf), k)
+        return -neg, jnp.take_along_axis(gi, pos, axis=1)
+
+    spec = P(tuple(db_axes), tree_axis)
+    fwd = jax.shard_map(
+        _query, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: spec, Forest(
+            proj_idx=0, proj_coef=0, thresh=0, child_base=0, perm=0,
+            leaf_offset=0, leaf_count=0, n_nodes=0)),
+            P(), _db_spec(db_axes)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def query_step(index: ShardedIndex, queries: jax.Array, db: jax.Array):
+        return fwd(index.forest, queries, db)
+
+    return query_step
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk_pairs(dists: jax.Array, ids: jax.Array, k: int):
+    """Associative (B, m*k)->(B, k) merge used by multi-level reductions."""
+    neg, pos = jax.lax.top_k(-jnp.where(ids >= 0, dists, jnp.inf), k)
+    return -neg, jnp.take_along_axis(ids, pos, axis=1)

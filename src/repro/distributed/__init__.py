@@ -1,0 +1,16 @@
+"""Distribution utilities (re-exports; implementations live with their users).
+
+  * meshes:               launch/mesh.py  (make_production_mesh, dp_axes)
+  * logical->mesh axes:   models/layers.Axes + per-model *_specs functions
+  * collectives:          core/sharded_index (global top-k merge),
+                          models/moe.moe_fwd_sharded (expert-parallel psum),
+                          models/mace._a_features_sharded (gather/scatter MP)
+  * gradient compression: train/grad_compress (int8 error-feedback psum)
+  * elastic resharding:   checkpoint/checkpointer.Checkpointer.restore
+"""
+from repro.core.sharded_index import merge_topk_pairs
+from repro.launch.mesh import dp_axes, make_production_mesh, make_test_mesh
+from repro.models.layers import Axes
+
+__all__ = ["Axes", "dp_axes", "make_production_mesh", "make_test_mesh",
+           "merge_topk_pairs"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots + jnp oracles.
+
+Kernels (each <name>.py has the pl.pallas_call; ref.py has the oracle):
+  * matmul_topk    -- fused MXU scoring (l2/dot) + streaming top-k
+  * chi2_topk      -- fused chi-square scoring + streaming top-k
+  * distance_topk  -- fused per-query candidate rerank + top-k
+  * embedding_bag  -- scalar-prefetch gather + weighted segment-sum
+  * forest_traverse-- batched partition-tree descent
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

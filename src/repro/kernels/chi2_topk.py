@@ -1,0 +1,88 @@
+"""Fused chi-square scoring + streaming top-k (the paper's ISS-595 metric).
+
+chi2(q, c) = sum_k (q_k - c_k)^2 / (q_k + c_k)  — elementwise (VPU-bound), so
+unlike the L2 kernel there is no MXU contraction; the win is fusing the
+d-reduction with the top-k so the (B, N) score matrix never round-trips HBM,
+and streaming the feature dimension in chunks to bound the (bq, bn, dc)
+broadcast intermediate in VMEM.
+
+VMEM (f32, defaults bq=64, bn=256, dc=128): 64*256*128*4 = 8 MB intermediate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import POS_INF, merge_topk, select_topk_block
+
+EPS = 1e-12
+
+
+def _kernel(q_ref, db_ref, out_d_ref, out_i_ref, *, k: int, bn: int,
+            n_total: int, dc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, POS_INF)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)          # (bq, d)
+    db = db_ref[...].astype(jnp.float32)        # (bn, d)
+    d = q.shape[1]
+    n_chunks = max(1, d // dc)
+    scores = jnp.zeros((q.shape[0], db.shape[0]), jnp.float32)
+    for c in range(n_chunks):                   # static unroll over d-chunks
+        lo, hi = c * dc, min((c + 1) * dc, d)
+        qc = q[:, None, lo:hi]
+        cc = db[None, :, lo:hi]
+        scores = scores + jnp.sum((qc - cc) ** 2 / (qc + cc + EPS), axis=-1)
+
+    ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(ids < n_total, scores, POS_INF)
+    bd, bi = select_topk_block(scores, ids, k)
+    md, mi = merge_topk(out_d_ref[...], out_i_ref[...], bd, bi, k)
+    out_d_ref[...] = md
+    out_i_ref[...] = mi
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "dc",
+                                             "interpret"))
+def chi2_topk(q: jax.Array, db: jax.Array, k: int, bq: int = 64, bn: int = 256,
+              dc: int = 128, interpret: bool = False
+              ) -> tuple[jax.Array, jax.Array]:
+    """(B, d) x (N, d) -> chi2 top-k (dists (B,k) f32, ids (B,k) int32)."""
+    b, d = q.shape
+    n, _ = db.shape
+    bq = min(bq, max(8, b))
+    bn = min(bn, n)
+    b_pad = -b % bq
+    n_pad = -n % bn
+    qp = jnp.pad(q, ((0, b_pad), (0, 0)))
+    dbp = jnp.pad(db, ((0, n_pad), (0, 0)))
+
+    grid = ((b + b_pad) // bq, (n + n_pad) // bn)
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_kernel, k=k, bn=bn, n_total=n, dc=dc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, dbp)
+    return out_d[:b], out_i[:b]

@@ -1,0 +1,45 @@
+"""Shared in-kernel helpers for the Pallas kernels.
+
+Streaming top-k: TPU Mosaic does not support lax.top_k/sort inside kernels, so
+we use a k-pass min-selection built only from elementwise ops, reductions and
+iota — all Mosaic-lowerable. Cost O(k * m) per (rows, m) block, negligible next
+to the O(m * d) distance math for the k (<= ~32) this library targets.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+POS_INF = float("inf")
+
+
+def select_topk_block(dists: jnp.ndarray, ids: jnp.ndarray, k: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row k smallest of a (rows, m) block. Returns ((rows,k), (rows,k)).
+
+    Pure elementwise/reduction ops (Mosaic-safe): k passes of
+    min -> first-occurrence one-hot -> masked extract -> invalidate.
+    """
+    rows, m = dists.shape
+    col = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None, :], (rows, m))
+    work = dists
+    out_d, out_i = [], []
+    for _ in range(k):
+        mn = jnp.min(work, axis=1, keepdims=True)             # (rows, 1)
+        hit = work == mn                                       # ties -> many
+        # first occurrence: smallest column index among hits
+        first_col = jnp.min(jnp.where(hit, col, m), axis=1, keepdims=True)
+        onehot = col == first_col                              # (rows, m)
+        out_d.append(mn[:, 0])
+        out_i.append(jnp.sum(jnp.where(onehot, ids, 0), axis=1))
+        work = jnp.where(onehot, POS_INF, work)
+    return jnp.stack(out_d, axis=1), jnp.stack(out_i, axis=1).astype(jnp.int32)
+
+
+def merge_topk(cur_d: jnp.ndarray, cur_i: jnp.ndarray,
+               new_d: jnp.ndarray, new_i: jnp.ndarray, k: int
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge two (rows, k) sorted-or-not candidate lists into the k best."""
+    d = jnp.concatenate([cur_d, new_d], axis=1)
+    i = jnp.concatenate([cur_i, new_i], axis=1)
+    return select_topk_block(d, i, k)

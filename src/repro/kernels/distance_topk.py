@@ -1,0 +1,94 @@
+"""Fused candidate rerank: per-query gathered candidates -> distance -> top-k.
+
+This is the forest-query hot path: each query carries its own (M = L*C)-wide
+padded candidate matrix (gathered outside the kernel — XLA's gather is the
+fastest HBM row-collector; see DESIGN.md §2).  The kernel streams candidate
+blocks, computes masked L2/chi2 distances and maintains the running top-k in
+VMEM, so neither the (B, M) distance matrix nor the merged candidate list ever
+round-trips HBM.
+
+Layout: cand (B, M, d) f32, ids/mask (B, M).  Grid = (B/bq, M/bm); blocks
+(bq, bm, d) are the streamed operand.
+
+VMEM (defaults bq=8, bm=64, d<=1024 f32): 8*64*1024*4 = 2 MB cand block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import POS_INF, merge_topk, select_topk_block
+
+EPS = 1e-12
+
+
+def _kernel(q_ref, cand_ref, ids_ref, mask_ref, out_d_ref, out_i_ref, *,
+            k: int, metric: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, POS_INF)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)[:, None, :]   # (bq, 1, d)
+    c = cand_ref[...].astype(jnp.float32)            # (bq, bm, d)
+    if metric == "l2":
+        diff = q - c
+        scores = jnp.sum(diff * diff, axis=-1)       # (bq, bm)
+    elif metric == "chi2":
+        scores = jnp.sum((q - c) ** 2 / (q + c + EPS), axis=-1)
+    else:
+        raise ValueError(metric)
+    scores = jnp.where(mask_ref[...], scores, POS_INF)
+    bd, bi = select_topk_block(scores, ids_ref[...], k)
+    md, mi = merge_topk(out_d_ref[...], out_i_ref[...], bd, bi, k)
+    out_d_ref[...] = md
+    out_i_ref[...] = mi
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "bq", "bm",
+                                             "interpret"))
+def distance_topk(q: jax.Array, cand: jax.Array, ids: jax.Array,
+                  mask: jax.Array, k: int, metric: str = "l2", bq: int = 8,
+                  bm: int = 64, interpret: bool = False
+                  ) -> tuple[jax.Array, jax.Array]:
+    """q (B,d), cand (B,M,d), ids (B,M) int32, mask (B,M) bool -> top-k."""
+    b, d = q.shape
+    m = cand.shape[1]
+    bq = min(bq, max(1, b))
+    bm = min(bm, m)
+    b_pad = -b % bq
+    m_pad = -m % bm
+    qp = jnp.pad(q, ((0, b_pad), (0, 0)))
+    candp = jnp.pad(cand, ((0, b_pad), (0, m_pad), (0, 0)))
+    idsp = jnp.pad(ids, ((0, b_pad), (0, m_pad)), constant_values=-1)
+    maskp = jnp.pad(mask, ((0, b_pad), (0, m_pad)), constant_values=False)
+
+    grid = ((b + b_pad) // bq, (m + m_pad) // bm)
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_kernel, k=k, metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, bm, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bq, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bq, bm), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, candp, idsp, maskp)
+    return out_d[:b], out_i[:b]

@@ -1,0 +1,59 @@
+"""Pallas embedding-bag: ragged gather + weighted segment-sum (recsys hot path).
+
+JAX has no native EmbeddingBag; the library's XLA path is take+segment_sum
+(kernels/ref.py).  This kernel is the TPU-native variant in the FBGEMM-TBE
+style: the multi-hot id matrix is a *scalar-prefetch* operand, so the BlockSpec
+index_map itself selects which embedding-table row to DMA HBM->VMEM at each
+grid step — the table is never gathered into an intermediate (B, H, D) tensor.
+
+Layout: ids (B, H) int32 (padded with 0s), weights (B, H) f32 (0 at padding),
+table (V, D).  Grid = (B, H): step (b, h) DMAs table row ids[b, h] (1, D) and
+accumulates weights[b,h] * row into the (1, D) output block of bag b, which is
+revisited across h (stays in VMEM; zero-initialised at h == 0).
+
+Production note: one-row DMAs underutilize HBM bandwidth; the deployed config
+sorts ids and fuses `rows_per_step` consecutive rows (see ops.embedding_bag
+``rows_per_step``) — the structure here keeps the reference readable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, w_ref, row_ref, out_ref):
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += w_ref[0, 0] * row_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(ids: jax.Array, weights: jax.Array, table: jax.Array,
+                  interpret: bool = False) -> jax.Array:
+    """ids (B, H) int32, weights (B, H) f32, table (V, D) -> bags (B, D) f32."""
+    b, h = ids.shape
+    v, d = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, ids_p: (i, j)),       # weights
+            pl.BlockSpec((1, d), lambda i, j, ids_p: (ids_p[i, j], 0)),  # row
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, ids_p: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(ids, weights, table)

@@ -1,0 +1,71 @@
+"""Pallas batched forest traversal (K=1 trees): query tile -> leaf ids.
+
+The paper's descent is one coordinate access + one float compare per level.
+Batched over a query tile, each level is two dynamic gathers:
+  (1) node -> (feat, thresh, child_base)   [tree arrays, scalar memory]
+  (2) per-row coordinate q[b, feat_b]      [query tile, VMEM]
+
+Tree arrays are passed as scalar-prefetch operands (SMEM-resident). This caps
+the supported tree size at the SMEM budget (~64k nodes of 12 B/node ~= 768 KB);
+larger trees use the XLA traversal in core.forest (the production default —
+traversal is <2% of query cost at paper-scale L*C, see EXPERIMENTS.md §Perf).
+
+Grid = (B/bq,); the depth loop is a fori_loop inside the kernel so the query
+tile is read once from HBM for the whole descent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(feat_ref, thresh_ref, child_ref, q_ref, out_ref, *,
+            max_depth: int):
+    q = q_ref[...]                       # (bq, d)
+    feat = feat_ref[...]                 # (max_nodes,)
+    thresh = thresh_ref[...]
+    child = child_ref[...]
+
+    def step(_, node):
+        f = jnp.take(feat, node)                        # (bq,)
+        t = jnp.take(thresh, node)
+        cb = jnp.take(child, node)
+        xv = jnp.take_along_axis(q, f[:, None], axis=1)[:, 0]
+        go_right = (xv >= t).astype(jnp.int32)
+        return jnp.where(cb < 0, node, cb + go_right)
+
+    node0 = jnp.zeros((q.shape[0],), jnp.int32)
+    leaf = jax.lax.fori_loop(0, max_depth, step, node0)
+    out_ref[...] = leaf[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth", "bq", "interpret"))
+def forest_traverse(feat: jax.Array, thresh: jax.Array, child_base: jax.Array,
+                    queries: jax.Array, max_depth: int, bq: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """Single K=1 tree: feat/thresh/child_base (max_nodes,), queries (B, d).
+
+    Returns leaf node ids (B,) int32.  vmap over trees for the forest.
+    """
+    b, d = queries.shape
+    bq = min(bq, b)
+    b_pad = -b % bq
+    qp = jnp.pad(queries, ((0, b_pad), (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,           # feat, thresh, child_base in SMEM
+        grid=((b + b_pad) // bq,),
+        in_specs=[pl.BlockSpec((bq, d), lambda i, *_: (i, 0))],
+        out_specs=pl.BlockSpec((bq, 1), lambda i, *_: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, max_depth=max_depth),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b + b_pad, 1), jnp.int32),
+        interpret=interpret,
+    )(feat, thresh, child_base, qp)
+    return out[:b, 0]

@@ -1,0 +1,99 @@
+"""Fused brute-force scoring + streaming top-k (the exhaustive/rerank hot-spot).
+
+Computes, for a query tile against the whole database, either
+
+  * l2 :  ||q - c||^2  via the MXU expansion |q|^2 - 2 q.c + |c|^2, or
+  * dot: -q.c          (retrieval scoring, e.g. recsys retrieval_cand),
+
+and keeps a running top-k in VMEM while streaming database blocks HBM->VMEM —
+the full (B, N) score matrix never exists in HBM.  This is the beyond-paper
+optimized exhaustive path and the exact-rerank stage of the forest query.
+
+Blocking: grid = (B/bq, N/bn); the db block (bn, d) is the streamed operand;
+the output top-k block (bq, k) is revisited across j (consecutive -> stays in
+VMEM).  MXU work per step: (bq x d) @ (d x bn).
+
+VMEM budget (f32, defaults bq=128, bn=512, d<=1024):
+  q tile 0.5 MB + db block 2 MB + scores 0.25 MB + topk carry ~tiny  << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import POS_INF, merge_topk, select_topk_block
+
+
+def _kernel(q_ref, db_ref, db_sq_ref, out_d_ref, out_i_ref, *, k: int,
+            bn: int, n_total: int, metric: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, POS_INF)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)          # (bq, d)
+    db = db_ref[...].astype(jnp.float32)        # (bn, d)
+    cross = jax.lax.dot_general(
+        q, db, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (bq, bn) on the MXU
+    if metric == "l2":
+        q_sq = jnp.sum(q * q, axis=1, keepdims=True)
+        scores = q_sq - 2.0 * cross + db_sq_ref[...]      # (bq, bn)
+    elif metric == "dot":
+        scores = -cross
+    else:
+        raise ValueError(metric)
+
+    ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(ids < n_total, scores, POS_INF)    # padding rows
+    bd, bi = select_topk_block(scores, ids, k)
+    md, mi = merge_topk(out_d_ref[...], out_i_ref[...], bd, bi, k)
+    out_d_ref[...] = md
+    out_i_ref[...] = mi
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "bq", "bn",
+                                             "interpret"))
+def matmul_topk(q: jax.Array, db: jax.Array, k: int, metric: str = "l2",
+                bq: int = 128, bn: int = 512, interpret: bool = False
+                ) -> tuple[jax.Array, jax.Array]:
+    """(B, d) x (N, d) -> top-k (dists (B,k) f32, ids (B,k) int32)."""
+    b, d = q.shape
+    n, _ = db.shape
+    bq = min(bq, max(8, b))
+    bn = min(bn, n)
+    # pad to tile multiples (padded db rows are masked by id >= n in-kernel)
+    b_pad = -b % bq
+    n_pad = -n % bn
+    qp = jnp.pad(q, ((0, b_pad), (0, 0)))
+    dbp = jnp.pad(db, ((0, n_pad), (0, 0)))
+    db_sq = jnp.sum(dbp.astype(jnp.float32) ** 2, axis=1)[None, :]  # (1, N')
+
+    grid = ((b + b_pad) // bq, (n + n_pad) // bn)
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_kernel, k=k, bn=bn, n_total=n, metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, dbp, db_sq)
+    return out_d[:b], out_i[:b]

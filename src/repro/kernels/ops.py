@@ -1,0 +1,78 @@
+"""Public jit'd wrappers around the Pallas kernels with backend dispatch.
+
+Policy (``mode``):
+  * "auto"   — Pallas-compiled on TPU, jnp reference elsewhere (CPU containers
+               run the oracle; the kernels are validated via interpret mode in
+               the test suite).
+  * "pallas" — force the Pallas kernel (interpret=True off-TPU).
+  * "ref"    — force the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+
+from repro.kernels import chi2_topk as _chi2
+from repro.kernels import distance_topk as _dist
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import forest_traverse as _trav
+from repro.kernels import matmul_topk as _mm
+from repro.kernels import ref as _ref
+
+Mode = Literal["auto", "pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: Mode) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    if mode == "ref":
+        return False, False
+    if mode == "pallas":
+        return True, not _on_tpu()
+    return (True, False) if _on_tpu() else (False, False)
+
+
+def topk(q, db, k: int, metric: str = "l2", mode: Mode = "auto"):
+    """Brute-force fused scoring + top-k. metric in {l2, dot, chi2}."""
+    use_pallas, interp = _resolve(mode)
+    if metric == "chi2":
+        if use_pallas:
+            return _chi2.chi2_topk(q, db, k, interpret=interp)
+        return _ref.chi2_topk_ref(q, db, k)
+    if use_pallas:
+        return _mm.matmul_topk(q, db, k, metric=metric, interpret=interp)
+    return _ref.matmul_topk_ref(q, db, k, metric=metric)
+
+
+def rerank_candidates(q, cand, ids, mask, k: int, metric: str = "l2",
+                      mode: Mode = "auto"):
+    """Fused gathered-candidate distance + top-k."""
+    use_pallas, interp = _resolve(mode)
+    if use_pallas:
+        return _dist.distance_topk(q, cand, ids, mask, k, metric=metric,
+                                   interpret=interp)
+    return _ref.distance_topk_ref(q, cand, ids, mask, k, metric=metric)
+
+
+def embedding_bag(ids, weights, table, mode: Mode = "auto"):
+    """Weighted multi-hot embedding-bag (B, H) x (V, D) -> (B, D)."""
+    use_pallas, interp = _resolve(mode)
+    if use_pallas:
+        return _bag.embedding_bag(ids, weights, table, interpret=interp)
+    return _ref.embedding_bag_ref(ids, weights, table)
+
+
+def traverse_tree(feat, thresh, child_base, queries, max_depth: int,
+                  mode: Mode = "auto"):
+    """Single-tree batched descent -> leaf ids (B,)."""
+    use_pallas, interp = _resolve(mode)
+    if use_pallas:
+        return _trav.forest_traverse(feat, thresh, child_base, queries,
+                                     max_depth, interpret=interp)
+    return _ref.forest_traverse_ref(feat, thresh, child_base, queries,
+                                    max_depth)

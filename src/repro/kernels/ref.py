@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function mirrors its kernel's contract exactly (same shapes, dtypes,
+padding and tie-breaking semantics: ties broken by smaller candidate id).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+POS_INF = float("inf")
+
+
+def _topk_smallest(scores: jax.Array, ids: jax.Array, k: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Top-k smallest with ties broken by smaller id (matches kernels)."""
+    order = jnp.lexsort((ids, scores), axis=-1)
+    top = order[..., :k]
+    return (jnp.take_along_axis(scores, top, axis=-1),
+            jnp.take_along_axis(ids, top, axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def matmul_topk_ref(q: jax.Array, db: jax.Array, k: int, metric: str = "l2"
+                    ) -> tuple[jax.Array, jax.Array]:
+    qf = q.astype(jnp.float32)
+    dbf = db.astype(jnp.float32)
+    cross = qf @ dbf.T
+    if metric == "l2":
+        scores = (jnp.sum(qf * qf, 1)[:, None] - 2 * cross
+                  + jnp.sum(dbf * dbf, 1)[None, :])
+    elif metric == "dot":
+        scores = -cross
+    else:
+        raise ValueError(metric)
+    ids = jnp.broadcast_to(jnp.arange(db.shape[0], dtype=jnp.int32)[None, :],
+                           scores.shape)
+    d, i = _topk_smallest(scores, ids, k)
+    return d, jnp.where(jnp.isinf(d), -1, i)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def chi2_topk_ref(q: jax.Array, db: jax.Array, k: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    qf = q.astype(jnp.float32)[:, None, :]
+    dbf = db.astype(jnp.float32)[None, :, :]
+    scores = jnp.sum((qf - dbf) ** 2 / (qf + dbf + EPS), axis=-1)
+    ids = jnp.broadcast_to(jnp.arange(db.shape[0], dtype=jnp.int32)[None, :],
+                           scores.shape)
+    d, i = _topk_smallest(scores, ids, k)
+    return d, jnp.where(jnp.isinf(d), -1, i)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def distance_topk_ref(q: jax.Array, cand: jax.Array, ids: jax.Array,
+                      mask: jax.Array, k: int, metric: str = "l2"
+                      ) -> tuple[jax.Array, jax.Array]:
+    qf = q.astype(jnp.float32)[:, None, :]
+    cf = cand.astype(jnp.float32)
+    if metric == "l2":
+        scores = jnp.sum((qf - cf) ** 2, axis=-1)
+    elif metric == "chi2":
+        scores = jnp.sum((qf - cf) ** 2 / (qf + cf + EPS), axis=-1)
+    else:
+        raise ValueError(metric)
+    scores = jnp.where(mask, scores, POS_INF)
+    d, i = _topk_smallest(scores, ids, k)
+    return d, jnp.where(jnp.isinf(d), -1, i)
+
+
+@jax.jit
+def embedding_bag_ref(ids: jax.Array, weights: jax.Array, table: jax.Array
+                      ) -> jax.Array:
+    rows = table[ids]                                   # (B, H, D) gather
+    return jnp.sum(rows.astype(jnp.float32) * weights[..., None], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def forest_traverse_ref(feat: jax.Array, thresh: jax.Array,
+                        child_base: jax.Array, queries: jax.Array,
+                        max_depth: int) -> jax.Array:
+    def step(_, node):
+        f = feat[node]
+        xv = jnp.take_along_axis(queries, f[:, None], axis=1)[:, 0]
+        go_right = (xv >= thresh[node]).astype(jnp.int32)
+        cb = child_base[node]
+        return jnp.where(cb < 0, node, cb + go_right)
+
+    node0 = jnp.zeros((queries.shape[0],), jnp.int32)
+    return jax.lax.fori_loop(0, max_depth, step, node0)

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); do not move them.  See the module main() for the CLI:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # every cell, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+
+Each cell produces artifacts/dryrun/<arch>__<cell>__<mesh>[__<variant>].json
+with memory_analysis, cost_analysis, parsed per-collective byte counts, and
+the program meta (model flops) — the roofline table reads these.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+ARTIFACT_DIR = os.path.abspath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "../../../artifacts/dryrun"))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (collective bytes are NOT in cost_analysis)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[256,1024]' -> byte count; tuple shapes handled by the caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO, by kind.
+
+    Uses the op's *result* shape (for all-gather that is the gathered size;
+    for reduce-scatter the scattered size; a consistent, conservative proxy
+    for wire bytes per device).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-shape = lhs of " = ", op name after '='
+        m = re.match(r"%?[\w.\-]+ = ([^=]+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch_id: str, cell_name: str, multi_pod: bool,
+             variant: str = "base", save: bool = True) -> dict:
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh_name = "multipod" if multi_pod else "single"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    prog = build_cell(arch_id, cell_name, mesh, multi_pod, variant=variant)
+
+    with mesh:
+        jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings)
+        lowered = jitted.lower(*prog.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    result = {
+        "arch": arch_id,
+        "cell": cell_name,
+        "mesh": mesh_name,
+        "variant": variant,
+        "n_devices": len(jax.devices()),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "collectives": coll,
+        "hlo_lines": hlo.count("\n"),
+        "meta": {k: (int(v) if isinstance(v, (int, np.integer)) else v)
+                 for k, v in prog.meta.items()},
+    }
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        suffix = "" if variant == "base" else f"__{variant}"
+        path = os.path.join(
+            ARTIFACT_DIR, f"{arch_id}__{cell_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs import ASSIGNED, get_arch
+    out = []
+    for arch_id in ASSIGNED:
+        for cell in get_arch(arch_id).cells:
+            if not cell.skip:
+                out.append((arch_id, cell.name))
+    return out
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--cell")
+    p.add_argument("--mesh", choices=["single", "multipod", "both"],
+                   default="both")
+    p.add_argument("--variant", default="base")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--skip-existing", action="store_true")
+    args = p.parse_args()
+
+    meshes = {"single": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    cells = all_cells() if args.all else [(args.arch, args.cell)]
+
+    failures = []
+    for arch_id, cell_name in cells:
+        for mp in meshes:
+            mesh_name = "multipod" if mp else "single"
+            suffix = "" if args.variant == "base" else f"__{args.variant}"
+            path = os.path.join(
+                ARTIFACT_DIR,
+                f"{arch_id}__{cell_name}__{mesh_name}{suffix}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {arch_id}/{cell_name}/{mesh_name}")
+                continue
+            try:
+                r = run_cell(arch_id, cell_name, mp, variant=args.variant)
+                print(f"[ok] {arch_id}/{cell_name}/{mesh_name} "
+                      f"compile={r['compile_s']}s "
+                      f"flops={r['cost']['flops']:.3e} "
+                      f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB "
+                      f"coll={r['collectives']['total_bytes']/2**30:.3f}GiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch_id, cell_name, mesh_name, repr(e)))
+                print(f"[FAIL] {arch_id}/{cell_name}/{mesh_name}: {e!r}",
+                      flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production meshes (DESIGN.md §3).
+
+Single pod: (data=16, model=16) = 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is only
+ever used in data-parallel / DB-shard position, so scaling to N pods is
+adding more of the same — nothing in the framework assumes pod==2.
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run launcher must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small mesh for CI-size multi-device tests (8 forced host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)

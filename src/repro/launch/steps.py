@@ -1,0 +1,734 @@
+"""Cell programs: (arch x shape-cell x mesh) -> lowerable step function.
+
+For every assigned cell this builds:
+  * the step function (train_step / prefill / decode / serve / retrieval),
+  * ShapeDtypeStruct stand-ins for every input (params, optimizer state,
+    batch) — no device allocation ever happens,
+  * the NamedSharding tree for the inputs (the production sharding config).
+
+`launch/dryrun.py` lowers + compiles these on the production meshes and the
+roofline module consumes the compiled artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ArchSpec, LMConfig, MACEConfig, RecsysConfig, ShapeCell
+from repro.launch.mesh import dp_axes
+from repro.models import mace as mace_mod
+from repro.models import recsys as rs
+from repro.models import transformer as tr
+from repro.models.layers import Axes, dtype_of
+from repro.train.optimizer import adamw, constant_schedule
+from repro.train.train_state import TrainState
+
+
+class CellProgram(NamedTuple):
+    fn: Callable
+    args: tuple                # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple        # matching NamedSharding pytrees
+    meta: dict                 # model_flops etc. for the roofline
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(tree):
+    """array pytree (or eval_shape result) -> ShapeDtypeStruct pytree."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _dp_size(mesh: Mesh, dp: tuple[str, ...]) -> int:
+    out = 1
+    for a in dp:
+        out *= mesh.shape[a]
+    return out
+
+
+# ===========================================================================
+# LM cells
+# ===========================================================================
+
+
+def _lm_train_program(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                      multi_pod: bool) -> CellProgram:
+    cfg: LMConfig = spec.config
+    axes = Axes(dp=dp_axes(multi_pod), tp="model", mesh=mesh)
+    state_dtype = (jnp.bfloat16 if cfg.param_dtype == "bfloat16"
+                   else jnp.float32)
+    if cfg.opt == "adafactor":
+        from repro.train.optimizer import adafactor
+        opt = adafactor(constant_schedule(1e-4))
+    else:
+        opt = adamw(constant_schedule(1e-4), state_dtype=state_dtype)
+    logit_chunk = 512 if cfg.padded_vocab >= 100_000 else 0
+
+    params_sds = jax.eval_shape(
+        lambda: tr.init_lm(jax.random.key(0), cfg))
+    opt_sds = jax.eval_shape(lambda: opt.init(params_sds))
+    state_sds = TrainState(jax.ShapeDtypeStruct((), jnp.int32), params_sds,
+                           opt_sds, None)
+
+    pspecs = tr.lm_param_specs(cfg, axes)
+    if cfg.opt == "adafactor":
+        # factored moments: vr drops the last param axis, vc the second-to-
+        # last — derive their specs from the param specs accordingly
+        from repro.train.optimizer import FactorState
+
+        def _vr(s_):
+            return P(*s_[:-1]) if len(s_) >= 2 else s_
+
+        def _vc(s_):
+            return P(*(s_[:-2] + s_[-1:])) if len(s_) >= 2 else P(None)
+
+        vr_specs = jax.tree.map(_vr, pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+        vc_specs = jax.tree.map(_vc, pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+        opt_specs = FactorState(P(), vr_specs, vc_specs)
+    else:
+        from repro.train.optimizer import AdamState
+        opt_specs = AdamState(P(), pspecs, pspecs)
+    state_specs = TrainState(P(), pspecs, opt_specs, None)
+
+    b, s = cell.global_batch, cell.seq_len
+    batch_sds = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    batch_specs = {"tokens": P(tuple(axes.dp), None),
+                   "labels": P(tuple(axes.dp), None)}
+
+    def train_step(state: TrainState, batch):
+        def lf(p, b_):
+            return tr.loss_fn(p, b_, cfg, axes, logit_chunk=logit_chunk)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state.params, batch)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              state.params, updates)
+        return (TrainState(state.step + 1, params, opt_state, None),
+                {"loss": loss, **metrics})
+
+    return CellProgram(
+        fn=train_step,
+        args=(state_sds, batch_sds),
+        in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs)),
+        meta=_lm_meta(cfg, cell, n_tokens=b * s, kind="train"),
+    )
+
+
+def _lm_prefill_program(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                        multi_pod: bool) -> CellProgram:
+    cfg: LMConfig = spec.config
+    axes = Axes(dp=dp_axes(multi_pod), tp="model", mesh=mesh)
+    b, s = cell.global_batch, cell.seq_len
+    params_sds = jax.eval_shape(lambda: tr.init_lm(jax.random.key(0), cfg))
+    pspecs = tr.lm_param_specs(cfg, axes)
+
+    cache_dtype = jnp.bfloat16
+    cache_sds = _sds(jax.eval_shape(
+        lambda: tr.init_cache(cfg, b, s, cache_dtype)))
+    cache_specs = tr.cache_specs(cfg, axes)
+    dp_ok = b % _dp_size(mesh, axes.dp) == 0
+    bspec = tuple(axes.dp) if dp_ok else None
+    cache_specs = jax.tree.map(
+        lambda _: P(None, bspec, axes.tp, None, None), cache_sds)
+
+    tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    def prefill(params, cache, tokens):
+        logits, new_cache = tr.decode_step(
+            params, cache, tokens, jnp.zeros((), jnp.int32), cfg, axes=axes,
+            last_only=True)
+        return logits, new_cache
+
+    return CellProgram(
+        fn=prefill,
+        args=(params_sds, cache_sds, tok_sds),
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, cache_specs),
+                      NamedSharding(mesh, P(bspec, None))),
+        meta=_lm_meta(cfg, cell, n_tokens=b * s, kind="prefill"),
+    )
+
+
+def _lm_decode_program(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                       multi_pod: bool) -> CellProgram:
+    cfg: LMConfig = spec.config
+    axes = Axes(dp=dp_axes(multi_pod), tp="model", mesh=mesh)
+    b, s_max = cell.global_batch, cell.seq_len
+    params_sds = jax.eval_shape(lambda: tr.init_lm(jax.random.key(0), cfg))
+    pspecs = tr.lm_param_specs(cfg, axes)
+    cache_sds = _sds(jax.eval_shape(
+        lambda: tr.init_cache(cfg, b, s_max, jnp.bfloat16)))
+    dp_ok = b % _dp_size(mesh, axes.dp) == 0
+    bspec = tuple(axes.dp) if dp_ok else None
+    cache_specs = jax.tree.map(
+        lambda _: P(None, bspec, axes.tp, None, None), cache_sds)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, cache, tokens, pos):
+        return tr.decode_step(params, cache, tokens, pos, cfg, axes=axes)
+
+    return CellProgram(
+        fn=decode,
+        args=(params_sds, cache_sds, tok_sds, pos_sds),
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, cache_specs),
+                      NamedSharding(mesh, P(bspec, None)),
+                      NamedSharding(mesh, P())),
+        meta=_lm_meta(cfg, cell, n_tokens=b, kind="decode"),
+    )
+
+
+def _lm_meta(cfg: LMConfig, cell: ShapeCell, n_tokens: int, kind: str) -> dict:
+    n_total = cfg.param_count()
+    # active params per token (MoE: top_k routed + shared of the MoE layers)
+    if cfg.moe:
+        expert_p = 3 * cfg.d_model * cfg.d_ff
+        n_moe = cfg.n_layers // cfg.moe_every
+        routed_total = n_moe * cfg.n_experts * expert_p
+        active = n_total - routed_total + n_moe * cfg.top_k * expert_p
+    else:
+        active = n_total
+    flops_per_token = {"train": 6, "prefill": 2, "decode": 2}[kind] * active
+    # attention flops (dominant for long context): 2*2*L*S*d_attn per token
+    s = cell.seq_len
+    attn = 0
+    win = cfg.layer_windows
+    for w in win:
+        eff = min(w, s) if w else s
+        per_tok_ctx = eff / 2 if kind != "decode" else eff
+        attn += (12 if kind == "train" else 4) * \
+            cfg.n_heads * cfg.head_dim * per_tok_ctx
+    return {
+        "params_total": n_total,
+        "params_active": active,
+        "n_tokens": n_tokens,
+        "model_flops": n_tokens * (flops_per_token + attn),
+        "kind": kind,
+    }
+
+
+# ===========================================================================
+# GNN (MACE) cells
+# ===========================================================================
+
+
+def _gnn_program(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                 multi_pod: bool, variant: str = "base") -> CellProgram:
+    from repro.configs.mace_arch import N_CLASSES
+    base_cfg: MACEConfig = spec.config
+    dp = dp_axes(multi_pod)
+    dpn = _dp_size(mesh, dp)
+
+    if cell.name == "molecule":
+        n_nodes = cell.n_nodes * cell.n_graphs          # 3840
+        raw_edges = cell.n_edges * cell.n_graphs        # 8192
+        n_graphs = cell.n_graphs
+        d_feat = 0
+    elif cell.name == "minibatch_lg":
+        # padded fanout-sample sizes: seeds + seeds*15 + seeds*150
+        n_nodes = _pad_to(cell.batch_nodes * (1 + 15 + 150), 32)
+        raw_edges = cell.batch_nodes * (15 + 150)
+        n_graphs = 1
+        d_feat = cell.d_feat
+    else:
+        n_nodes = _pad_to(cell.n_nodes, 32)
+        raw_edges = cell.n_edges
+        n_graphs = 1
+        d_feat = cell.d_feat
+    # stream big edge sets in rematerialized chunks (<= ~512k edges/device
+    # live at once); pad the edge count so chunks shard evenly
+    n_edge_chunks = max(1, -(-raw_edges // (262144 * dpn)))
+    n_edges = _pad_to(raw_edges, n_edge_chunks * 512)
+
+    cfg = dataclasses.replace(base_cfg, d_feat_in=d_feat)
+    for item in (variant.split(",") if variant != "base" else []):
+        k, _, v = item.partition("=")
+        if k == "ex":
+            cfg = dataclasses.replace(
+                cfg, exchange_dtype={"bf16": "bfloat16",
+                                     "f32": "float32"}[v])
+        elif k != "unroll":
+            raise ValueError(f"unknown gnn variant key {k}")
+    n_classes = N_CLASSES.get(cell.name, 0)
+    params_sds = jax.eval_shape(
+        lambda: mace_mod.init_mace(jax.random.key(0), cfg, n_classes))
+    pspecs = jax.tree.map(lambda _: P(), params_sds)  # MACE params are small
+    opt = adamw(constant_schedule(1e-3))
+    opt_sds = jax.eval_shape(lambda: opt.init(params_sds))
+    opt_specs = jax.tree.map(lambda _: P(), opt_sds)
+    state_sds = TrainState(jax.ShapeDtypeStruct((), jnp.int32), params_sds,
+                           opt_sds, None)
+    from repro.train.optimizer import AdamState
+    state_specs = TrainState(P(), pspecs,
+                             AdamState(P(), pspecs, pspecs), None)
+
+    batch_sds = {
+        "species": jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((n_nodes, 3), jnp.float32),
+        "senders": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        "receivers": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((n_edges,), jnp.float32),
+    }
+    batch_specs = {
+        "species": P(dp), "positions": P(dp, None),
+        "senders": P(dp), "receivers": P(dp), "edge_mask": P(dp),
+    }
+    if d_feat:
+        batch_sds["node_feat"] = jax.ShapeDtypeStruct((n_nodes, d_feat),
+                                                      jnp.float32)
+        batch_specs["node_feat"] = P(dp, None)
+    if n_classes:
+        batch_sds["labels"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        batch_specs["labels"] = P(dp)
+    else:
+        batch_sds["graph_ids"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        batch_sds["energy"] = jax.ShapeDtypeStruct((n_graphs,), jnp.float32)
+        batch_specs["graph_ids"] = P(dp)
+        batch_specs["energy"] = P(None)
+
+    axes = Axes(dp=dp, tp="model", mesh=mesh)
+
+    def train_step(state: TrainState, batch):
+        def lf(p):
+            out = mace_mod.mace_fwd(
+                p, cfg, batch["species"], batch["positions"],
+                batch["senders"], batch["receivers"],
+                node_feat=batch.get("node_feat"),
+                edge_mask=batch["edge_mask"],
+                graph_ids=batch.get("graph_ids"), n_graphs=n_graphs,
+                axes=axes, n_edge_chunks=n_edge_chunks,
+                unroll="unroll=1" in variant)
+            if n_classes:
+                logits = out["node_logits"].astype(jnp.float32)
+                lab = batch["labels"]
+                valid = lab >= 0
+                lse = jax.scipy.special.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(
+                    logits, jnp.maximum(lab, 0)[:, None], axis=-1)[:, 0]
+                return jnp.sum((lse - ll) * valid) / jnp.maximum(
+                    jnp.sum(valid), 1)
+            return jnp.mean((out["energy"] - batch["energy"]) ** 2)
+
+        loss, grads = jax.value_and_grad(lf)(state.params)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              state.params, updates)
+        return (TrainState(state.step + 1, params, opt_state, None),
+                {"loss": loss})
+
+    # model flops: per-edge tensor-product work dominates
+    paths = 15
+    c = cfg.d_hidden
+    per_edge = cfg.n_layers * (2 * paths * c * 27 + 2 * cfg.n_rbf * 64
+                               + 2 * 64 * paths * c)
+    per_node = cfg.n_layers * (2 * paths * c * 81 * 2) + 2 * c * c
+    meta = {
+        "model_flops": 3 * (n_edges * per_edge + n_nodes * per_node),
+        "n_nodes": n_nodes, "n_edges": n_edges, "kind": "train",
+        "params_total": sum(np.prod(x.shape)
+                            for x in jax.tree.leaves(params_sds)),
+        "params_active": sum(np.prod(x.shape)
+                             for x in jax.tree.leaves(params_sds)),
+        "n_tokens": n_nodes,
+    }
+    return CellProgram(
+        fn=train_step,
+        args=(state_sds, batch_sds),
+        in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs)),
+        meta=meta,
+    )
+
+
+# ===========================================================================
+# RecSys cells
+# ===========================================================================
+
+
+def _recsys_fwd(cfg: RecsysConfig):
+    if cfg.model == "dlrm":
+        return lambda p, b: rs.dlrm_fwd(p, b["dense"], b["sparse"])
+    if cfg.model == "autoint":
+        return lambda p, b: rs.autoint_fwd(p, b["sparse"])
+    if cfg.model == "widedeep":
+        return lambda p, b: rs.widedeep_fwd(p, b["sparse"])
+    if cfg.model == "mind":
+        return lambda p, b: rs.mind_train_logits(p, cfg, b["hist"],
+                                                 b["target"])
+    raise ValueError(cfg.model)
+
+
+def _recsys_init(cfg: RecsysConfig):
+    init = {"dlrm": rs.init_dlrm, "autoint": rs.init_autoint,
+            "widedeep": rs.init_widedeep,
+            "mind": lambda k, c: rs.init_mind(k, c)}[cfg.model]
+    return lambda: init(jax.random.key(0), cfg)
+
+
+def _recsys_specs(cfg: RecsysConfig, axes: Axes, mesh: Mesh):
+    all_axes = tuple(axes.dp) + (axes.tp,)
+
+    def tables_spec():
+        # big tables row-sharded over EVERY axis; medium over tp; small repl.
+        return [P(all_axes, None) if v >= 1_000_000 else
+                (P(axes.tp, None) if v >= 16384 else P(None, None))
+                for v in cfg.table_sizes]
+
+    if cfg.model == "dlrm":
+        s = rs.dlrm_specs(cfg, axes)
+        s["tables"] = tables_spec()
+        return s
+    if cfg.model == "autoint":
+        s = rs.autoint_specs(cfg, axes)
+        s["tables"] = tables_spec()
+        return s
+    if cfg.model == "widedeep":
+        s = rs.widedeep_specs(cfg, axes)
+        s["tables"] = tables_spec()
+        s["wide_tables"] = tables_spec()
+        return s
+    if cfg.model == "mind":
+        return rs.mind_specs(cfg, axes)
+    raise ValueError(cfg.model)
+
+
+def _recsys_batch(cfg: RecsysConfig, b: int, axes: Axes, train: bool):
+    sds, specs = {}, {}
+    if cfg.model == "mind":
+        sds["hist"] = jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.int32)
+        sds["target"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        specs["hist"] = P(tuple(axes.dp), None)
+        specs["target"] = P(tuple(axes.dp))
+    else:
+        if cfg.n_dense:
+            sds["dense"] = jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32)
+            specs["dense"] = P(tuple(axes.dp), None)
+        sds["sparse"] = jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32)
+        specs["sparse"] = P(tuple(axes.dp), None)
+    if train:
+        sds["labels"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+        specs["labels"] = P(tuple(axes.dp))
+    return sds, specs
+
+
+def _recsys_train_program(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                          multi_pod: bool) -> CellProgram:
+    cfg: RecsysConfig = spec.config
+    axes = Axes(dp=dp_axes(multi_pod), tp="model", mesh=mesh)
+    opt = adamw(constant_schedule(1e-3))
+    params_sds = jax.eval_shape(_recsys_init(cfg))
+    pspecs = _recsys_specs(cfg, axes, mesh)
+    opt_sds = jax.eval_shape(lambda: opt.init(params_sds))
+    from repro.train.optimizer import AdamState
+    state_sds = TrainState(jax.ShapeDtypeStruct((), jnp.int32), params_sds,
+                           opt_sds, None)
+    state_specs = TrainState(P(), pspecs, AdamState(P(), pspecs, pspecs),
+                             None)
+    batch_sds, batch_specs = _recsys_batch(cfg, cell.batch, axes, train=True)
+    fwd = _recsys_fwd(cfg)
+
+    def train_step(state: TrainState, batch):
+        def lf(p):
+            logits = fwd(p, batch)
+            lab = batch["labels"]
+            # BCE with logits
+            return jnp.mean(jnp.maximum(logits, 0) - logits * lab
+                            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+        loss, grads = jax.value_and_grad(lf)(state.params)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              state.params, updates)
+        return (TrainState(state.step + 1, params, opt_state, None),
+                {"loss": loss})
+
+    return CellProgram(
+        fn=train_step,
+        args=(state_sds, batch_sds),
+        in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs)),
+        meta=_recsys_meta(cfg, cell, params_sds),
+    )
+
+
+def _recsys_serve_program(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                          multi_pod: bool) -> CellProgram:
+    cfg: RecsysConfig = spec.config
+    axes = Axes(dp=dp_axes(multi_pod), tp="model", mesh=mesh)
+    params_sds = jax.eval_shape(_recsys_init(cfg))
+    pspecs = _recsys_specs(cfg, axes, mesh)
+    batch_sds, batch_specs = _recsys_batch(cfg, cell.batch, axes, train=False)
+    fwd = _recsys_fwd(cfg)
+
+    def serve_step(params, batch):
+        return fwd(params, batch)
+
+    return CellProgram(
+        fn=serve_step,
+        args=(params_sds, batch_sds),
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, batch_specs)),
+        meta=_recsys_meta(cfg, cell, params_sds, train=False),
+    )
+
+
+def _mind_rpf_retrieval_program(spec: ArchSpec, cell: ShapeCell,
+                                mesh: Mesh, multi_pod: bool) -> CellProgram:
+    """retrieval_cand served THROUGH the paper's index (variant rpf=1).
+
+    The item catalog is row-sharded over dp (each shard owns a forest over
+    its rows, trees sharded over tp); the interest vectors traverse the
+    forest, rerank only ~L*C candidates per shard, and a tiny top-k merge
+    crosses the mesh — vs the brute-force variant's full-catalog scoring.
+    Catalog embeddings are unit-normalized (dot ordering == L2 ordering).
+    """
+    from repro.core.forest import Forest, ForestConfig
+    from repro.core.sharded_index import build_sharded_index, make_query_fn
+
+    cfg: RecsysConfig = spec.config
+    dp = dp_axes(multi_pod)
+    dpn = _dp_size(mesh, dp)
+    rows = _pad_to(cfg.item_vocab, cfg.row_pad_to)
+    n_local = rows // dpn
+    fcfg = ForestConfig(n_trees=80, capacity=16, split_ratio=0.3)
+    l_local = max(1, fcfg.n_trees // mesh.shape["model"])
+    local_cfg = fcfg._replace(n_trees=l_local).resolved(n_local)
+
+    params_sds = jax.eval_shape(_recsys_init(cfg))
+    pspecs = _recsys_specs(cfg, Axes(dp=dp, tp="model", mesh=mesh), mesh)
+    # the catalog is resharded over dp rows for the index (part of the
+    # optimization: every chip owns catalog rows, not just the tp group)
+    pspecs = dict(pspecs)
+    pspecs["item_embed"] = P(tuple(dp), None)
+
+    db_sds = params_sds["item_embed"]
+    forest_sds = jax.eval_shape(
+        lambda: build_sharded_index(
+            jax.random.key(0),
+            jax.ShapeDtypeStruct((rows, cfg.embed_dim), jnp.float32),
+            fcfg, mesh, db_axes=dp, tree_axis="model")).forest
+    forest_specs = jax.tree.map(
+        lambda _: P(tuple(dp), "model"), forest_sds)
+    hist_sds = jax.ShapeDtypeStruct((1, cfg.hist_len), jnp.int32)
+
+    qstep = make_query_fn(local_cfg, n_local, mesh, db_axes=dp,
+                          tree_axis="model", k=100, metric="l2")
+
+    def retrieve(params, hist, forest: Forest):
+        interests = rs.mind_user_fwd(params, cfg, hist)      # (1, K, D)
+        flat = interests.reshape(cfg.n_interests, cfg.embed_dim)
+        from repro.core.sharded_index import ShardedIndex
+        idx = ShardedIndex(forest=forest, n_local=n_local, cfg=local_cfg)
+        d, ids = qstep(idx, flat, params["item_embed"])
+        # merge the per-interest lists into one top-k
+        from repro.core.sharded_index import merge_topk_pairs
+        return merge_topk_pairs(d.reshape(1, -1), ids.reshape(1, -1), 100)
+
+    # model flops: traversal + rerank of L*C candidates per interest
+    rcfg = local_cfg
+    cand = fcfg.n_trees * rcfg.leaf_pad
+    flops = 2 * cand * cfg.n_interests * cfg.embed_dim
+    return CellProgram(
+        fn=retrieve,
+        args=(params_sds, hist_sds, forest_sds),
+        in_shardings=(_ns(mesh, pspecs),
+                      NamedSharding(mesh, P(None, None)),
+                      _ns(mesh, forest_specs)),
+        meta=_recsys_meta(cfg, cell, params_sds, train=False, flops=flops),
+    )
+
+
+def _recsys_retrieval_program(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                              multi_pod: bool) -> CellProgram:
+    """Score 1M candidates for one request; top-k output.
+
+    MIND: interests x item-embedding matmul (the paper's ANN target — the
+    forest-pruned variant is benchmarked in serve/ann_serve.py).
+    CTR models: broadcast the user context over the candidate item field.
+    """
+    cfg: RecsysConfig = spec.config
+    axes = Axes(dp=dp_axes(multi_pod), tp="model", mesh=mesh)
+    all_axes = tuple(axes.dp) + (axes.tp,)
+    # 1M candidates padded to 2^20 so the candidate axis shards evenly over
+    # 256 and 512 chips (padding scored then masked by id)
+    n_cand = 1_048_576
+    params_sds = jax.eval_shape(_recsys_init(cfg))
+    pspecs = _recsys_specs(cfg, axes, mesh)
+    k = 100
+
+    if cfg.model == "mind":
+        hist_sds = jax.ShapeDtypeStruct((1, cfg.hist_len), jnp.int32)
+
+        def retrieve(params, hist):
+            interests = rs.mind_user_fwd(params, cfg, hist)      # (1, K, D)
+            cand = params["item_embed"]
+            scores = jnp.einsum("bkd,nd->bkn", interests, cand)
+            scores = jnp.max(scores, axis=1)                     # (1, N)
+            neg, ids = jax.lax.top_k(scores, k)
+            return neg, ids
+
+        return CellProgram(
+            fn=retrieve, args=(params_sds, hist_sds),
+            in_shardings=(_ns(mesh, pspecs), NamedSharding(mesh, P(None, None))),
+            meta=_recsys_meta(cfg, cell, params_sds, train=False,
+                              flops=2 * n_cand * cfg.n_interests
+                              * cfg.embed_dim),
+        )
+
+    cand_sds = jax.ShapeDtypeStruct((n_cand,), jnp.int32)
+    user_sds, user_specs = _recsys_batch(cfg, 1, axes, train=False)
+    item_field = cfg.n_sparse - 1   # last sparse field = item id
+    fwd = _recsys_fwd(cfg)
+
+    def retrieve(params, user, cand_ids):
+        def score(ids_):
+            b = {}
+            if "dense" in user:
+                b["dense"] = jnp.broadcast_to(user["dense"],
+                                              (ids_.shape[0], cfg.n_dense))
+            sp = jnp.broadcast_to(user["sparse"],
+                                  (ids_.shape[0], cfg.n_sparse))
+            sp = sp.at[:, item_field].set(ids_)
+            b["sparse"] = sp
+            return fwd(params, b)
+
+        scores = score(cand_ids)
+        scores = jax.lax.with_sharding_constraint(scores, P(all_axes))
+        neg, ids_top = jax.lax.top_k(scores, k)
+        return neg, cand_ids[ids_top]
+
+    return CellProgram(
+        fn=retrieve,
+        args=(params_sds, user_sds, cand_sds),
+        in_shardings=(_ns(mesh, pspecs),
+                      jax.tree.map(lambda _: NamedSharding(mesh, P(None, None)),
+                                   user_sds),
+                      NamedSharding(mesh, P(all_axes))),
+        meta=_recsys_meta(cfg, cell, params_sds, train=False),
+    )
+
+
+def _recsys_meta(cfg: RecsysConfig, cell: ShapeCell, params_sds,
+                 train: bool = True, flops: Optional[int] = None) -> dict:
+    n_params = int(sum(np.prod(x.shape)
+                       for x in jax.tree.leaves(params_sds)))
+    b = cell.batch if cell.n_candidates == 0 else cell.n_candidates
+    if flops is None:
+        # active per example: embedding rows + MLP/attention mults
+        mlp = 0
+        if cfg.model == "dlrm":
+            dims = (cfg.n_dense,) + cfg.bot_mlp
+            mlp += sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+            f = cfg.n_sparse + 1
+            top_in = f * (f - 1) // 2 + cfg.embed_dim
+            dims = (top_in,) + cfg.top_mlp
+            mlp += sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+            mlp += 2 * f * f * cfg.embed_dim
+        elif cfg.model == "autoint":
+            d = cfg.embed_dim
+            for i in range(cfg.n_attn_layers):
+                d_in = d if i == 0 else cfg.d_attn
+                h = cfg.n_attn_heads * cfg.d_attn
+                mlp += cfg.n_sparse * (2 * 3 * d_in * h + 2 * h * cfg.d_attn)
+                mlp += 2 * cfg.n_sparse ** 2 * h * 2
+            mlp += 2 * cfg.n_sparse * cfg.d_attn
+        elif cfg.model == "widedeep":
+            dims = (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,)
+            mlp += sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        else:  # mind
+            d = cfg.embed_dim
+            mlp += cfg.capsule_iters * 2 * cfg.hist_len * cfg.n_interests * d
+            mlp += 2 * d * 4 * d * 2
+        flops = b * mlp * (3 if train else 1)
+    return {"model_flops": int(flops), "params_total": n_params,
+            "params_active": n_params, "n_tokens": b,
+            "kind": "train" if train else "serve"}
+
+
+# ===========================================================================
+# entry point
+# ===========================================================================
+
+
+def build_cell(arch_id: str, cell_name: str, mesh: Mesh, multi_pod: bool,
+               variant: str = "base") -> CellProgram:
+    spec = get_arch(arch_id)
+    cell = {c.name: c for c in spec.cells}[cell_name]
+    if cell.skip:
+        raise ValueError(f"cell {arch_id}/{cell_name} is skipped: "
+                         f"{cell.skip_reason}")
+    if spec.family == "lm":
+        cfg = _apply_lm_variant(spec.config, variant)
+        spec = dataclasses.replace(spec, config=cfg)
+        if cell.kind == "train":
+            return _lm_train_program(spec, cell, mesh, multi_pod)
+        if cell.kind == "prefill":
+            return _lm_prefill_program(spec, cell, mesh, multi_pod)
+        if cell.kind == "decode":
+            return _lm_decode_program(spec, cell, mesh, multi_pod)
+    if spec.family == "gnn":
+        return _gnn_program(spec, cell, mesh, multi_pod, variant=variant)
+    if spec.family == "recsys":
+        if cell.kind == "train":
+            return _recsys_train_program(spec, cell, mesh, multi_pod)
+        if cell.kind == "serve":
+            return _recsys_serve_program(spec, cell, mesh, multi_pod)
+        if cell.kind == "retrieval":
+            if variant == "rpf=1" and spec.config.model == "mind":
+                return _mind_rpf_retrieval_program(spec, cell, mesh,
+                                                   multi_pod)
+            return _recsys_retrieval_program(spec, cell, mesh, multi_pod)
+    raise ValueError(f"no program for {arch_id}/{cell_name}")
+
+
+def _apply_lm_variant(cfg: LMConfig, variant: str) -> LMConfig:
+    """Perf-iteration variants (EXPERIMENTS.md §Perf)."""
+    if variant == "base":
+        return cfg
+    changes = {}
+    for item in variant.split(","):
+        k, _, v = item.partition("=")
+        if k == "attn_shard":
+            changes["attn_shard"] = v
+        elif k == "remat":
+            changes["remat"] = v == "1"
+        elif k == "fsdp":
+            changes["fsdp"] = v == "1"
+        elif k == "cap":
+            changes["capacity_factor"] = float(v)
+        elif k == "unroll":
+            changes["unroll"] = v == "1"
+        elif k == "attn":
+            changes["attn_impl"] = v
+        elif k == "kvblock":
+            changes["kv_block"] = int(v)
+        elif k == "nl":
+            changes["n_layers"] = int(v)   # depth-extrapolation calibration
+        elif k == "efsdp":
+            changes["expert_fsdp"] = int(v)
+        elif k == "opt":
+            changes["opt"] = v
+        elif k == "gq":
+            changes["moe_gather_quant"] = v == "1"
+        elif k == "a2a":
+            changes["moe_a2a"] = v == "1"
+        else:
+            raise ValueError(f"unknown variant key {k}")
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,199 @@
+"""Grouped-query attention with causal / sliding-window masks and KV cache.
+
+Sharding modes (chosen per-arch by the config, see DESIGN.md §3.2):
+  * "heads":    q-heads sharded over tp (requires n_heads % tp == 0); KV heads
+                replicated (GQA KV is small).
+  * "sequence": query positions sharded over tp (context parallelism) — used
+                when head counts don't divide the tp degree (llama4 40H,
+                gemma3 8H, smollm 9H on tp=16). K/V are all-gathered, scores
+                are (B, H, S/tp, S).
+The mode only changes sharding constraints — the math is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import Axes, apply_rope, dense_init
+
+NEG_INF = -2.0**30  # large-but-finite: keeps softmax well-defined on all-masked rows
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def attention_specs(axes: Axes, shard_mode: str, fsdp: bool = False) -> dict:
+    """PartitionSpec tree matching init_attention's output.
+
+    "heads": Megatron-style — wq column-sharded over tp, wo row-sharded; GQA
+    KV projections replicated (they are small and tp rarely divides n_kv).
+    "sequence": weights sharded the same way (the q-head dim still divides tp
+    times head groups at the matmul level); the *activation* constraints in
+    transformer.py move the sharding to the sequence axis for the attention
+    math itself.  FSDP additionally shards the first weight axis over dp.
+    """
+    tp = axes.tp
+    fs = tuple(axes.dp) if fsdp else None
+    return {"wq": P(fs, tp), "wk": P(fs, None), "wv": P(fs, None),
+            "wo": P(tp, fs)}
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KV, Dh)
+    v: jax.Array  # (B, S_max, KV, Dh)
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window: jax.Array | int
+          ) -> jax.Array:
+    """causal + optional sliding window; window<=0 means global (causal only).
+
+    q_pos: (Sq,), k_pos: (Sk,) absolute positions. Returns (Sq, Sk) bool.
+    """
+    causal = q_pos[:, None] >= k_pos[None, :]
+    dist = q_pos[:, None] - k_pos[None, :]
+    win = jnp.asarray(window, jnp.int32)
+    windowed = jnp.where(win > 0, dist < win, True)
+    return causal & windowed
+
+
+def _sdpa(q, k, v, mask, softcap: float = 0.0):
+    """q (B,Sq,H,Dh), k/v (B,Sk,KV,Dh) GQA scaled-dot-product, f32 softmax."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, sq, kv, groups, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask[None, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _sdpa_blockwise(q, k, v, q_pos, k_pos, window, softcap: float = 0.0,
+                    kv_block: int = 1024, extra_kmask=None,
+                    unroll: bool = False):
+    """FlashAttention-style streaming softmax over KV blocks (pure jnp).
+
+    Never materializes the (Sq, Skv) score matrix: a scan over KV blocks
+    carries the running (max, normalizer, weighted-accumulator).  This is the
+    beyond-paper memory optimization for the 32k prefill / train cells
+    (EXPERIMENTS.md §Perf): live attention memory drops from O(Sq*Skv) to
+    O(Sq*kv_block).
+
+    q (B,Sq,H,Dh); k/v (B,Skv,KV,Dh); q_pos (Sq,); k_pos (Skv,).
+    ``extra_kmask`` (Skv,) optionally invalidates cache slots.
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    groups = h // kvh
+    kv_block = min(kv_block, skv)
+    assert skv % kv_block == 0, "pad the KV length to the block size"
+    nb = skv // kv_block
+
+    qg = q.reshape(b, sq, kvh, groups, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    kb = k.reshape(b, nb, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(nb, kv_block)
+    emb = (extra_kmask.reshape(nb, kv_block) if extra_kmask is not None
+           else jnp.ones((nb, kv_block), bool))
+
+    def block(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, kp_blk, em_blk = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        msk = _mask(q_pos, kp_blk, window) & em_blk[None, :]
+        s = jnp.where(msk[None, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)                       # (b,kv,g,sq)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v_blk.dtype), v_blk)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, groups, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, groups, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, groups, sq, dh), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for i in range(nb):
+            carry, _ = block(carry, (kb[i], vb[i], kpb[i], emb[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0),
+                                      (kb, vb, kpb, emb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]         # (b,kv,g,sq,dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)
+    return out.astype(v.dtype)
+
+
+def attention_fwd(params: dict, x: jax.Array, positions: jax.Array,
+                  window: jax.Array | int, *, n_heads: int, n_kv_heads: int,
+                  head_dim: int, rope_base: float, softcap: float = 0.0,
+                  cache: KVCache | None = None,
+                  cache_pos: jax.Array | None = None,
+                  attn_impl: str = "dense", kv_block: int = 1024,
+                  unroll: bool = False):
+    """Full-sequence (training/prefill) or single-token (decode) attention.
+
+    x: (B, S, D). If ``cache`` is given, x is the new chunk (S=1 for decode);
+    K/V are written at ``cache_pos`` and attention runs against the cache.
+    attn_impl "blockwise" streams KV blocks with a running softmax (flash-
+    attention memory profile); "dense" materializes the score matrix.
+    Returns (out (B, S, D), new_cache).
+    """
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_base)
+    k = apply_rope(k, positions, rope_base)
+
+    if cache is None:
+        if attn_impl == "blockwise":
+            out = _sdpa_blockwise(q, k, v, positions,
+                                  positions.astype(jnp.int32), window,
+                                  softcap, kv_block, unroll=unroll)
+        else:
+            mask = _mask(positions, positions, window)
+            out = _sdpa(q, k, v, mask, softcap)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache_pos, axis=1)
+        new_cache = KVCache(ck, cv)
+        k_pos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        written = k_pos <= cache_pos + s - 1   # not-yet-written cache slots
+        if attn_impl == "blockwise":
+            out = _sdpa_blockwise(q, ck, cv, positions, k_pos, window,
+                                  softcap, kv_block, extra_kmask=written,
+                                  unroll=unroll)
+        else:
+            mask = _mask(positions, k_pos, window) & written[None, :]
+            out = _sdpa(q, ck, cv, mask, softcap)
+
+    out = out.reshape(b, s, n_heads * head_dim) @ params["wo"]
+    return out, new_cache

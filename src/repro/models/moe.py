@@ -1,0 +1,373 @@
+"""Mixture-of-Experts FFN with sort-free scatter dispatch (top-k, capacity).
+
+Dispatch strategy (DESIGN.md §3.2): tokens are routed with a scatter to a
+(E * capacity, D) buffer laid out expert-major — under pjit with the buffer
+sharded over tp on the expert axis this lowers to the expert-parallel
+all-to-all; no (T, E, capacity) one-hot einsum is ever materialized (GShard's
+dense dispatch is O(T*E*cap) memory — infeasible at 1M tokens x 128 experts).
+
+Position-in-expert is computed with a segmented cumsum over a stable argsort
+of expert assignments (O(T log T), fully vectorized). Tokens beyond capacity
+are dropped (standard switch behaviour); the aux load-balance loss keeps the
+drop rate low.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import Axes, dense_init
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype,
+             shared_expert: bool) -> dict:
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_gate": _expert_init(ks[1], n_experts, d_model, d_ff, dtype),
+        "w_up": _expert_init(ks[2], n_experts, d_model, d_ff, dtype),
+        "w_down": _expert_init(ks[3], n_experts, d_ff, d_model, dtype),
+    }
+    if shared_expert:
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[5], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[6], d_ff, d_model, dtype),
+        }
+    return p
+
+
+def _expert_init(key, e, d_in, d_out, dtype):
+    return (jax.random.normal(key, (e, d_in, d_out), jnp.float32)
+            / jnp.sqrt(d_in)).astype(dtype)
+
+
+def moe_specs(axes: Axes, shared_expert: bool, fsdp: bool = False,
+              expert_fsdp: int = -1) -> dict:
+    """Experts sharded over tp on the expert axis (expert parallelism).
+
+    ``expert_fsdp``: -1 follows ``fsdp``; 0 keeps expert weights tp-sharded
+    only (no per-layer dp all-gathers — the collective-term hillclimb)."""
+    tp = axes.tp
+    fs = tuple(axes.dp) if fsdp else None
+    efs = fs if expert_fsdp == -1 else (
+        tuple(axes.dp) if expert_fsdp else None)
+    p = {
+        "router": P(None, None),
+        "w_gate": P(tp, efs, None),
+        "w_up": P(tp, efs, None),
+        "w_down": P(tp, efs, None),
+    }
+    if shared_expert:
+        p["shared"] = {"w_gate": P(fs, tp), "w_up": P(fs, tp),
+                       "w_down": P(tp, fs)}
+    return p
+
+
+def _position_in_expert(expert_ids: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each routed slot among slots sent to the same expert.
+
+    expert_ids: (M,) int32. Stable argsort groups same-expert slots; position
+    = index within group, scattered back to the original slot order.
+    """
+    m = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(n_experts, dtype=expert_ids.dtype))
+    pos_sorted = jnp.arange(m, dtype=jnp.int32) - start[sorted_e]
+    inv = jnp.argsort(order)
+    return pos_sorted[inv]
+
+
+def moe_fwd(params: dict, x: jax.Array, *, n_experts: int, top_k: int,
+            capacity_factor: float, axes: Axes | None = None):
+    """x: (T, D) token-major. Returns (out (T, D), aux_loss scalar)."""
+    t, d = x.shape
+    cap = int(max(top_k * capacity_factor * t / n_experts, 4))
+
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, top_k)                    # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)        # renormalize
+
+    # switch-style aux load-balance loss
+    density = jnp.mean(jax.nn.one_hot(sel[:, 0], n_experts), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(density * router_mean)
+
+    # ---- scatter dispatch ------------------------------------------------
+    # destination buffer is (E, cap+1, D), expert-major and expert-sharded
+    # over tp from birth: the dp-sharded-token -> tp-sharded-expert scatter IS
+    # the expert-parallel all-to-all.  Slot ``cap`` is the drop slot.
+    flat_e = sel.reshape(-1).astype(jnp.int32)                 # (T*k,)
+    pos = _position_in_expert(flat_e, n_experts)               # (T*k,)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)
+    x_rep = jnp.repeat(x, top_k, axis=0)                       # (T*k, D)
+
+    def _c(a):
+        if axes is None:
+            return a
+        return jax.lax.with_sharding_constraint(a, P(axes.tp, None, None))
+
+    buf = _c(jnp.zeros((n_experts, cap + 1, d), x.dtype))
+    buf = _c(buf.at[flat_e, slot].set(x_rep))                  # (E, cap+1, D)
+
+    # ---- expert compute (grouped GEMMs on the MXU) -----------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y = _c(jnp.einsum("ecf,efd->ecd", h, params["w_down"]))    # (E, cap+1, D)
+
+    # ---- combine (gather back: tp-sharded experts -> dp-sharded tokens) ---
+    out_rep = y[flat_e, slot] * gate.reshape(-1, 1).astype(y.dtype)
+    out_rep = jnp.where(keep[:, None], out_rep, 0.0)
+    out = jnp.sum(out_rep.reshape(t, top_k, d), axis=1)
+
+    out = out.astype(x.dtype)   # gate is f32; don't promote the residual
+    if "shared" in params:
+        s = params["shared"]
+        out = out + (jax.nn.silu(x @ s["w_gate"]) * (x @ s["w_up"])) @ s["w_down"]
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel shard_map dispatch (the production path)
+# ---------------------------------------------------------------------------
+#
+# The pure-pjit scatter above is correct but GSPMD lowers the
+# dp-tokens -> tp-experts scatter catastrophically (it replicates the scatter
+# indices broadcast to (T*k, D) u32 and all-gathers it — 64 GiB/device at the
+# granite train_4k cell).  The production path makes the communication
+# explicit instead:
+#   * tokens stay dp-sharded and are REPLICATED across tp (they already are:
+#     activations are P(dp, None)),
+#   * each tp cell routes all its local tokens, keeps the (token, slot) pairs
+#     owned by ITS E/tp experts, and builds its (E_local, cap, D) buffer with
+#     a purely LOCAL scatter,
+#   * after the expert GEMMs each cell holds partial outputs for its experts'
+#     tokens; a psum over tp combines them (bytes = T_local * D * 4 — the
+#     same order as a bidirectional all-to-all at top_k ~ tp/2, and far
+#     simpler to reason about; see EXPERIMENTS.md §Perf for the measurement).
+# Capacity note: capacity becomes per-(dp-shard, expert) — exactly how
+# per-rank capacity works in deployed EP systems.
+
+
+def make_quantized_all_gather(axis_names, axis: int):
+    """int8-compressed weight all-gather (fwd) with exact transpose (bwd).
+
+    The FSDP expert-weight gathers dominate the MoE train collective term
+    (EXPERIMENTS.md §Perf); gathering int8 + per-(expert, column) scales
+    halves the wire bytes vs bf16 at <0.4% relative weight error.  Backward
+    is the exact transpose of a tiled all_gather (psum_scatter of the
+    cotangent) — gradients are unbiased (quantization treated as identity,
+    standard weight-quantized-forward practice).
+    """
+
+    @jax.custom_vjp
+    def qag(w_loc):
+        return _fwd_impl(w_loc)
+
+    def _fwd_impl(w_loc):
+        scale = jnp.max(jnp.abs(w_loc), axis=axis, keepdims=True) / 127.0
+        scale = scale + 1e-12
+        q = jnp.clip(jnp.round(w_loc / scale), -127, 127).astype(jnp.int8)
+        qg = jax.lax.all_gather(q, axis_names, axis=0, tiled=False)
+        sg = jax.lax.all_gather(scale, axis_names, axis=0, tiled=False)
+        deq = qg.astype(w_loc.dtype) * sg.astype(w_loc.dtype)
+        out = jnp.moveaxis(deq, 0, axis)       # (..., dp, D_loc, ...)
+        return out.reshape(w_loc.shape[:axis] + (-1,)
+                           + w_loc.shape[axis + 1:])
+
+    def fwd(w_loc):
+        return _fwd_impl(w_loc), None
+
+    def bwd(_, g):
+        return (jax.lax.psum_scatter(g, axis_names,
+                                     scatter_dimension=axis, tiled=True),)
+
+    qag.defvjp(fwd, bwd)
+    return qag
+
+
+def moe_fwd_a2a(params: dict, x: jax.Array, *, n_experts: int,
+                capacity_factor: float, axes: Axes, fsdp: bool = False,
+                gather_quant: bool = False):
+    """Top-1 expert-parallel dispatch via all_to_all (the §Perf iteration
+    that removes the per-layer (B, S, D) activation all-gather + psum of the
+    psum-combine path).
+
+    Tokens stay sharded over dp AND tp (sequence-parallel residual feeds in
+    with zero resharding); each cell routes its T/(dp·tp) tokens, buckets
+    them by destination tp cell (per-destination capacity), exchanges
+    buckets with ONE all_to_all, runs its experts, and a second all_to_all
+    returns outputs to the token owners.  Wire bytes per cell per direction:
+    tp·cap_d·D  ~=  cf·T_cell·D  — ~12x less than gather+psum at tp=16.
+    """
+    t, d = x.shape
+    mesh = axes.mesh
+    tp_n = mesh.shape[axes.tp]
+    dp_n = 1
+    for a in axes.dp:
+        dp_n *= mesh.shape[a]
+    t_cell = t // (dp_n * tp_n)
+    e_local = n_experts // tp_n
+    cap_d = int(max(capacity_factor * t_cell / tp_n, 4))     # per-dest slots
+    cap_e = int(max(capacity_factor * t_cell / e_local, 4))  # per-expert rows
+
+    def cell(x_loc, router, wg, wu, wd):
+        # x_loc (t_cell, D); weights (E_loc, D[/dp], F)
+        if fsdp:
+            if gather_quant:
+                qag = make_quantized_all_gather(axes.dp, axis=1)
+                wg_, wu_, wd_ = qag(wg), qag(wu), qag(wd)
+            else:
+                wg_ = jax.lax.all_gather(wg, axes.dp, axis=1, tiled=True)
+                wu_ = jax.lax.all_gather(wu, axes.dp, axis=1, tiled=True)
+                wd_ = jax.lax.all_gather(wd, axes.dp, axis=1, tiled=True)
+        else:
+            wg_, wu_, wd_ = wg, wu, wd
+
+        logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, sel = jax.lax.top_k(probs, 1)
+        sel = sel[:, 0].astype(jnp.int32)                     # (Tc,)
+        gate = jnp.ones_like(gate[:, 0])   # top-1 renormalized (== moe_fwd)
+        density = jnp.mean(jax.nn.one_hot(sel, n_experts), axis=0)
+        aux = n_experts * jnp.sum(density * jnp.mean(probs, axis=0))
+
+        # ---- bucket by destination tp cell ----------------------------
+        dest = sel // e_local                                 # (Tc,)
+        pos = _position_in_expert(dest, tp_n)
+        keep = pos < cap_d
+        slot = jnp.where(keep, pos, cap_d)
+        row = jnp.where(keep, dest, tp_n)
+        send = jnp.zeros((tp_n + 1, cap_d + 1, d), x_loc.dtype)
+        send = send.at[row, slot].set(x_loc)[:tp_n, :cap_d]
+        send_e = jnp.full((tp_n + 1, cap_d + 1), e_local, jnp.int32)
+        send_e = send_e.at[row, slot].set(sel % e_local)[:tp_n, :cap_d]
+
+        # ---- exchange: one all_to_all each way -------------------------
+        recv = jax.lax.all_to_all(send, axes.tp, 0, 0, tiled=False)
+        recv_e = jax.lax.all_to_all(send_e, axes.tp, 0, 0, tiled=False)
+        rflat = recv.reshape(tp_n * cap_d, d)
+        eflat = recv_e.reshape(tp_n * cap_d)                  # e_local = pad
+
+        # ---- local expert buffers --------------------------------------
+        pos_e = _position_in_expert(eflat, e_local + 1)
+        keep_e = (eflat < e_local) & (pos_e < cap_e)
+        erow = jnp.where(keep_e, eflat, e_local)
+        eslot = jnp.where(keep_e, pos_e, cap_e)
+        buf = jnp.zeros((e_local + 1, cap_e + 1, d), x_loc.dtype)
+        buf = buf.at[erow, eslot].set(rflat)[:e_local, :cap_e]
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg_)) * \
+            jnp.einsum("ecd,edf->ecf", buf, wu_)
+        y = jnp.einsum("ecf,efd->ecd", h, wd_)                # (E_loc,cap_e,D)
+
+        # ---- route back -------------------------------------------------
+        y_pad = jnp.pad(y, ((0, 1), (0, 1), (0, 0)))
+        y_slots = jnp.where(keep_e[:, None], y_pad[erow, eslot], 0.0)
+        back = jax.lax.all_to_all(
+            y_slots.reshape(tp_n, cap_d, d), axes.tp, 0, 0, tiled=False)
+        back_pad = jnp.pad(back, ((0, 1), (0, 1), (0, 0)))
+        out = back_pad[row, slot] * gate[:, None].astype(y.dtype)
+        out = jnp.where(keep[:, None], out, 0.0)
+        return out.astype(x_loc.dtype), aux[None]
+
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(axes.dp)
+    tok = dp + (axes.tp,)
+    fs = dp if fsdp else None
+    w_spec = P(axes.tp, fs, None)
+    out, aux = jax.shard_map(
+        cell, mesh=mesh,
+        in_specs=(P(tok, None), P(None, None), w_spec, w_spec, w_spec),
+        out_specs=(P(tok, None), P(tok)),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    out = out.astype(x.dtype)
+    if "shared" in params:
+        s = params["shared"]
+        out = out + (jax.nn.silu(x @ s["w_gate"]) * (x @ s["w_up"])) @ s["w_down"]
+    return out, jnp.mean(aux)
+
+
+def moe_fwd_sharded(params: dict, x: jax.Array, *, n_experts: int,
+                    top_k: int, capacity_factor: float, axes: Axes,
+                    fsdp: bool = False, expert_fsdp: int = -1,
+                    gather_quant: bool = False):
+    """x: (T, D) token-major, sharded P(dp, None). Requires axes.mesh."""
+    e_fsdp = fsdp if expert_fsdp == -1 else bool(expert_fsdp)
+    t, d = x.shape
+    mesh = axes.mesh
+    tp_n = mesh.shape[axes.tp]
+    dp_n = 1
+    for a in axes.dp:
+        dp_n *= mesh.shape[a]
+    t_local = t // dp_n
+    e_local = n_experts // tp_n
+    cap = int(max(capacity_factor * top_k * t_local / n_experts, 4))
+
+    def cell(x_loc, router, wg, wu, wd):
+        # x_loc (T_local, D); wg/wu/wd (E_local, D[/dp], F)
+        if e_fsdp:
+            if gather_quant:
+                qag = make_quantized_all_gather(axes.dp, axis=1)
+                wg, wu, wd = qag(wg), qag(wu), qag(wd)
+            else:
+                wg = jax.lax.all_gather(wg, axes.dp, axis=1, tiled=True)
+                wu = jax.lax.all_gather(wu, axes.dp, axis=1, tiled=True)
+                wd = jax.lax.all_gather(wd, axes.dp, axis=1, tiled=True)
+        ti = jax.lax.axis_index(axes.tp)
+        e0 = ti * e_local
+
+        logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, sel = jax.lax.top_k(probs, top_k)               # (T_loc, k)
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+        density = jnp.mean(jax.nn.one_hot(sel[:, 0], n_experts), axis=0)
+        aux = n_experts * jnp.sum(density * jnp.mean(probs, axis=0))
+
+        flat_e = sel.reshape(-1).astype(jnp.int32)            # (T_loc*k,)
+        mine = (flat_e >= e0) & (flat_e < e0 + e_local)
+        eloc = jnp.where(mine, flat_e - e0, e_local)          # sentinel bucket
+        pos = _position_in_expert(eloc, e_local + 1)
+        keep = mine & (pos < cap)
+        slot = jnp.where(keep, pos, cap)
+        erow = jnp.where(keep, eloc, e_local)
+        x_rep = jnp.repeat(x_loc, top_k, axis=0)
+
+        buf = jnp.zeros((e_local + 1, cap + 1, d), x_loc.dtype)
+        buf = buf.at[erow, slot].set(x_rep)                   # LOCAL scatter
+        buf = buf[:e_local, :cap]                             # (E_loc, cap, D)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * \
+            jnp.einsum("ecd,edf->ecf", buf, wu)
+        y = jnp.einsum("ecf,efd->ecd", h, wd)                 # (E_loc, cap, D)
+
+        y_pad = jnp.pad(y, ((0, 1), (0, 1), (0, 0)))
+        out_rep = y_pad[erow, slot] * gate.reshape(-1, 1).astype(y.dtype)
+        out_rep = jnp.where(keep[:, None], out_rep, 0.0)
+        partial = jnp.sum(out_rep.reshape(t_local, top_k, d), axis=1)
+        out = jax.lax.psum(partial, axes.tp)                  # combine
+        return out.astype(x_loc.dtype), aux[None]
+
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(axes.dp)
+    fs = dp if e_fsdp else None
+    w_spec = P(axes.tp, fs, None)
+    out, aux = jax.shard_map(
+        cell, mesh=mesh,
+        in_specs=(P(dp, None), P(None, None), w_spec, w_spec, w_spec),
+        out_specs=(P(dp, None), P((dp + (axes.tp,)))),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    out = out.astype(x.dtype)
+    if "shared" in params:
+        s = params["shared"]
+        out = out + (jax.nn.silu(x @ s["w_gate"]) * (x @ s["w_up"])) @ s["w_down"]
+    return out, jnp.mean(aux)

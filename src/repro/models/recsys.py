@@ -1,0 +1,316 @@
+"""RecSys models: DLRM, AutoInt, Wide&Deep, MIND (+ two-tower retrieval).
+
+Common substrate: `embedding_bag` — JAX has no native EmbeddingBag, so lookup
+is take + weighted sum (and the Pallas scalar-prefetch kernel on TPU, see
+kernels/embedding_bag.py).  Tables are row-sharded over the tp axis (rows
+padded to cfg.row_pad_to); the lookup of globally-indexed ids from row-sharded
+tables lowers to the standard gather + AllToAll under GSPMD.
+
+The paper's technique plugs in at `retrieval_cand`: the 1M-candidate scoring
+is served either brute-force (fused matmul_topk kernel) or through the
+random-partition-forest index (core/) — benchmarked against each other in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import Axes, dense_init
+
+
+def _pad_rows(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _mlp_init(key, dims: tuple[int, ...], dtype=jnp.float32) -> list:
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": dense_init(ks[i], dims[i], dims[i + 1], dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp_specs(dims: tuple[int, ...], shard_wide: Optional[str]) -> list:
+    out = []
+    for i in range(len(dims) - 1):
+        # shard the widest layers' columns over tp; keep small ones replicated
+        big = shard_wide is not None and dims[i + 1] >= 512
+        out.append({"w": P(None, shard_wide if big else None), "b": P(None)})
+    return out
+
+
+def _mlp_fwd(layers: list, x: jax.Array, final_act: bool = False) -> jax.Array:
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """take + weighted segment-sum bag. ids (B, H) -> (B, D)."""
+    rows = table[ids]                                   # (B, H, D)
+    if weights is None:
+        return jnp.sum(rows, axis=1)
+    return jnp.sum(rows * weights[..., None], axis=1)
+
+
+def init_tables(key, cfg: RecsysConfig, dtype=jnp.float32) -> list:
+    ks = jax.random.split(key, len(cfg.table_sizes))
+    return [
+        (jax.random.normal(ks[i], (_pad_rows(v, cfg.row_pad_to),
+                                   cfg.embed_dim), jnp.float32)
+         / np.sqrt(cfg.embed_dim)).astype(dtype)
+        for i, v in enumerate(cfg.table_sizes)
+    ]
+
+
+def table_specs(cfg: RecsysConfig, axes: Axes) -> list:
+    """Row-shard big tables over tp; replicate small ones (< 16k rows)."""
+    return [P(axes.tp, None) if v >= 16384 else P(None, None)
+            for v in cfg.table_sizes]
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091, MLPerf config)
+# ---------------------------------------------------------------------------
+
+
+def init_dlrm(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "tables": init_tables(k1, cfg),
+        "bot_mlp": _mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top_mlp": _mlp_init(k3, (_dlrm_top_in(cfg),) + cfg.top_mlp),
+    }
+
+
+def _dlrm_top_in(cfg: RecsysConfig) -> int:
+    f = cfg.n_sparse + 1
+    return f * (f - 1) // 2 + cfg.embed_dim
+
+
+def dlrm_specs(cfg: RecsysConfig, axes: Axes) -> dict:
+    return {
+        "tables": table_specs(cfg, axes),
+        "bot_mlp": _mlp_specs((cfg.n_dense,) + cfg.bot_mlp, axes.tp),
+        "top_mlp": _mlp_specs((_dlrm_top_in(cfg),) + cfg.top_mlp, axes.tp),
+    }
+
+
+def dlrm_fwd(params: dict, dense: jax.Array, sparse_ids: jax.Array) -> jax.Array:
+    """dense (B, n_dense), sparse_ids (B, n_sparse) -> logits (B,)."""
+    b = dense.shape[0]
+    x0 = _mlp_fwd(params["bot_mlp"], dense, final_act=True)   # (B, D)
+    embs = [t[sparse_ids[:, i]] for i, t in enumerate(params["tables"])]
+    z = jnp.stack([x0] + embs, axis=1)                        # (B, F, D)
+    g = jnp.einsum("bfd,bgd->bfg", z, z)                      # pairwise dots
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    inter = g[:, iu, ju]                                      # (B, F(F-1)/2)
+    top_in = jnp.concatenate([x0, inter], axis=1)
+    return _mlp_fwd(params["top_mlp"], top_in)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# AutoInt (arXiv:1810.11921)
+# ---------------------------------------------------------------------------
+
+
+def init_autoint(key, cfg: RecsysConfig) -> dict:
+    ks = jax.random.split(key, 3 + cfg.n_attn_layers)
+    d_attn = cfg.d_attn
+    layers = []
+    for i in range(cfg.n_attn_layers):
+        k = jax.random.split(ks[3 + i], 4)
+        d_in = cfg.embed_dim if i == 0 else d_attn
+        layers.append({
+            "wq": dense_init(k[0], d_in, cfg.n_attn_heads * d_attn, jnp.float32),
+            "wk": dense_init(k[1], d_in, cfg.n_attn_heads * d_attn, jnp.float32),
+            "wv": dense_init(k[2], d_in, cfg.n_attn_heads * d_attn, jnp.float32),
+            "wo": dense_init(k[3], cfg.n_attn_heads * d_attn, d_attn, jnp.float32),
+            "res": dense_init(jax.random.fold_in(k[3], 1), d_in, d_attn,
+                              jnp.float32),
+        })
+    return {
+        "tables": init_tables(ks[0], cfg),
+        "attn": layers,
+        "out_w": dense_init(ks[1], cfg.n_sparse * d_attn, 1, jnp.float32),
+    }
+
+
+def autoint_specs(cfg: RecsysConfig, axes: Axes) -> dict:
+    layer = {"wq": P(None, None), "wk": P(None, None), "wv": P(None, None),
+             "wo": P(None, None), "res": P(None, None)}
+    return {"tables": table_specs(cfg, axes),
+            "attn": [dict(layer) for _ in range(cfg.n_attn_layers)],
+            "out_w": P(None, None)}
+
+
+def autoint_fwd(params: dict, sparse_ids: jax.Array) -> jax.Array:
+    """sparse_ids (B, F) -> logits (B,)."""
+    x = jnp.stack([t[sparse_ids[:, i]]
+                   for i, t in enumerate(params["tables"])], axis=1)  # (B,F,D)
+    for l in params["attn"]:
+        h = l  # alias
+        b, f, d_in = x.shape
+        d_attn = h["wo"].shape[1]
+        heads = h["wq"].shape[1] // d_attn
+        q = (x @ h["wq"]).reshape(b, f, heads, d_attn)
+        k = (x @ h["wk"]).reshape(b, f, heads, d_attn)
+        v = (x @ h["wv"]).reshape(b, f, heads, d_attn)
+        scores = jnp.einsum("bfhd,bghd->bhfg", q, k) / np.sqrt(d_attn)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", probs, v).reshape(b, f, -1)
+        x = jax.nn.relu(o @ h["wo"] + x @ h["res"])
+    b = x.shape[0]
+    return (x.reshape(b, -1) @ params["out_w"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep (arXiv:1606.07792)
+# ---------------------------------------------------------------------------
+
+
+def init_widedeep(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wide_cfg = RecsysConfig(**{**cfg.__dict__, "embed_dim": 1})
+    return {
+        "tables": init_tables(k1, cfg),
+        "wide_tables": init_tables(k2, wide_cfg),
+        "deep_mlp": _mlp_init(k3, (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp
+                              + (1,)),
+    }
+
+
+def widedeep_specs(cfg: RecsysConfig, axes: Axes) -> dict:
+    return {
+        "tables": table_specs(cfg, axes),
+        "wide_tables": table_specs(cfg, axes),
+        "deep_mlp": _mlp_specs((cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,),
+                               axes.tp),
+    }
+
+
+def widedeep_fwd(params: dict, sparse_ids: jax.Array) -> jax.Array:
+    embs = jnp.concatenate([t[sparse_ids[:, i]]
+                            for i, t in enumerate(params["tables"])], axis=1)
+    deep = _mlp_fwd(params["deep_mlp"], embs)[:, 0]
+    wide = sum(t[sparse_ids[:, i]][:, 0]
+               for i, t in enumerate(params["wide_tables"]))
+    return deep + wide
+
+
+# ---------------------------------------------------------------------------
+# MIND: multi-interest capsule routing (arXiv:1904.08030)
+# ---------------------------------------------------------------------------
+
+
+def init_mind(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "item_embed": (jax.random.normal(
+            k1, (_pad_rows(cfg.item_vocab, cfg.row_pad_to), d)) / np.sqrt(d)),
+        "bilinear": dense_init(k2, d, d, jnp.float32),   # B2I shared S matrix
+        "out_mlp": _mlp_init(k3, (d, 4 * d, d)),
+    }
+
+
+def mind_specs(cfg: RecsysConfig, axes: Axes) -> dict:
+    return {"item_embed": P(axes.tp, None), "bilinear": P(None, None),
+            "out_mlp": _mlp_specs((cfg.embed_dim, 4 * cfg.embed_dim,
+                                   cfg.embed_dim), None)}
+
+
+def _squash(s: jax.Array) -> jax.Array:
+    n2 = jnp.sum(s * s, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * s / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_user_fwd(params: dict, cfg: RecsysConfig, hist_ids: jax.Array,
+                  hist_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Behavior-to-Interest dynamic routing. hist_ids (B, H) -> (B, K, D)."""
+    u = params["item_embed"][hist_ids] @ params["bilinear"]   # (B, H, D)
+    if hist_mask is None:
+        hist_mask = jnp.ones(hist_ids.shape, u.dtype)
+    b, h, d = u.shape
+    k = cfg.n_interests
+    # fixed (shared) routing-logit init, as in the paper's shared-B variant.
+    # the few routing iterations are unrolled (static python loop) so the
+    # dry-run cost analysis counts them all (see LMConfig.unroll note).
+    blog = jnp.zeros((b, k, h), u.dtype)
+    v = None
+    for _ in range(cfg.capsule_iters):
+        c = jax.nn.softmax(blog, axis=1) * hist_mask[:, None, :]
+        s = jnp.einsum("bkh,bhd->bkd", c, u)
+        v = _squash(s)
+        blog = blog + jnp.einsum("bkd,bhd->bkh", v, u)
+    interests = v                                             # (B, K, D)
+    # H-layer MLP with residual (paper: one ReLU layer per interest)
+    return interests + _mlp_fwd(params["out_mlp"], interests)
+
+
+def mind_train_logits(params: dict, cfg: RecsysConfig, hist_ids: jax.Array,
+                      target_ids: jax.Array,
+                      hist_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Label-aware attention (pow=2) over interests -> logit vs target item."""
+    interests = mind_user_fwd(params, cfg, hist_ids, hist_mask)  # (B, K, D)
+    tgt = params["item_embed"][target_ids]                        # (B, D)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", interests, tgt) ** 2, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att, interests)
+    return jnp.sum(user * tgt, axis=-1)
+
+
+def mind_score_candidates(params: dict, cfg: RecsysConfig, hist_ids: jax.Array,
+                          cand: jax.Array,
+                          hist_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Retrieval scoring: max over interests of interest . candidate.
+
+    cand (N, D) -> scores (B, N). The brute-force path; the RPF index version
+    lives in serve/ann_serve.py.
+    """
+    interests = mind_user_fwd(params, cfg, hist_ids, hist_mask)  # (B, K, D)
+    scores = jnp.einsum("bkd,nd->bkn", interests, cand)
+    return jnp.max(scores, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# two-tower retrieval (substrate for the paper-integration example)
+# ---------------------------------------------------------------------------
+
+
+def init_two_tower(key, n_users: int, n_items: int, d: int = 64,
+                   hidden: int = 256) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "user_embed": jax.random.normal(ks[0], (n_users, d)) / np.sqrt(d),
+        "item_embed": jax.random.normal(ks[1], (n_items, d)) / np.sqrt(d),
+        "user_mlp": _mlp_init(ks[2], (d, hidden, d)),
+        "item_mlp": _mlp_init(ks[3], (d, hidden, d)),
+    }
+
+
+def two_tower_user(params, user_ids):
+    return _mlp_fwd(params["user_mlp"], params["user_embed"][user_ids])
+
+
+def two_tower_item(params, item_ids):
+    return _mlp_fwd(params["item_mlp"], params["item_embed"][item_ids])
+
+
+def two_tower_loss(params, user_ids, item_ids):
+    """In-batch sampled softmax (the standard two-tower objective)."""
+    u = two_tower_user(params, user_ids)
+    v = two_tower_item(params, item_ids)
+    logits = u @ v.T
+    labels = jnp.arange(u.shape[0])
+    return jnp.mean(
+        -jax.nn.log_softmax(logits, axis=-1)[jnp.arange(u.shape[0]), labels])

@@ -1,0 +1,453 @@
+"""Decoder-only transformer LM: dense / MoE / interleaved, scan-over-layers.
+
+Structure modes (static, derived from the config):
+  * "dense"     — scan over n_layers of (attn + SwiGLU FFN); per-layer sliding
+                  window sizes are scanned-over data (gemma3's 5:1 local:global
+                  pattern is an array, not a structural change).
+  * "moe"       — scan over n_layers of (attn + MoE FFN)          (granite)
+  * "dense_moe" — scan over n_layers/2 groups of [dense, moe]     (llama4)
+
+Params are stacked along the scan axis; remat wraps each block. All sharding
+is expressed as PartitionSpecs on params + with_sharding_constraint on the
+residual stream; pass axes=None (smoke tests / CPU) to skip constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.attention import KVCache
+from repro.models.layers import (Axes, dense_init, dtype_of, embed_init,
+                                 pad_vocab, rms_norm, softmax_cross_entropy)
+
+
+def structure(cfg: LMConfig) -> str:
+    if cfg.moe and cfg.moe_every == 2:
+        return "dense_moe"
+    if cfg.moe:
+        return "moe"
+    return "dense"
+
+
+def _constrain(x, axes: Optional[Axes], spec: P):
+    if axes is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg: LMConfig, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": {
+            "w_gate": dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "w_up": dense_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+            "w_down": dense_init(ks[3], cfg.d_ff, cfg.d_model, dtype),
+        },
+    }
+
+
+def _init_moe_block(key, cfg: LMConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "moe": moe_mod.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                dtype, cfg.shared_expert),
+    }
+
+
+def init_lm(key, cfg: LMConfig) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    vpad = cfg.padded_vocab
+    struct = structure(cfg)
+    if struct == "dense":
+        layer_keys = jax.random.split(ks[0], cfg.n_layers)
+        layers = jax.vmap(lambda k: _init_dense_block(k, cfg, dtype))(layer_keys)
+    elif struct == "moe":
+        layer_keys = jax.random.split(ks[0], cfg.n_layers)
+        layers = jax.vmap(lambda k: _init_moe_block(k, cfg, dtype))(layer_keys)
+    else:  # dense_moe: groups of [dense, moe]
+        n_groups = cfg.n_layers // 2
+        gk = jax.random.split(ks[0], n_groups)
+        layers = jax.vmap(lambda k: {
+            "dense": _init_dense_block(jax.random.fold_in(k, 0), cfg, dtype),
+            "moe": _init_moe_block(jax.random.fold_in(k, 1), cfg, dtype),
+        })(gk)
+    params = {
+        "embed": embed_init(ks[1], vpad, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[2], cfg.d_model, vpad, dtype,
+                                       scale=0.02)
+    return params
+
+
+def lm_param_specs(cfg: LMConfig, axes: Axes) -> dict:
+    """PartitionSpec tree matching init_lm's output."""
+    tp = axes.tp
+    fs = tuple(axes.dp) if cfg.fsdp else None
+    a_specs = attn_mod.attention_specs(axes, cfg.attn_shard, cfg.fsdp)
+    dense_block = {
+        "ln1": P(None), "attn": a_specs, "ln2": P(None),
+        "ffn": {"w_gate": P(fs, tp), "w_up": P(fs, tp), "w_down": P(tp, fs)},
+    }
+    moe_block = {
+        "ln1": P(None), "attn": a_specs, "ln2": P(None),
+        "moe": moe_mod.moe_specs(axes, cfg.shared_expert, cfg.fsdp,
+                                 cfg.expert_fsdp),
+    }
+
+    def stack(spec_tree):
+        return jax.tree.map(lambda s: P(None, *s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    struct = structure(cfg)
+    if struct == "dense":
+        layers = stack(dense_block)
+    elif struct == "moe":
+        layers = stack(moe_block)
+    else:
+        layers = {"dense": stack(dense_block), "moe": stack(moe_block)}
+    specs = {
+        "embed": P(tp, None),           # vocab-sharded (Megatron-style)
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, tp)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _cast(p, dtype):
+    """Cast a param subtree to the compute dtype (norm/router math re-upcasts
+    internally where precision matters)."""
+    return jax.tree.map(lambda a: a.astype(dtype), p)
+
+
+def _ffn(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def _attn_kwargs(cfg: LMConfig):
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_base=cfg.rope_base,
+                attn_impl=cfg.attn_impl, kv_block=cfg.kv_block,
+                unroll=cfg.unroll)
+
+
+def _act_spec(cfg: LMConfig, axes: Optional[Axes],
+              x: Optional[jax.Array] = None) -> P:
+    """Residual-stream sharding, degrading gracefully for non-divisible dims
+    (decode has S=1; long-context decode has B=1)."""
+    if axes is None:
+        return P()
+    dp = tuple(axes.dp)
+    bspec, sspec = dp, None
+    if x is not None and axes.mesh is not None:
+        dpn = 1
+        for a in dp:
+            dpn *= axes.mesh.shape[a]
+        if x.shape[0] % dpn:
+            bspec = None
+        if cfg.attn_shard == "sequence" \
+                and x.shape[1] % axes.mesh.shape[axes.tp] == 0:
+            sspec = axes.tp
+    elif cfg.attn_shard == "sequence":
+        sspec = axes.tp
+    return P(bspec, sspec, None)
+
+
+def _dense_block_fwd(p, x, positions, window, cfg: LMConfig,
+                     axes: Optional[Axes], cache=None, cache_pos=None):
+    p = _cast(p, x.dtype)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attn_mod.attention_fwd(
+        p["attn"], h, positions, window, softcap=cfg.logit_softcap,
+        cache=cache, cache_pos=cache_pos, **_attn_kwargs(cfg))
+    x = _constrain(x + a, axes, _act_spec(cfg, axes, x))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = _constrain(x + _ffn(p["ffn"], h), axes, _act_spec(cfg, axes, x))
+    return x, new_cache
+
+
+def _moe_block_fwd(p, x, positions, window, cfg: LMConfig,
+                   axes: Optional[Axes], cache=None, cache_pos=None):
+    p = _cast(p, x.dtype)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attn_mod.attention_fwd(
+        p["attn"], h, positions, window, softcap=cfg.logit_softcap,
+        cache=cache, cache_pos=cache_pos, **_attn_kwargs(cfg))
+    x = _constrain(x + a, axes, _act_spec(cfg, axes, x))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    b, s, d = h.shape
+    t_tokens = h.shape[0] * h.shape[1]
+    dpn = 1
+    if axes is not None and axes.mesh is not None:
+        for a_ in axes.dp:
+            dpn *= axes.mesh.shape[a_]
+    tpn = 1 if axes is None or axes.mesh is None else \
+        axes.mesh.shape[axes.tp]
+    if axes is not None and axes.mesh is not None and cfg.moe_a2a \
+            and cfg.top_k == 1 and t_tokens % (dpn * tpn) == 0:
+        # §Perf iteration: top-1 all_to_all dispatch — tokens stay dp x tp
+        # sharded end-to-end (no (B,S,D) gather / psum per layer)
+        out, aux = moe_mod.moe_fwd_a2a(
+            p["moe"], h.reshape(b * s, d), n_experts=cfg.n_experts,
+            capacity_factor=cfg.capacity_factor, axes=axes, fsdp=cfg.fsdp,
+            gather_quant=cfg.moe_gather_quant)
+    elif axes is not None and axes.mesh is not None \
+            and t_tokens % dpn == 0:
+        # production expert-parallel dispatch (explicit shard_map collectives)
+        out, aux = moe_mod.moe_fwd_sharded(
+            p["moe"], h.reshape(b * s, d), n_experts=cfg.n_experts,
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, axes=axes,
+            fsdp=cfg.fsdp, expert_fsdp=cfg.expert_fsdp,
+            gather_quant=cfg.moe_gather_quant)
+    else:
+        out, aux = moe_mod.moe_fwd(
+            p["moe"], h.reshape(b * s, d), n_experts=cfg.n_experts,
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, axes=axes)
+    x = _constrain(x + out.reshape(b, s, d), axes, _act_spec(cfg, axes, x))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig,
+            axes: Optional[Axes] = None) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, Vpad) f32, aux_loss scalar)."""
+    compute_dtype = dtype_of(cfg.compute_dtype)
+    x, aux = forward_hidden(params, tokens, cfg, axes)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"]).astype(compute_dtype)
+    logits = (x @ unembed).astype(jnp.float32)
+    if axes is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(tuple(axes.dp), None, axes.tp))
+    return logits, aux
+
+
+def forward_hidden(params: dict, tokens: jax.Array, cfg: LMConfig,
+                   axes: Optional[Axes] = None) -> tuple[jax.Array, jax.Array]:
+    """Like forward() but stops before the unembedding: (hidden, aux)."""
+    compute_dtype = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(compute_dtype)
+    x = _constrain(x, axes, _act_spec(cfg, axes, x))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows, jnp.int32)
+    struct = structure(cfg)
+    if struct == "dense":
+        def block(x, xs):
+            p, w = xs
+            x, _ = _dense_block_fwd(p, x, positions, w, cfg, axes)
+            return x, jnp.zeros((), jnp.float32)
+    elif struct == "moe":
+        def block(x, xs):
+            p, w = xs
+            x, _, aux = _moe_block_fwd(p, x, positions, w, cfg, axes)
+            return x, aux
+    else:
+        windows = windows.reshape(cfg.n_layers // 2, 2)
+
+        def block(x, xs):
+            p, w = xs
+            x, _ = _dense_block_fwd(p["dense"], x, positions, w[0], cfg, axes)
+            x, _, aux = _moe_block_fwd(p["moe"], x, positions, w[1], cfg, axes)
+            return x, aux
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    if cfg.unroll:
+        aux_sum = jnp.zeros((), jnp.float32)
+        n = windows.shape[0]
+        for i in range(n):
+            p_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux_i = block(x, (p_i, windows[i]))
+            aux_sum = aux_sum + aux_i
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux_sum
+    x, auxes = jax.lax.scan(block, x, (params["layers"], windows))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(auxes)
+
+
+def chunked_cross_entropy(x: jax.Array, unembed: jax.Array, labels: jax.Array,
+                          vocab_size: int, chunk: int,
+                          axes: Optional[Axes] = None,
+                          unroll: bool = False) -> jax.Array:
+    """CE without materializing (B, S, V) logits: scan over sequence chunks,
+    rematerializing each chunk's logits in the backward pass.  Essential for
+    200k-vocab x 1M-token training steps (DESIGN.md §7)."""
+    b, s, d = x.shape
+    n = s // chunk
+    vpad = unembed.shape[1]
+    neg = jnp.where(jnp.arange(vpad) < vocab_size, 0.0, -1e9)
+
+    xs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(tot, xc_lc):
+        xc, lc = xc_lc
+        logits = (xc @ unembed).astype(jnp.float32) + neg
+        if axes is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(tuple(axes.dp), None, axes.tp))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - ll), None
+
+    if unroll:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            total, _ = body(total, (xs[i], ls[i]))
+        return total / (b * s)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (b * s)
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig,
+            axes: Optional[Axes] = None, aux_weight: float = 0.01,
+            logit_chunk: int = 0):
+    """logit_chunk > 0 uses the chunked CE path (no (B,S,V) materialization)."""
+    if logit_chunk:
+        compute_dtype = dtype_of(cfg.compute_dtype)
+        x, aux = forward_hidden(params, batch["tokens"], cfg, axes)
+        unembed = (params["embed"].T if cfg.tie_embeddings
+                   else params["unembed"]).astype(compute_dtype)
+        ce = chunked_cross_entropy(x, unembed, batch["labels"],
+                                   cfg.vocab_size, logit_chunk, axes,
+                                   unroll=cfg.unroll)
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+    logits, aux = forward(params, batch["tokens"], cfg, axes)
+    # mask out padded vocab entries
+    vpad = cfg.padded_vocab
+    if vpad != cfg.vocab_size:
+        neg = jnp.where(jnp.arange(vpad) < cfg.vocab_size, 0.0, -1e9)
+        logits = logits + neg
+    mask = batch.get("mask")
+    ce = softmax_cross_entropy(logits, batch["labels"], mask)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token step against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, s_max: int, dtype=jnp.bfloat16
+               ) -> KVCache:
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_specs(cfg: LMConfig, axes: Axes) -> KVCache:
+    """KV cache sharded over sequence (tp) — decode reads dominate; splitting
+    S over tp gives each chip 1/tp of the cache-read bytes."""
+    spec = P(None, tuple(axes.dp), axes.tp, None, None)
+    return KVCache(spec, spec)
+
+
+def decode_step(params: dict, cache: KVCache, tokens: jax.Array,
+                pos: jax.Array, cfg: LMConfig, axes: Optional[Axes] = None,
+                last_only: bool = False) -> tuple[jax.Array, KVCache]:
+    """tokens (B, S) at absolute positions pos..pos+S-1 -> (logits, cache).
+
+    S=1 is the decode hot loop; S=seq_len with pos=0 is prefill (pass
+    last_only=True to only unembed the final position — unembedding a 32k
+    prefill against a 200k vocab would materialize TB-scale logits).
+
+    Activation constraints degrade gracefully for non-shardable dims
+    (see _act_spec); the shard_map MoE path is used whenever the token count
+    divides the dp size.
+    """
+    compute_dtype = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(compute_dtype)
+    positions = pos + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows, jnp.int32)
+    struct = structure(cfg)
+
+    if struct == "dense":
+        def block(x, xs):
+            p, w, c = xs
+            x, nc = _dense_block_fwd(p, x, positions, w, cfg, axes,
+                                     cache=c, cache_pos=pos)
+            return x, nc
+    elif struct == "moe":
+        def block(x, xs):
+            p, w, c = xs
+            x, nc, _ = _moe_block_fwd(p, x, positions, w, cfg, axes,
+                                      cache=c, cache_pos=pos)
+            return x, nc
+    else:
+        windows = windows.reshape(cfg.n_layers // 2, 2)
+
+        def block(x, xs):
+            p, w, c = xs
+            cd = jax.tree.map(lambda a: a[0], c)
+            cm = jax.tree.map(lambda a: a[1], c)
+            x, ncd = _dense_block_fwd(p["dense"], x, positions, w[0], cfg,
+                                      axes, cache=cd, cache_pos=pos)
+            x, ncm, _ = _moe_block_fwd(p["moe"], x, positions, w[1], cfg,
+                                       axes, cache=cm, cache_pos=pos)
+            nc = jax.tree.map(lambda a, b: jnp.stack([a, b]), ncd, ncm)
+            return x, nc
+
+    scan_cache = cache
+    if struct == "dense_moe":
+        scan_cache = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers // 2, 2, *a.shape[1:]), cache)
+
+    if cfg.unroll:
+        caches = []
+        for i in range(windows.shape[0]):
+            p_i = jax.tree.map(lambda a: a[i], params["layers"])
+            c_i = jax.tree.map(lambda a: a[i], scan_cache)
+            x, nc_i = block(x, (p_i, windows[i], c_i))
+            caches.append(nc_i)
+        new_cache = jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
+    else:
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], windows,
+                                               scan_cache))
+    if struct == "dense_moe":
+        new_cache = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_cache)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"]).astype(compute_dtype)
+    logits = (x @ unembed).astype(jnp.float32)
+    return logits, new_cache

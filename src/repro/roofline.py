@@ -1,0 +1,213 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+TPU v5e hardware constants (per chip):
+  peak bf16 compute: 197 TFLOP/s
+  HBM bandwidth:     819 GB/s
+  ICI per link:      ~50 GB/s
+
+Terms (all in seconds, PER DEVICE — XLA compiles one per-device SPMD program,
+so cost_analysis()'s flops/bytes are already per-device):
+  compute_s    = HLO_flops / peak
+  memory_s     = HLO_bytes_accessed / HBM_bw     (post-fusion operand traffic;
+                 an upper proxy for HBM bytes — documented in EXPERIMENTS.md)
+  collective_s = collective_bytes / ICI_link_bw  (sum of per-device result
+                 bytes of all all-gather/all-reduce/reduce-scatter/all-to-all/
+                 collective-permute ops)
+
+MODEL_FLOPS is the analytic useful work (6*N*D train / 2*N*D inference for
+LMs, analogous per-family formulas in launch/steps meta). The
+model_flops_ratio = MODEL_FLOPS / (HLO_flops * n_chips) catches
+remat/redundancy waste; roofline_fraction = ideal_time / bound, where
+ideal_time = MODEL_FLOPS / (chips * peak) and bound = max(three terms).
+
+Scan caveat: XLA cost_analysis counts a while-loop body ONCE regardless of
+trip count, so traffic terms must come from the ``unroll`` dry-run variants
+(layers/chunks as python loops); the scan variants give the honest
+memory_analysis. benchmarks/roofline_table.py merges the two.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ARTIFACT_DIR = os.path.abspath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "../../artifacts/dryrun"))
+
+
+def load_artifacts(directory: str = ARTIFACT_DIR) -> dict:
+    out = {}
+    for path in glob.glob(os.path.join(directory, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        key = (r["arch"], r["cell"], r["mesh"], r.get("variant", "base"))
+        out[key] = r
+    return out
+
+
+def analytic_model_bytes(arch: str, cell_name: str, kind: str) -> int:
+    """Analytic minimum HBM bytes for the step (TOTAL across chips):
+    the data that MUST move — params/optimizer traffic for training, active
+    params + KV cache for decode, catalog rows for retrieval, edge/node
+    features for GNNs.  Used for the memory side of the ideal-time floor."""
+    from repro.configs import get_arch
+    from repro.configs.base import LMConfig, MACEConfig, RecsysConfig
+    spec = get_arch(arch)
+    cfg = spec.config
+    cell = {c.name: c for c in spec.cells}[cell_name]
+    if isinstance(cfg, LMConfig):
+        pb = 2 if cfg.param_dtype == "bfloat16" else 4
+        params_b = cfg.param_count() * pb
+        act_b = 2 if cfg.compute_dtype == "bfloat16" else 4
+        if kind == "train":
+            # fwd read + bwd read + grad write + optimizer read/write (~2
+            # moments) + stored layer activations (write + read)
+            acts = (cell.global_batch * cell.seq_len * cfg.d_model
+                    * cfg.n_layers * act_b * 2)
+            return 6 * params_b + acts
+        cache_b = (cfg.n_layers * cell.global_batch * cell.seq_len
+                   * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+        if kind == "prefill":
+            return 2 * params_b + cache_b            # params + cache write
+        # decode: active params once + the visible cache read
+        active_b = params_b
+        if cfg.moe:
+            # only routed-active experts are read
+            active_frac = (cfg.param_count() and
+                           (cfg.param_count() - 0) )
+            from repro.launch.steps import _lm_meta  # reuse active calc
+            active_b = _lm_meta(cfg, cell, 1, "decode")["params_active"] * pb
+        win = cfg.layer_windows
+        vis = sum(min(w, cell.seq_len) if w else cell.seq_len for w in win)
+        cache_read = (cell.global_batch * vis * cfg.n_kv_heads
+                      * cfg.head_dim * 2 * 2)
+        return active_b + cache_read
+    if isinstance(cfg, MACEConfig):
+        # per-edge messages (write+read) dominate
+        from repro.launch.steps import build_cell  # not needed; use cell dims
+        n_edges = cell.n_edges or (cell.batch_nodes or 0) * 165
+        if cell.name == "molecule":
+            n_edges = cell.n_edges * cell.n_graphs
+        if cell.name == "minibatch_lg":
+            n_edges = cell.batch_nodes * 165
+        c = cfg.d_hidden
+        return int(n_edges) * c * 9 * 4 * 2 * cfg.n_layers * 3
+    if isinstance(cfg, RecsysConfig):
+        d = cfg.embed_dim
+        if kind == "retrieval":
+            return cell.n_candidates * d * 4         # scan the catalog once
+        rows = cfg.n_sparse if cfg.model != "mind" else cfg.hist_len
+        per_ex = rows * d * 4 * (3 if kind == "train" else 1)
+        mlp = sum(np.prod([a]) for a in [0]) if False else 0
+        return cell.batch * per_ex
+    return 0
+
+
+def roofline_terms(record: dict) -> dict:
+    """Three terms + bottleneck + model-flops ratio for one artifact.
+
+    memory_s_upper uses cost_analysis 'bytes accessed' (per-instruction
+    operand bytes post-fusion — a gross upper proxy on the CPU backend);
+    memory_s_lower uses the buffer-assignment sizes (arguments + outputs +
+    peak temps — every byte lives in HBM at least once).  The bound uses the
+    lower estimate; both are reported.
+    """
+    flops = record["cost"]["flops"]
+    byts = record["cost"]["bytes_accessed"]
+    coll = record["collectives"]["total_bytes"]
+    n_dev = record["n_devices"] if record["mesh"] == "multipod" else 256
+    mem = record["memory"]
+    # CPU-backend bf16 legalization: XLA-on-CPU upcasts bf16 tensors to f32
+    # before collectives and in buffers, inflating every byte count 2x vs the
+    # TPU program.  For archs whose params are bf16 (payloads ~all bf16) we
+    # apply the 0.5 correction; mixed-dtype archs are left uncorrected
+    # (conservative).  Verified by HLO inspection (EXPERIMENTS.md §Roofline).
+    corr = 1.0
+    try:
+        from repro.configs import get_arch
+        cfg = get_arch(record["arch"]).config
+        if getattr(cfg, "param_dtype", "") == "bfloat16":
+            corr = 0.5
+    except Exception:
+        pass
+    compute_s = flops / PEAK_FLOPS
+    memory_s_upper = corr * byts / HBM_BW
+    memory_s = corr * (mem["argument_bytes"] + mem["output_bytes"]
+                       + mem["temp_bytes"]) / HBM_BW
+    collective_s = corr * coll / ICI_BW
+    bound = max(compute_s, memory_s, collective_s, 1e-12)
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    model_flops = record["meta"].get("model_flops", 0)
+    try:
+        model_bytes = analytic_model_bytes(record["arch"], record["cell"],
+                                           record["meta"].get("kind", ""))
+    except Exception:
+        model_bytes = 0
+    ideal_s = max(model_flops / (n_dev * PEAK_FLOPS),
+                  model_bytes / (n_dev * HBM_BW))
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "memory_s_upper": memory_s_upper,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": model_flops,
+        "model_bytes": model_bytes,
+        "ideal_s": ideal_s,
+        "hlo_flops_total": flops * n_dev,
+        "model_flops_ratio": (model_flops / (flops * n_dev)
+                              if flops else 0.0),
+        "roofline_fraction": ideal_s / bound if bound else 0.0,
+        "temp_gib": corr * record["memory"]["temp_bytes"] / 2**30,
+        "fits_hbm": corr * (record["memory"]["temp_bytes"]
+                            + record["memory"]["argument_bytes"])
+        < 16 * 2**30,
+        "bf16_corrected": corr != 1.0,
+    }
+
+
+def merged_table(directory: str = ARTIFACT_DIR,
+                 mesh: str = "single") -> list[dict]:
+    """One row per (arch, cell): traffic from the unroll variant when
+    available, memory from the scan (base) variant."""
+    arts = load_artifacts(directory)
+    rows = []
+    cells = sorted({(a, c) for (a, c, m, v) in arts if m == mesh})
+    for arch, cell in cells:
+        base = arts.get((arch, cell, mesh, "base"))
+        unroll = arts.get((arch, cell, mesh, "unroll=1"))
+        src = unroll or base
+        if src is None:
+            continue
+        t = roofline_terms(src)
+        if base is not None:
+            t["temp_gib"] = base["memory"]["temp_bytes"] / 2**30
+            t["fits_hbm"] = (base["memory"]["temp_bytes"]
+                             + base["memory"]["argument_bytes"]) < 16 * 2**30
+        t["arch"], t["cell"], t["mesh"] = arch, cell, mesh
+        t["traffic_source"] = "unroll" if unroll else "scan(base)"
+        rows.append(t)
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<26} {'cell':<14} {'compute':>9} {'memory':>9} "
+           f"{'collect':>9} {'dom':>9} {'MF-ratio':>8} {'RL-frac':>8} "
+           f"{'temp':>8} {'src':>12}")
+    lines = [hdr, "-" * len(hdr)]
+    for t in rows:
+        lines.append(
+            f"{t['arch']:<26} {t['cell']:<14} {t['compute_s']*1e3:8.2f}m "
+            f"{t['memory_s']*1e3:8.2f}m {t['collective_s']*1e3:8.2f}m "
+            f"{t['dominant']:>9} {t['model_flops_ratio']:8.3f} "
+            f"{t['roofline_fraction']:8.3f} {t['temp_gib']:6.1f}G "
+            f"{t['traffic_source']:>12}")
+    return "\n".join(lines)

@@ -1,0 +1,44 @@
+"""End-to-end ANN serving: RPF index behind a dynamic batcher.
+
+This is the paper's system as a service: build the forest over a corpus,
+then serve batched k-NN queries.  Also provides the recsys retrieval bridge —
+MIND interest vectors -> RPF candidate pruning -> exact rerank (compared
+against brute-force fused matmul_topk in benchmarks).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.forest import ForestConfig
+from repro.core.service import AnnService
+from repro.serve.batching import DynamicBatcher
+
+
+def make_ann_server(db: np.ndarray, cfg: ForestConfig, k: int = 10,
+                    metric: str = "l2", max_batch: int = 128,
+                    max_wait_s: float = 0.002):
+    """Returns (service, batcher). Submit 1-D query vectors; get (d, ids)."""
+    service = AnnService(db, cfg, metric=metric)
+
+    def serve_batch(payloads: list) -> list:
+        q = np.stack(payloads)
+        d, i = service.query(q, k=k)
+        return [(d[j], i[j]) for j in range(len(payloads))]
+
+    batcher = DynamicBatcher(serve_batch, max_batch=max_batch,
+                             max_wait_s=max_wait_s).start()
+    return service, batcher
+
+
+def retrieval_via_index(service: AnnService, interests: np.ndarray,
+                        k: int = 100) -> tuple[np.ndarray, np.ndarray]:
+    """Multi-interest retrieval (MIND): query the index once per interest,
+    merge by max-score (= min inner-product distance)."""
+    b, n_int, d = interests.shape
+    flat = interests.reshape(b * n_int, d)
+    dists, ids = service.query(flat, k=k)
+    dists = dists.reshape(b, n_int * k)
+    ids = ids.reshape(b, n_int * k)
+    order = np.argsort(dists, axis=1)[:, :k]
+    return (np.take_along_axis(dists, order, axis=1),
+            np.take_along_axis(ids, order, axis=1))

@@ -1,0 +1,89 @@
+"""Dynamic request batching for the serving paths.
+
+Requests accumulate in a queue; a batch fires when either ``max_batch`` is
+reached or ``max_wait_s`` elapses with a non-empty queue — the standard
+continuous-batching front-end.  Fixed batch shapes (pad to max_batch) keep
+the jitted step cache warm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    payload: Any
+    event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    result: Any = None
+    enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+class DynamicBatcher:
+    def __init__(self, serve_batch_fn: Callable[[list], list],
+                 max_batch: int = 64, max_wait_s: float = 0.005):
+        """serve_batch_fn: list[payload] -> list[result] (padded inside)."""
+        self.fn = serve_batch_fn
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.q: "queue.Queue[Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self.stats = {"batches": 0, "requests": 0, "mean_batch": 0.0,
+                      "p99_latency_ms": 0.0}
+        self._latencies: list[float] = []
+
+    def start(self):
+        self._worker.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        self._worker.join(timeout=5)
+
+    def submit(self, payload) -> Request:
+        req = Request(payload)
+        self.q.put(req)
+        return req
+
+    def __call__(self, payload, timeout: float = 30.0):
+        req = self.submit(payload)
+        if not req.event.wait(timeout):
+            raise TimeoutError("serve request timed out")
+        return req.result
+
+    def _loop(self):
+        while not self._stop.is_set():
+            batch: list[Request] = []
+            try:
+                batch.append(self.q.get(timeout=0.05))
+            except queue.Empty:
+                continue
+            deadline = time.perf_counter() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self.q.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            results = self.fn([r.payload for r in batch])
+            now = time.perf_counter()
+            for r, res in zip(batch, results):
+                r.result = res
+                self._latencies.append((now - r.enqueue_t) * 1e3)
+                r.event.set()
+            self.stats["batches"] += 1
+            self.stats["requests"] += len(batch)
+            self.stats["mean_batch"] = (self.stats["requests"]
+                                        / self.stats["batches"])
+            if self._latencies:
+                self.stats["p99_latency_ms"] = float(
+                    np.percentile(self._latencies[-1000:], 99))

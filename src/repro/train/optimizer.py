@@ -1,0 +1,187 @@
+"""Optimizers from scratch (no optax in this environment).
+
+optax-style (init_fn, update_fn) pairs. AdamW supports configurable state
+dtype (bf16 m/v for the 400B config — DESIGN.md §3.2) and Adafactor provides
+the factored-second-moment option.  Schedules are plain callables step->lr.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, state)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr
+
+
+def constant_schedule(lr_val: float) -> Callable:
+    return lambda step: jnp.asarray(lr_val, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# global-norm clipping
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw(lr: Callable, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32,
+          max_grad_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        bc1 = 1 - b1**stepf
+        bc2 = 1 - b2**stepf
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            u = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr(step) * u).astype(p.dtype), mf.astype(state_dtype), \
+                vf.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamState(step, m, v)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; the low-memory option for 400B)
+# ---------------------------------------------------------------------------
+
+
+class FactorState(NamedTuple):
+    step: jax.Array
+    vr: dict   # row second-moment (or full v for <2D leaves)
+    vc: dict   # col second-moment (zeros for <2D leaves)
+
+
+def adafactor(lr: Callable, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0
+              ) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr0(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+                else jnp.zeros(p.shape, jnp.float32)
+
+        def vc0(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+        return FactorState(jnp.zeros((), jnp.int32),
+                           jax.tree.map(vr0, params),
+                           jax.tree.map(vc0, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        beta = 1.0 - stepf ** (-decay)
+
+        def upd(g, vr, vc, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                nvr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                nvc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = nvr / jnp.maximum(
+                    jnp.mean(nvr, axis=-1, keepdims=True), eps)
+                u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(nvc)[..., None, :]
+                          + eps)
+            else:
+                nvr = beta * vr + (1 - beta) * g2
+                nvc = vc
+                u = gf / (jnp.sqrt(nvr) + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr(step) * u).astype(p.dtype), nvr, nvc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), FactorState(step, pick(1), pick(2))
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: Callable, momentum: float = 0.9,
+         max_grad_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        upd = jax.tree.map(lambda m, p: (-lr(0) * m).astype(p.dtype),
+                           new_m, params)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,111 @@
+"""Train state pytree + step factories (pjit auto-parallel and shard_map DP)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.train import grad_compress
+from repro.train.optimizer import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+    residuals: Any = None      # error-feedback buffers (grad compression)
+
+
+def init_train_state(params, optimizer: Optimizer,
+                     compress: bool = False) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+        residuals=grad_compress.init_residuals(params) if compress else None,
+    )
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    donate: bool = True) -> Callable:
+    """pjit auto-parallel step: loss_fn(params, batch) -> (loss, metrics)."""
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(state.step + 1, params, opt_state,
+                               state.residuals)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def make_microbatched_train_step(loss_fn: Callable, optimizer: Optimizer,
+                                 n_micro: int) -> Callable:
+    """Gradient accumulation over n_micro microbatches (scan; memory bound =
+    one microbatch of activations). batch leaves: (n_micro, micro_bs, ...)."""
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        def micro(carry, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, mb)
+            acc = jax.tree.map(jnp.add, carry, grads)
+            return acc, (loss, metrics)
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            state.params)
+        grads, (losses, _) = jax.lax.scan(micro, zero, batch)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        return (TrainState(state.step + 1, params, opt_state,
+                           state.residuals),
+                {"loss": jnp.mean(losses)})
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_dp_train_step(loss_fn: Callable, optimizer: Optimizer, mesh: Mesh,
+                       dp_axis: str = "data", compress: bool = False
+                       ) -> Callable:
+    """Explicit shard_map DP step: per-shard grads + (optionally int8-EF
+    compressed) all-reduce. Params/opt replicated; batch sharded over dp."""
+    n_shards = mesh.shape[dp_axis]
+
+    def _step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        if compress:
+            grads, new_res = grad_compress.compressed_psum(
+                grads, state.residuals, dp_axis, n_shards)
+        else:
+            grads = jax.lax.pmean(grads, dp_axis)
+            new_res = state.residuals
+        loss = jax.lax.pmean(loss, dp_axis)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        return (TrainState(state.step + 1, params, opt_state, new_res),
+                {"loss": loss})
+
+    fwd = jax.shard_map(
+        _step, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), TrainState(0, 0, 0, 0),
+                               is_leaf=lambda x: x is None or isinstance(x, int)),
+                  P(dp_axis)),
+        out_specs=(jax.tree.map(lambda _: P(), TrainState(0, 0, 0, 0),
+                                is_leaf=lambda x: x is None or isinstance(x, int)),
+                   P()),
+        check_vma=False,
+    )
+    return jax.jit(fwd)

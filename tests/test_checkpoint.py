@@ -1,0 +1,76 @@
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.train.train_state import TrainState
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return TrainState(
+        step=jnp.asarray(7),
+        params={"w": jax.random.normal(k, (8, 4)),
+                "nested": {"b": jnp.arange(5, dtype=jnp.float32)}},
+        opt_state={"m": jnp.zeros((8, 4))},
+        residuals=None)
+
+
+def test_roundtrip_identity():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        s = _state()
+        ck.save(7, s, block=True)
+        restored, step = ck.restore(_state(seed=1))
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored.params["w"]),
+                                      np.asarray(s.params["w"]))
+        np.testing.assert_array_equal(
+            np.asarray(restored.params["nested"]["b"]),
+            np.asarray(s.params["nested"]["b"]))
+
+
+def test_async_save_and_wait():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(1, _state(), block=False)
+        ck.wait()
+        assert ck.latest_step() == 1
+
+
+def test_gc_keeps_latest():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, _state(), block=True)
+        assert ck.all_steps() == [3, 4]
+
+
+def test_atomicity_tmp_never_visible():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(5, _state(), block=True)
+        assert not any(p.endswith(".tmp") for p in os.listdir(d))
+
+
+def test_restore_missing_raises():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        with pytest.raises(FileNotFoundError):
+            ck.restore(_state())
+
+
+def test_restore_casts_dtype():
+    """Elastic restore: target dtype wins (e.g. bf16 -> f32 promotion)."""
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        s = _state()
+        s = s._replace(params=jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16), s.params))
+        ck.save(2, s, block=True)
+        restored, _ = ck.restore(_state())   # f32 target
+        assert restored.params["w"].dtype == jnp.float32

@@ -1,0 +1,51 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distances as dm
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(7, 33)).astype(np.float32)
+    db = rng.normal(size=(19, 33)).astype(np.float32)
+    return jnp.abs(jnp.asarray(q)), jnp.abs(jnp.asarray(db))
+
+
+def test_l2_matches_numpy(data):
+    q, db = data
+    got = np.asarray(dm.pairwise_l2_sq(q, db))
+    want = ((np.asarray(q)[:, None] - np.asarray(db)[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_chi2_matches_numpy(data):
+    q, db = data
+    got = np.asarray(dm.pairwise_chi2(q, db))
+    x, y = np.asarray(q)[:, None], np.asarray(db)[None]
+    want = ((x - y) ** 2 / (x + y + 1e-12)).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_consistent_with_pointwise(data):
+    q, db = data
+    for metric in ["l2", "chi2", "dot", "cosine"]:
+        pw = np.asarray(dm.PAIRWISE[metric](q, db))
+        pt = np.asarray(dm.METRICS[metric](q[:, None, :], db[None, :, :]))
+        np.testing.assert_allclose(pw, pt, rtol=1e-4, atol=1e-4)
+
+
+def test_chi2_properties(data):
+    q, _ = data
+    # identity: chi2(x, x) == 0; symmetry
+    self_d = np.asarray(dm.chi2(q, q))
+    np.testing.assert_allclose(self_d, 0.0, atol=1e-6)
+    a, b = q[0], q[1]
+    assert abs(float(dm.chi2(a, b)) - float(dm.chi2(b, a))) < 1e-5
+
+
+def test_normalize_rows(data):
+    q, _ = data
+    n = np.linalg.norm(np.asarray(dm.normalize_rows(q)), axis=1)
+    np.testing.assert_allclose(n, 1.0, rtol=1e-5)

@@ -1,0 +1,149 @@
+"""Invariants of the TPU-native level-synchronous forest builder."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Forest, ForestConfig, build_forest, exact_knn,
+                        gather_candidates, query_forest, recall_at_k,
+                        traverse)
+from repro.core.forest import forest_stats
+from repro.data.synthetic import clustered_gaussians
+
+N, D = 4000, 32
+
+
+@pytest.fixture(scope="module")
+def db():
+    return jnp.asarray(clustered_gaussians(N, D, n_clusters=16, seed=0))
+
+
+@pytest.fixture(scope="module")
+def forest(db):
+    cfg = ForestConfig(n_trees=8, capacity=12, split_ratio=0.3)
+    return build_forest(jax.random.key(0), db, cfg), cfg.resolved(N)
+
+
+def test_partition_complete(forest):
+    """Every DB point appears exactly once in every tree's leaf CSR."""
+    f, cfg = forest
+    perm = np.asarray(f.perm)
+    for l in range(perm.shape[0]):
+        assert sorted(perm[l]) == list(range(N))
+
+
+def test_leaf_counts_consistent(forest):
+    f, cfg = forest
+    counts = np.asarray(f.leaf_count)
+    child = np.asarray(f.child_base)
+    for l in range(counts.shape[0]):
+        leaves = child[l] < 0
+        assert counts[l][leaves].sum() == N          # completeness
+        assert (counts[l][~leaves] == 0).all()       # internals hold nothing
+
+
+def test_capacity_bound(forest):
+    """Paper §3: every leaf holds <= C points (no fat-leaf overflow here)."""
+    f, cfg = forest
+    stats = forest_stats(f, cfg, N)
+    assert stats["occ_max"] <= cfg.capacity
+    assert stats["overflow_points"] == 0
+
+
+def test_split_balance(forest):
+    """Each split sends >= floor(r * n) points to each child (Eq. 1 psi in
+    the [r, 1-r] percentile band)."""
+    f, cfg = forest
+    counts = np.asarray(f.leaf_count)
+    child = np.asarray(f.child_base)
+
+    def subtree_count(l, node):
+        if child[l, node] < 0:
+            return counts[l, node]
+        return subtree_count(l, child[l, node]) + \
+            subtree_count(l, child[l, node] + 1)
+
+    import sys
+    sys.setrecursionlimit(100000)
+    for l in range(counts.shape[0]):
+        stack = [0]
+        while stack:
+            n_ = stack.pop()
+            if child[l, n_] < 0:
+                continue
+            left, right = child[l, n_], child[l, n_] + 1
+            cl, cr = subtree_count(l, left), subtree_count(l, right)
+            tot = cl + cr
+            if tot > cfg.capacity:   # only nodes that actually split
+                assert min(cl, cr) >= int(np.floor(cfg.split_ratio * tot)) - 1
+            stack.extend([left, right])
+
+
+def test_traverse_reaches_leaves(forest, db):
+    f, cfg = forest
+    leaves = np.asarray(traverse(f, db[:100], cfg.max_depth))
+    child = np.asarray(f.child_base)
+    for l in range(leaves.shape[0]):
+        assert (child[l][leaves[l]] < 0).all()
+
+
+def test_db_point_lands_in_own_leaf(forest, db):
+    """Dropping a DB point down a tree must land in the leaf containing it."""
+    f, cfg = forest
+    leaves = np.asarray(traverse(f, db[:64], cfg.max_depth))   # (L, 64)
+    ids, mask = gather_candidates(f, jnp.asarray(leaves), cfg.leaf_pad)
+    ids, mask = np.asarray(ids), np.asarray(mask)
+    for q in range(64):
+        assert q in set(ids[q][mask[q]])
+
+
+def test_query_recall(forest, db):
+    f, cfg = forest
+    q = db[:128]
+    d, ids = query_forest(f, q, db, k=1, cfg=cfg)
+    td, tids = exact_knn(q, db, k=1)
+    rec = float(recall_at_k(ids, tids))
+    assert rec > 0.9, rec   # 8 trees on clustered data: self-NN easily found
+    # distances must match the true distance when the id matches
+    same = np.asarray(ids[:, 0]) == np.asarray(tids[:, 0])
+    # exact_knn uses the |q|^2-2qc+|c|^2 matmul expansion: ~1e-5 float noise
+    np.testing.assert_allclose(np.asarray(d[:, 0])[same],
+                               np.asarray(td[:, 0])[same], rtol=1e-3,
+                               atol=5e-5)
+
+
+def test_recall_improves_with_trees(db):
+    recalls = []
+    for l in [1, 4, 16]:
+        cfg = ForestConfig(n_trees=l, capacity=12, split_ratio=0.3)
+        f = build_forest(jax.random.key(1), db, cfg)
+        q = db[200:328] + 0.02 * jax.random.normal(jax.random.key(2),
+                                                   (128, D))
+        _, ids = query_forest(f, q, db, k=1, cfg=cfg)
+        _, tids = exact_knn(q, db, k=1)
+        recalls.append(float(recall_at_k(ids, tids)))
+    assert recalls[0] <= recalls[1] <= recalls[2] + 0.02
+    assert recalls[2] > recalls[0]
+
+
+def test_k2_projections(db):
+    """K=2 random sparse hyperplanes (paper §3.1 general case)."""
+    cfg = ForestConfig(n_trees=4, capacity=16, split_ratio=0.3, n_proj=2)
+    f = build_forest(jax.random.key(3), db, cfg)
+    rcfg = cfg.resolved(N)
+    stats = forest_stats(f, rcfg, N)
+    assert stats["occ_max"] <= 16
+    q = db[:64]
+    d, ids = query_forest(f, q, db, k=1, cfg=cfg)
+    _, tids = exact_knn(q, db, k=1)
+    assert float(recall_at_k(ids, tids)) > 0.7
+
+
+def test_chi2_query(db):
+    dbh = jnp.abs(db)
+    cfg = ForestConfig(n_trees=8, capacity=12)
+    f = build_forest(jax.random.key(4), dbh, cfg)
+    q = dbh[:64]
+    d, ids = query_forest(f, q, dbh, k=1, cfg=cfg, metric="chi2")
+    _, tids = exact_knn(q, dbh, k=1, metric="chi2")
+    assert float(recall_at_k(ids, tids)) > 0.9

@@ -1,0 +1,82 @@
+"""Paper-pseudocode (Fig. 1/3) transcription: semantics oracle tests, and
+agreement between the incremental and the level-synchronous builders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ForestConfig, build_forest, exact_knn, query_forest, \
+    recall_at_k
+from repro.core.forest_incremental import IncrementalForest
+from repro.data.synthetic import clustered_gaussians
+
+N, D = 1500, 24
+
+
+def _db():
+    return clustered_gaussians(N, D, n_clusters=12, seed=5)
+
+
+def test_incremental_invariants():
+    x = _db()
+    forest = IncrementalForest(x, n_trees=3, capacity=12, split_ratio=0.3,
+                               seed=0)
+    for tree in forest.trees:
+        leaves = tree.leaves()
+        pts = [p for lf in leaves for p in lf.points]
+        assert sorted(pts) == list(range(N))             # complete + disjoint
+        assert max(len(lf.points) for lf in leaves) <= 12
+        mean_d, max_d = tree.depth_stats()
+        assert mean_d > 3
+
+
+def test_incremental_retrieve_contains_self():
+    x = _db()
+    forest = IncrementalForest(x, n_trees=4, capacity=12, seed=1)
+    for i in range(0, 50, 7):
+        cand = forest.retrieve(x[i])
+        assert i in set(cand.tolist())
+
+
+def test_incremental_query_recall():
+    x = _db()
+    forest = IncrementalForest(x, n_trees=10, capacity=12, seed=2)
+    rng = np.random.default_rng(0)
+    q = x[:40] + 0.02 * rng.normal(size=(40, D)).astype(np.float32)
+    t_d, t_i = exact_knn(jnp.asarray(q), jnp.asarray(x), k=1)
+    hits = 0
+    for j in range(40):
+        _, ids = forest.query(q[j], k=1)
+        hits += int(ids[0] == int(t_i[j, 0]))
+    assert hits / 40 > 0.85
+
+
+def test_builders_agree_statistically():
+    """The two builders produce the same partition DISTRIBUTION: equal-L
+    forests should give recalls within a few points of each other, and
+    similar candidate-set sizes (the paper's accuracy-vs-cost operating
+    point does not depend on the build schedule)."""
+    x = _db()
+    L, C = 8, 12
+    rng = np.random.default_rng(1)
+    q = x[:60] + 0.02 * rng.normal(size=(60, D)).astype(np.float32)
+    _, t_i = exact_knn(jnp.asarray(q), jnp.asarray(x), k=1)
+
+    inc = IncrementalForest(x, n_trees=L, capacity=C, seed=3)
+    inc_hits = np.mean([
+        int(inc.query(q[j], k=1)[1][0] == int(t_i[j, 0])) for j in range(60)])
+    inc_cost = np.mean([inc.retrieve(q[j]).size for j in range(60)])
+
+    cfg = ForestConfig(n_trees=L, capacity=C, split_ratio=0.3)
+    f = build_forest(jax.random.key(6), jnp.asarray(x), cfg)
+    _, ids = query_forest(f, jnp.asarray(q), jnp.asarray(x), k=1, cfg=cfg)
+    bat_hits = float(recall_at_k(ids, t_i))
+
+    assert abs(inc_hits - bat_hits) < 0.15, (inc_hits, bat_hits)
+    # candidate cost within 2x of each other (same C, same L)
+    rcfg = cfg.resolved(N)
+    from repro.core.forest import gather_candidates, traverse
+    from repro.core.search import mask_duplicates
+    leaves = traverse(f, jnp.asarray(q), rcfg.max_depth)
+    cids, mask = gather_candidates(f, leaves, rcfg.leaf_pad)
+    bat_cost = float(mask_duplicates(cids, mask).sum(1).mean())
+    assert 0.5 < bat_cost / max(inc_cost, 1) < 2.0, (bat_cost, inc_cost)

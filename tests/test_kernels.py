@@ -1,0 +1,110 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode.
+
+Tie-breaking note: both kernel and ref break distance ties by smaller id, so
+ids are compared exactly; distances with assert_allclose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("b,n,d", [(8, 128, 32), (50, 700, 96), (3, 1030, 15)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("metric", ["l2", "dot"])
+def test_matmul_topk_sweep(b, n, d, dtype, metric):
+    q, db = _rand((b, d), dtype), _rand((n, d), dtype)
+    k = 7
+    pd, pi = ops.topk(q, db, k, metric=metric, mode="pallas")
+    rd, ri = ops.topk(q, db, k, metric=metric, mode="ref")
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(rd), **TOL[dtype])
+    if dtype == jnp.float32:
+        assert (np.asarray(pi) == np.asarray(ri)).mean() > 0.98
+
+
+@pytest.mark.parametrize("b,n,d", [(8, 128, 32), (16, 500, 64)])
+def test_chi2_topk_sweep(b, n, d):
+    q, db = jnp.abs(_rand((b, d), jnp.float32)), jnp.abs(_rand((n, d),
+                                                              jnp.float32))
+    pd, pi = ops.topk(q, db, 5, metric="chi2", mode="pallas")
+    rd, ri = ops.topk(q, db, 5, metric="chi2", mode="ref")
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(rd), rtol=2e-5,
+                               atol=2e-5)
+    assert (np.asarray(pi) == np.asarray(ri)).mean() > 0.98
+
+
+@pytest.mark.parametrize("b,m,d", [(4, 24, 16), (10, 96, 48)])
+@pytest.mark.parametrize("metric", ["l2", "chi2"])
+def test_distance_topk_sweep(b, m, d, metric):
+    q = jnp.abs(_rand((b, d), jnp.float32))
+    db = jnp.abs(_rand((200, d), jnp.float32))
+    ids = jnp.asarray(RNG.integers(0, 200, size=(b, m)).astype(np.int32))
+    mask = jnp.asarray(RNG.uniform(size=(b, m)) < 0.85)
+    cand = db[ids]
+    pd, pi = ops.rerank_candidates(q, cand, ids, mask, 5, metric=metric,
+                                   mode="pallas")
+    rd, ri = ops.rerank_candidates(q, cand, ids, mask, 5, metric=metric,
+                                   mode="ref")
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(rd), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_distance_topk_all_masked_row():
+    q = _rand((2, 8), jnp.float32)
+    cand = _rand((2, 6, 8), jnp.float32)
+    ids = jnp.zeros((2, 6), jnp.int32)
+    mask = jnp.zeros((2, 6), bool)
+    pd, pi = ops.rerank_candidates(q, cand, ids, mask, 3, mode="pallas")
+    assert np.isinf(np.asarray(pd)).all()
+    assert (np.asarray(pi) == -1).all()
+
+
+@pytest.mark.parametrize("b,h,v,d", [(4, 3, 50, 16), (9, 7, 211, 33)])
+def test_embedding_bag_sweep(b, h, v, d):
+    tab = _rand((v, d), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, v, size=(b, h)).astype(np.int32))
+    w = jnp.asarray((RNG.uniform(size=(b, h)) < 0.8).astype(np.float32))
+    pb = ops.embedding_bag(ids, w, tab, mode="pallas")
+    rb = ops.embedding_bag(ids, w, tab, mode="ref")
+    np.testing.assert_allclose(np.asarray(pb), np.asarray(rb), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_forest_traverse_kernel_matches_ref():
+    from repro.core import ForestConfig, build_forest
+    from repro.data.synthetic import clustered_gaussians
+    x = jnp.asarray(clustered_gaussians(1000, 16, seed=7))
+    cfg = ForestConfig(n_trees=3)
+    rcfg = cfg.resolved(1000)
+    f = build_forest(jax.random.key(0), x, cfg)
+    q = x[:40]
+    for t in range(3):
+        lp = ops.traverse_tree(f.proj_idx[t, :, 0], f.thresh[t],
+                               f.child_base[t], q, rcfg.max_depth,
+                               mode="pallas")
+        lr = ops.traverse_tree(f.proj_idx[t, :, 0], f.thresh[t],
+                               f.child_base[t], q, rcfg.max_depth, mode="ref")
+        assert (np.asarray(lp) == np.asarray(lr)).all()
+
+
+def test_topk_k_larger_than_block():
+    """k spanning several blocks exercises the running-merge path."""
+    q, db = _rand((4, 16), jnp.float32), _rand((300, 16), jnp.float32)
+    pd, pi = ops.topk(q, db, 20, mode="pallas")
+    rd, ri = ops.topk(q, db, 20, mode="ref")
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(rd), rtol=2e-5,
+                               atol=2e-5)
+    assert (np.asarray(pi) == np.asarray(ri)).mean() > 0.98

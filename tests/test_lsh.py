@@ -1,0 +1,40 @@
+import numpy as np
+import pytest
+
+from repro.core.lsh import CascadedLSH, LSHConfig, LSHIndex
+from repro.data.synthetic import clustered_gaussians
+
+
+@pytest.fixture(scope="module")
+def db():
+    x = clustered_gaussians(2000, 24, n_clusters=16, seed=4)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def test_lsh_self_retrieval(db):
+    idx = LSHIndex(db, LSHConfig(n_tables=8, n_bits=8, width=0.7))
+    hits = sum(int(j in idx.candidates(db[j])) for j in range(50))
+    assert hits >= 48   # a point hashes to its own bucket
+
+
+def test_cascade_recall_vs_tables(db):
+    q = db[:64] + 0.01 * np.random.default_rng(0).normal(size=(64, 24)) \
+        .astype(np.float32)
+    d = ((db[None] - q[:, None]) ** 2).sum(-1)
+    true1 = d.argmin(1)
+    recalls = []
+    for n_tables in (2, 16):
+        lsh = CascadedLSH(db, radii=[0.3, 0.6, 1.0], n_tables=n_tables,
+                          n_bits=10, seed=1)
+        hits = sum(int(lsh.query(q[j], k=1)[1][0] == true1[j])
+                   for j in range(64))
+        recalls.append(hits / 64)
+    assert recalls[1] >= recalls[0]
+    assert recalls[1] > 0.5
+
+
+def test_cascade_stops_when_enough(db):
+    lsh = CascadedLSH(db, radii=[0.2, 0.5, 1.5], n_tables=4, n_bits=10)
+    few = lsh.retrieve(db[0], min_candidates=1)
+    many = lsh.retrieve(db[0], min_candidates=500)
+    assert many.size >= few.size

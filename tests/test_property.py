@@ -1,0 +1,133 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ForestConfig, build_forest
+from repro.core.forest import forest_stats, gather_candidates, traverse
+from repro.core.search import mask_duplicates
+from repro.core.sharded_index import merge_topk_pairs
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(80, 400), d=st.integers(2, 24),
+       c=st.integers(4, 20), r=st.floats(0.1, 0.5),
+       seed=st.integers(0, 2**30))
+def test_forest_invariants(n, d, c, r, seed):
+    """For ANY data/config: complete disjoint partition, occupancy <= C."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    cfg = ForestConfig(n_trees=2, capacity=c, split_ratio=r)
+    f = build_forest(jax.random.key(seed % 1000), x, cfg)
+    perm = np.asarray(f.perm)
+    counts = np.asarray(f.leaf_count)
+    child = np.asarray(f.child_base)
+    for l in range(2):
+        assert sorted(perm[l]) == list(range(n))
+        leaves = child[l] < 0
+        assert counts[l][leaves].sum() == n
+        assert counts[l].max() <= c
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(100, 300), seed=st.integers(0, 2**30))
+def test_traversal_deterministic_and_self_finding(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    cfg = ForestConfig(n_trees=2, capacity=8)
+    rcfg = cfg.resolved(n)
+    f = build_forest(jax.random.key(1), x, cfg)
+    l1 = np.asarray(traverse(f, x[:20], rcfg.max_depth))
+    l2 = np.asarray(traverse(f, x[:20], rcfg.max_depth))
+    assert (l1 == l2).all()
+    ids, mask = gather_candidates(f, jnp.asarray(l1), rcfg.leaf_pad)
+    ids, mask = np.asarray(ids), np.asarray(mask)
+    for q in range(20):
+        assert q in set(ids[q][mask[q]])   # own leaf contains the point
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 8), m=st.integers(2, 50), seed=st.integers(0, 2**30))
+def test_mask_duplicates_idempotent_and_correct(b, m, seed):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, max(m // 2, 1), size=(b, m))
+                      .astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=(b, m)) < 0.8)
+    m1 = mask_duplicates(ids, mask)
+    m2 = mask_duplicates(ids, m1)
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+    # surviving ids are unique per row and cover the same id set
+    idsn, m1n, maskn = np.asarray(ids), np.asarray(m1), np.asarray(mask)
+    for r_ in range(b):
+        kept = idsn[r_][m1n[r_]]
+        assert len(set(kept)) == len(kept)
+        assert set(kept) == set(idsn[r_][maskn[r_]])
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 5), parts=st.integers(1, 4), k=st.integers(1, 8),
+       seed=st.integers(0, 2**30))
+def test_topk_merge_associative(b, parts, k, seed):
+    """Merging shard top-k lists in any grouping gives the global top-k."""
+    rng = np.random.default_rng(seed)
+    d = rng.uniform(size=(b, parts * k)).astype(np.float32)
+    i = rng.permutation(parts * k * b).reshape(b, parts * k).astype(np.int32)
+    all_d, all_i = merge_topk_pairs(jnp.asarray(d), jnp.asarray(i), k)
+    # pairwise merge in a different order
+    acc_d, acc_i = merge_topk_pairs(jnp.asarray(d[:, :k]),
+                                    jnp.asarray(i[:, :k]), k)
+    for p in range(1, parts):
+        cat_d = jnp.concatenate([acc_d, jnp.asarray(d[:, p * k:(p + 1) * k])],
+                                axis=1)
+        cat_i = jnp.concatenate([acc_i, jnp.asarray(i[:, p * k:(p + 1) * k])],
+                                axis=1)
+        acc_d, acc_i = merge_topk_pairs(cat_d, cat_i, k)
+    np.testing.assert_allclose(np.asarray(all_d), np.asarray(acc_d),
+                               rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 6), h=st.integers(1, 8), seed=st.integers(0, 2**30))
+def test_embedding_bag_linearity(b, h, seed):
+    """bag(w1 + w2) == bag(w1) + bag(w2) — the op is linear in weights."""
+    rng = np.random.default_rng(seed)
+    tab = jnp.asarray(rng.normal(size=(37, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 37, size=(b, h)).astype(np.int32))
+    w1 = jnp.asarray(rng.uniform(size=(b, h)).astype(np.float32))
+    w2 = jnp.asarray(rng.uniform(size=(b, h)).astype(np.float32))
+    lhs = ref.embedding_bag_ref(ids, w1 + w2, tab)
+    rhs = ref.embedding_bag_ref(ids, w1, tab) + ref.embedding_bag_ref(
+        ids, w2, tab)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**30))
+def test_rotation_invariance_mace(seed):
+    """MACE total energy is invariant under global rotation (E(3))."""
+    from repro.configs.base import MACEConfig
+    from repro.models.mace import init_mace, mace_fwd
+    import scipy.spatial.transform as sst
+    rng = np.random.default_rng(seed)
+    cfg = MACEConfig(n_layers=1, d_hidden=8, n_rbf=4, r_cut=3.0, n_species=4)
+    params = init_mace(jax.random.key(seed % 997), cfg)
+    n = 12
+    pos = rng.uniform(-1.5, 1.5, size=(n, 3)).astype(np.float32)
+    species = jnp.asarray(rng.integers(0, 4, size=n))
+    dmat = np.linalg.norm(pos[:, None] - pos[None], axis=-1)
+    s, r_ = np.where((dmat < 3.0) & (dmat > 0))
+    if len(s) == 0:
+        return
+    e1 = mace_fwd(params, cfg, species, jnp.asarray(pos), jnp.asarray(s),
+                  jnp.asarray(r_))["energy"]
+    rot = sst.Rotation.random(random_state=seed % 123).as_matrix().astype(
+        np.float32)
+    e2 = mace_fwd(params, cfg, species, jnp.asarray(pos @ rot.T),
+                  jnp.asarray(s), jnp.asarray(r_))["energy"]
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=2e-4,
+                               atol=2e-5)

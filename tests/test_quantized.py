@@ -1,0 +1,39 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ForestConfig, build_forest, exact_knn, query_forest, \
+    recall_at_k
+from repro.core.quantized import quantize_db, query_forest_quantized
+from repro.data.synthetic import clustered_gaussians
+
+
+def test_quantized_recall_matches_fp32():
+    db = jnp.asarray(clustered_gaussians(4000, 32, n_clusters=16, seed=2))
+    q = db[:96] + 0.01
+    cfg = ForestConfig(n_trees=16, capacity=12)
+    forest = build_forest(jax.random.key(0), db, cfg)
+    qdb = quantize_db(db)
+
+    d_fp, i_fp = query_forest(forest, q, db, k=5, cfg=cfg)
+    d_q, i_q = query_forest_quantized(forest, q, qdb, k=5, cfg=cfg, expand=4)
+    _, true_ids = exact_knn(q, db, k=5)
+    r_fp = float(recall_at_k(i_fp, true_ids))
+    r_q = float(recall_at_k(i_q, true_ids))
+    assert r_q > r_fp - 0.03, (r_q, r_fp)
+    # final distances are exact fp32 values
+    same = np.asarray(i_q[:, 0]) == np.asarray(i_fp[:, 0])
+    np.testing.assert_allclose(np.asarray(d_q[:, 0])[same],
+                               np.asarray(d_fp[:, 0])[same], rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_quantize_roundtrip_error_bounded():
+    db = jnp.asarray(clustered_gaussians(500, 16, seed=3))
+    qdb = quantize_db(db)
+    deq = qdb.q.astype(jnp.float32) * qdb.scale[:, None]
+    rel = np.abs(np.asarray(deq - db)) / (np.abs(np.asarray(db)) + 1e-6)
+    # int8 per-row quantization: max error ~ scale/2 per element
+    max_abs = np.abs(np.asarray(db)).max(axis=1)
+    err = np.abs(np.asarray(deq - db))
+    assert (err <= (max_abs[:, None] / 127.0) * 0.51 + 1e-6).all()

@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests for the paper's system (index -> serve)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.forest import ForestConfig
+from repro.core.service import AnnService
+from repro.data.synthetic import clustered_gaussians
+from repro.serve.ann_serve import make_ann_server
+from repro.serve.batching import DynamicBatcher
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return clustered_gaussians(3000, 32, n_clusters=24, seed=9)
+
+
+def test_service_query_and_insert(corpus):
+    svc = AnnService(corpus, ForestConfig(n_trees=16, capacity=12))
+    d, i = svc.query(corpus[:8], k=3)
+    assert i.shape == (8, 3)
+    assert (i[:, 0] == np.arange(8)).mean() > 0.8   # self is the 1-NN
+    # paper §5: incremental insert is immediately queryable
+    novel = corpus[0] + 0.5
+    nid = svc.insert(novel)
+    d, i = svc.query(novel[None], k=1)
+    assert int(i[0, 0]) == nid
+    assert d[0, 0] < 1e-9
+
+
+def test_service_rebuild_folds_overflow(corpus):
+    svc = AnnService(corpus[:500], ForestConfig(n_trees=8, capacity=12),
+                     rebuild_frac=0.02)   # rebuild after 10 inserts
+    for j in range(12):
+        svc.insert(corpus[1000 + j])
+    st = svc.stats()
+    assert st["n_static"] > 500            # rebuild happened
+    assert st["n_overflow"] < 12
+    d, i = svc.query(corpus[1005][None], k=1)
+    assert d[0, 0] < 1e-9                  # folded point still findable
+
+
+def test_dynamic_batcher_batches_and_answers(corpus):
+    calls = []
+
+    def fn(payloads):
+        calls.append(len(payloads))
+        return [p.sum() for p in payloads]
+
+    b = DynamicBatcher(fn, max_batch=16, max_wait_s=0.02).start()
+    results = {}
+
+    def client(j):
+        results[j] = b(corpus[j])
+
+    threads = [threading.Thread(target=client, args=(j,)) for j in range(32)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    b.stop()
+    assert len(results) == 32
+    for j in range(32):
+        np.testing.assert_allclose(results[j], corpus[j].sum(), rtol=1e-6)
+    assert max(calls) > 1                  # actual batching happened
+    assert b.stats["requests"] == 32
+
+
+def test_ann_server_end_to_end(corpus):
+    svc, batcher = make_ann_server(corpus, ForestConfig(n_trees=16),
+                                   k=3, max_wait_s=0.01)
+    d, i = batcher(corpus[5])
+    assert int(i[0]) == 5
+    batcher.stop()
+
+
+def test_watchdog_flags_stragglers():
+    from repro.train.train_loop import Watchdog
+    wd = Watchdog(factor=3.0, warmup=3)
+    flagged = []
+    for step, dt in enumerate([0.1] * 10 + [1.0] + [0.1] * 3):
+        if wd.observe(step, dt):
+            flagged.append(step)
+    assert flagged == [10]
+    # EMA not poisoned by the straggler: a normal step after it is not flagged
+    assert wd.ema < 0.2

@@ -1,0 +1,139 @@
+"""Transformer correctness: variants, decode-vs-forward consistency, masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as tr
+
+BASE = dict(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=257, remat=False,
+            param_dtype="float32", compute_dtype="float32")
+
+
+def _batch(cfg, b=2, s=16, seed=1):
+    tokens = jax.random.randint(jax.random.key(seed), (b, s), 0,
+                                cfg.vocab_size)
+    return {"tokens": tokens, "labels": tokens}
+
+
+@pytest.mark.parametrize("extra", [
+    {},                                                        # dense
+    {"sliding_window": 8, "global_every": 2},                  # gemma-style
+    {"moe": True, "n_experts": 8, "top_k": 2, "d_ff": 64},     # granite-style
+    {"moe": True, "n_experts": 8, "top_k": 1, "moe_every": 2,
+     "shared_expert": True, "d_ff": 64},                       # llama4-style
+    {"tie_embeddings": True},
+])
+def test_forward_and_grads_finite(extra):
+    cfg = LMConfig(name="t", **{**BASE, **extra})
+    params = tr.init_lm(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    (loss, m), grads = jax.value_and_grad(tr.loss_fn, has_aux=True)(
+        params, batch, cfg)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_decode_matches_forward():
+    """Teacher-forcing consistency: step-by-step decode logits == full
+    forward logits at every position (the KV-cache path is exact)."""
+    cfg = LMConfig(name="t", **BASE)
+    params = tr.init_lm(jax.random.key(0), cfg)
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.key(5), (b, s), 0, cfg.vocab_size)
+    full_logits, _ = tr.forward(params, tokens, cfg)
+
+    cache = tr.init_cache(cfg, b, s, jnp.float32)
+    outs = []
+    for t in range(s):
+        logits, cache = tr.decode_step(params, cache, tokens[:, t:t + 1],
+                                       jnp.asarray(t), cfg)
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_matches_forward_last():
+    cfg = LMConfig(name="t", **{**BASE, "sliding_window": 6,
+                                "global_every": 2})
+    params = tr.init_lm(jax.random.key(0), cfg)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.key(6), (b, s), 0, cfg.vocab_size)
+    full_logits, _ = tr.forward(params, tokens, cfg)
+    cache = tr.init_cache(cfg, b, s, jnp.float32)
+    logits, cache = tr.decode_step(params, cache, tokens,
+                                   jnp.zeros((), jnp.int32), cfg,
+                                   last_only=True)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full_logits[:, -1]), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_prefill_then_decode_continues():
+    """Prefill s tokens, then decode token s — must equal full forward."""
+    cfg = LMConfig(name="t", **BASE)
+    params = tr.init_lm(jax.random.key(0), cfg)
+    b, s = 2, 10
+    tokens = jax.random.randint(jax.random.key(7), (b, s + 1), 0,
+                                cfg.vocab_size)
+    full_logits, _ = tr.forward(params, tokens, cfg)
+    cache = tr.init_cache(cfg, b, s + 1, jnp.float32)
+    _, cache = tr.decode_step(params, cache, tokens[:, :s],
+                              jnp.zeros((), jnp.int32), cfg, last_only=True)
+    logits, _ = tr.decode_step(params, cache, tokens[:, s:s + 1],
+                               jnp.asarray(s), cfg)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full_logits[:, -1]), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_sliding_window_masks_past():
+    """With window w, moving a token far outside the window must not change
+    the current logits; moving one inside must."""
+    cfg = LMConfig(name="t", **{**BASE, "n_layers": 2, "sliding_window": 4})
+    params = tr.init_lm(jax.random.key(0), cfg)
+    s = 16
+    tok = jax.random.randint(jax.random.key(8), (1, s), 0, cfg.vocab_size)
+    base, _ = tr.forward(params, tok, cfg)
+    # perturb a token well outside every window of the last position
+    tok_far = tok.at[0, 2].set((tok[0, 2] + 1) % cfg.vocab_size)
+    far, _ = tr.forward(params, tok_far, cfg)
+    np.testing.assert_allclose(np.asarray(base[0, -1]),
+                               np.asarray(far[0, -1]), rtol=1e-4, atol=1e-4)
+    # perturb inside the window -> logits must change
+    tok_near = tok.at[0, s - 2].set((tok[0, s - 2] + 1) % cfg.vocab_size)
+    near, _ = tr.forward(params, tok_near, cfg)
+    assert np.abs(np.asarray(base[0, -1]) - np.asarray(near[0, -1])).max() \
+        > 1e-4
+
+
+def test_chunked_ce_matches_dense_ce():
+    cfg = LMConfig(name="t", **BASE)
+    params = tr.init_lm(jax.random.key(0), cfg)
+    batch = _batch(cfg, b=2, s=16)
+    l1, _ = tr.loss_fn(params, batch, cfg, logit_chunk=0)
+    l2, _ = tr.loss_fn(params, batch, cfg, logit_chunk=4)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    g1 = jax.grad(lambda p: tr.loss_fn(p, batch, cfg)[0])(params)
+    g2 = jax.grad(lambda p: tr.loss_fn(p, batch, cfg, logit_chunk=4)[0])(
+        params)
+    for a, b_ in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-4,
+                                   atol=2e-5)
+
+
+def test_causality():
+    """Future tokens never influence current logits."""
+    cfg = LMConfig(name="t", **{**BASE, "n_layers": 2})
+    params = tr.init_lm(jax.random.key(0), cfg)
+    tok = jax.random.randint(jax.random.key(9), (1, 12), 0, cfg.vocab_size)
+    base, _ = tr.forward(params, tok, cfg)
+    tok2 = tok.at[0, -1].set((tok[0, -1] + 3) % cfg.vocab_size)
+    pert, _ = tr.forward(params, tok2, cfg)
+    np.testing.assert_allclose(np.asarray(base[0, :-1]),
+                               np.asarray(pert[0, :-1]), rtol=1e-4,
+                               atol=1e-4)
