@@ -13,9 +13,18 @@ RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                             "bench_results.json")
 
 
-def timer(fn, *args, warmup: int = 1, iters: int = 3):
+def timer(fn, *args, warmup: int = 1, iters: int = 3, reduce: str = "mean"):
+    """Time ``fn(*args)``; ``reduce`` = mean (default) or min (noise-robust:
+    the minimum over iters is the standard scheduler-jitter-free estimate)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
+    if reduce == "min":
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best, out
     t0 = time.perf_counter()
     for _ in range(iters):
         out = jax.block_until_ready(fn(*args))

@@ -1,0 +1,150 @@
+"""Fused single-pass query pipeline vs the staged oracle: latency + traffic.
+
+The staged path (traverse -> gather_candidates -> mask_duplicates ->
+rerank_topk) round-trips the padded (B, M) candidate matrix and the gathered
+(B, M, d) candidate tensor through HBM between dispatches.  The fused path
+(core/pipeline.fused_query) runs the same math in ONE jit and streams
+candidate chunks through the fused gather+distance+top-k kernel, so the
+(B, M, d) tensor never materializes.
+
+Reported per workload:
+  * wall latency of both paths (jit-warm, block_until_ready),
+  * speedup = staged / fused  (acceptance floor: >= 1.0),
+  * the analytic HBM candidate-traffic model (DESIGN.md §4): staged moves
+    every padded candidate row 3x (gather read + write + kernel read); fused
+    moves each *valid* row once,
+  * id parity between the two paths (must be exact).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.fused_vs_staged [--smoke] [--mode auto]
+
+Writes artifacts/BENCH_fused_vs_staged.json (the perf-trajectory artifact CI
+uploads) and merges into artifacts/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core import ForestConfig, build_forest
+from repro.core.forest import gather_candidates, traverse
+from repro.core.pipeline import fused_query, staged_query
+from repro.data.synthetic import iss_like, mnist_like
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_fused_vs_staged.json")
+
+
+def traffic_model(b: int, m_padded: int, m_valid: float, d: int,
+                  bytes_per_elt: int = 4) -> dict:
+    """Candidate-tensor HBM bytes per query batch (DESIGN.md §4).
+
+    staged: XLA gather reads M_padded rows and writes the (B, M, d) tensor,
+    then the rerank kernel reads it back -> 3 crossings of every padded row.
+    fused: the kernel DMAs each valid row HBM->VMEM once; invalid (padded or
+    duplicate-masked) slots issue no DMA.
+    """
+    row = d * bytes_per_elt
+    staged = 3 * b * m_padded * row
+    fused = int(b * m_valid * row)
+    return {"staged_bytes": staged, "fused_bytes": fused,
+            "traffic_ratio": staged / max(fused, 1)}
+
+
+def run_workload(name: str, db: np.ndarray, q: np.ndarray, metric: str,
+                 n_trees: int, capacity: int, k: int, mode: str,
+                 iters: int = 5) -> dict:
+    db_j, q_j = jnp.asarray(db), jnp.asarray(q)
+    cfg = ForestConfig(n_trees=n_trees, capacity=capacity)
+    rcfg = cfg.resolved(db.shape[0])
+    forest = build_forest(jax.random.key(0), db_j, cfg)
+    jax.block_until_ready(forest.thresh)
+
+    staged_s, (sd, si) = timer(
+        lambda: staged_query(forest, q_j, db_j, k, cfg, metric=metric),
+        iters=iters, reduce="min")
+    fused_s, (fd, fi) = timer(
+        lambda: fused_query(forest, q_j, db_j, k, cfg, metric=metric,
+                            mode=mode),
+        iters=iters, reduce="min")
+
+    ids_match = bool((np.asarray(si) == np.asarray(fi)).all())
+    finite = np.isfinite(np.asarray(sd))
+    dist_err = float(np.max(np.abs(np.asarray(sd)[finite]
+                                   - np.asarray(fd)[finite]), initial=0.0))
+
+    # valid-candidate stats for the traffic model (post-dedup)
+    from repro.core.search import mask_duplicates
+    leaves = traverse(forest, q_j, rcfg.max_depth)
+    ids, mask = gather_candidates(forest, leaves, rcfg.leaf_pad)
+    m_valid = float(mask_duplicates(ids, mask).sum(1).mean())
+    b, m_padded = ids.shape
+
+    row = dict(
+        workload=name, metric=metric, mode=mode,
+        n_db=int(db.shape[0]), n_test=int(q.shape[0]), d=int(db.shape[1]),
+        n_trees=n_trees, m_padded=int(m_padded), m_valid=round(m_valid, 1),
+        staged_us=round(staged_s / q.shape[0] * 1e6, 2),
+        fused_us=round(fused_s / q.shape[0] * 1e6, 2),
+        speedup=round(staged_s / fused_s, 3),
+        ids_match=ids_match, dist_err=dist_err,
+        **traffic_model(b, m_padded, m_valid, db.shape[1]),
+    )
+    print(f"  {name:12s} staged={row['staged_us']:9.1f}us/q "
+          f"fused={row['fused_us']:9.1f}us/q speedup={row['speedup']:.2f}x "
+          f"traffic={row['traffic_ratio']:.1f}x ids_match={ids_match}")
+    return row
+
+
+def main(smoke: bool = False, mode: str = "auto") -> dict:
+    print(f"[fused_vs_staged] mode={mode} smoke={smoke}")
+    if smoke:
+        # small batch: serving-shaped, where the staged path's 4-dispatch
+        # overhead (the thing fusion removes) is a visible fraction of cost
+        workloads = [
+            ("fig4_mnist", *mnist_like(n=2000, n_test=32, seed=0)[::2], "l2",
+             10, 12),
+            ("fig5_iss", *iss_like(n=2000, n_test=32, seed=1)[::2], "chi2",
+             10, 12),
+        ]
+        k, iters = 5, 20
+    else:
+        workloads = [
+            ("fig4_mnist", *mnist_like(n=20000, n_test=512, seed=0)[::2],
+             "l2", 40, 12),
+            ("fig5_iss", *iss_like(n=20000, n_test=256, seed=1)[::2], "chi2",
+             40, 12),
+        ]
+        k, iters = 10, 5
+    rows = [run_workload(name, db, q, metric, n_trees=nt, capacity=c, k=k,
+                         mode=mode, iters=iters)
+            for name, db, q, metric, nt, c in workloads]
+    out = {"rows": rows, "mode": mode, "smoke": smoke,
+           "backend": jax.default_backend(),
+           "min_speedup": min(r["speedup"] for r in rows),
+           "all_ids_match": all(r["ids_match"] for r in rows)}
+
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  -> {os.path.relpath(ARTIFACT)} "
+          f"min_speedup={out['min_speedup']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny corpus for CI (seconds, not minutes)")
+    p.add_argument("--mode", default="auto",
+                   choices=["auto", "pallas", "ref"])
+    args = p.parse_args()
+    result = main(smoke=args.smoke, mode=args.mode)
+    from benchmarks.common import record
+    record({}, "fused_vs_staged", result)   # run.py records for harness runs

@@ -11,8 +11,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (fig4_mnist, fig5_iss, retrieval_compare,
-                        roofline_table, speedup_table, tree_stats)
+from benchmarks import (fig4_mnist, fig5_iss, fused_vs_staged,
+                        retrieval_compare, roofline_table, speedup_table,
+                        tree_stats)
 from benchmarks.common import csv_row, record
 
 
@@ -21,7 +22,8 @@ def main() -> None:
     p.add_argument("--paper-scale", action="store_true",
                    help="full N=60000/250736 runs (slow on CPU)")
     p.add_argument("--only", default="",
-                   help="comma list: fig4,fig5,speedup,tree,retrieval,roof")
+                   help="comma list: fig4,fig5,speedup,tree,retrieval,"
+                        "fused,roof")
     args = p.parse_args()
     fast = not args.paper_scale
     only = set(args.only.split(",")) if args.only else None
@@ -73,6 +75,15 @@ def main() -> None:
             "retrieval_rpf", r["rpf_us"],
             f"recall_vs_brute={r['recall_vs_brute']:.3f}"
             f";reduction={r['reduction']}x"))
+    if want("fused"):
+        r = fused_vs_staged.main(smoke=fast)
+        record(results, "fused_vs_staged", r)
+        worst = min(r["rows"], key=lambda x: x["speedup"])
+        rows.append(csv_row(
+            "fused_vs_staged", worst["fused_us"],
+            f"speedup={worst['speedup']}x"
+            f";traffic={worst['traffic_ratio']:.1f}x"
+            f";ids_match={r['all_ids_match']}"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

@@ -2,10 +2,13 @@
 from repro.core.forest import (Forest, ForestConfig, build_forest,
                                gather_candidates, query_forest, traverse)
 from repro.core.knn import exact_knn
-from repro.core.search import mask_duplicates, recall_at_k, rerank_topk
+from repro.core.pipeline import fused_query, rerank_fused, staged_query
+from repro.core.search import (mask_duplicates, merge_topk_pairs, recall_at_k,
+                               rerank_topk)
 
 __all__ = [
     "Forest", "ForestConfig", "build_forest", "gather_candidates",
     "query_forest", "traverse", "exact_knn", "mask_duplicates",
-    "recall_at_k", "rerank_topk",
+    "merge_topk_pairs", "recall_at_k", "rerank_topk",
+    "fused_query", "rerank_fused", "staged_query",
 ]

@@ -300,19 +300,21 @@ def gather_candidates(forest: Forest, leaves: jax.Array, pad: int
 
 
 def query_forest(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
-                 cfg: ForestConfig, metric: str = "l2",
-                 dedup: bool = True) -> tuple[jax.Array, jax.Array]:
-    """End-to-end query: traverse -> retrieve -> rerank -> top-k.
+                 cfg: ForestConfig, metric: str = "l2", dedup: bool = True,
+                 mode: str = "auto", chunk: int = 0
+                 ) -> tuple[jax.Array, jax.Array]:
+    """End-to-end query: traverse -> dedup -> rerank -> top-k.
+
+    Dispatches through the fused single-pass pipeline (core.pipeline) behind
+    the mode policy; the pre-fusion staged composition survives as
+    core.pipeline.staged_query (the oracle).
 
     Returns (dists (B, k), ids (B, k)); invalid slots have id -1 and dist +inf.
     """
-    cfg = cfg.resolved(db.shape[0])
-    leaves = traverse(forest, queries, cfg.max_depth)
-    cand_ids, mask = gather_candidates(forest, leaves, cfg.leaf_pad)
-    from repro.core.search import rerank_topk  # local import to avoid cycle
+    from repro.core import pipeline  # local import to avoid cycle
 
-    return rerank_topk(queries, cand_ids, mask, db, k=k, metric=metric,
-                       dedup=dedup)
+    return pipeline.fused_query(forest, queries, db, k, cfg, metric=metric,
+                                dedup=dedup, mode=mode, chunk=chunk)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,158 @@
+"""Fused single-pass forest query pipeline: traverse -> dedup -> rerank.
+
+The paper's query is "descend the L trees, union the leaf sets, rerank
+exactly" (§3).  The staged implementation runs that as four dispatches
+(traverse, gather_candidates, mask_duplicates, rerank_topk) with two fat HBM
+intermediates: the padded (B, M) candidate matrix and — dominating at
+M = L*C and paper-scale d — the gathered (B, M, d) candidate tensor.
+
+This module is the production path: ONE jit that
+  1. descends all L trees and assembles the (B, M) id matrix (cheap: int32),
+  2. masks duplicate ids (the paper's leaf-set union) in-graph,
+  3. streams candidate chunks through the fused gather+distance+top-k kernel
+     (kernels/fused_query.py) which DMAs DB rows HBM->VMEM tile-by-tile and
+     keeps the running (B, k) state on-chip.
+The (B, M, d) tensor never exists; per-candidate HBM traffic drops ~3x
+(gather-read + write + kernel-read  ->  one kernel-side read).  See
+DESIGN.md §4 for the traffic model.
+
+Chunk streaming serves two masters: it bounds the kernel's SMEM-resident id
+operand (B * chunk * 4 bytes) and, in ref mode, bounds the per-chunk gather
+to (B, chunk, d).  Chunks are merged with the associative top-k merge, so
+the result is invariant to chunking (ties broken toward earlier chunks,
+matching a single full-width top-k).
+
+The staged path stays available as ``staged_query`` — it is the oracle the
+fused path is tested against, never a dispatch target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.forest import Forest, ForestConfig, gather_candidates, traverse
+from repro.core.search import mask_duplicates, merge_topk_pairs, rerank_topk
+from repro.kernels import ops
+
+# The kernel keeps the (B, chunk) id matrix in SMEM; stay well under the
+# ~1 MB scalar-memory budget by default.
+SMEM_ID_BUDGET_BYTES = 512 * 1024
+
+
+def _pick_chunk(b: int, m: int, chunk: int, bm: int, k: int) -> int:
+    """Candidate-axis chunk width: explicit > SMEM-budget-derived.
+
+    Never below k (rounded up to a bm multiple): the per-chunk top-k needs
+    k columns to select from, matching the staged oracle for any k <= M.
+    """
+    floor = -(-k // bm) * bm
+    if chunk > 0:
+        return min(max(chunk, floor), m)
+    by_budget = SMEM_ID_BUDGET_BYTES // (4 * max(b, 1))
+    by_budget = max(bm, (by_budget // bm) * bm)
+    return min(m, max(by_budget, floor))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "mode", "dedup",
+                                             "chunk", "bq", "bm",
+                                             "rows_budget"))
+def rerank_fused(queries: jax.Array, cand_ids: jax.Array, mask: jax.Array,
+                 db: jax.Array, k: int, metric: str = "l2",
+                 mode: str = "auto", dedup: bool = True, chunk: int = 0,
+                 bq: int = 8, bm: int = 32, rows_budget: int = 0
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Chunk-streamed fused rerank: (B, M) candidate ids -> top-k.
+
+    Drop-in for search.rerank_topk but never materializes (B, M, d); the
+    per-chunk work dispatches through the mode policy (Pallas kernel on TPU
+    or forced, jnp reference otherwise).
+    """
+    if dedup:
+        mask = mask_duplicates(cand_ids, mask)
+    ids = jnp.where(mask, cand_ids, -1)
+    b, m = ids.shape
+
+    def stream(q_rows, id_rows):
+        """Chunk-streamed fused rerank over one slab of query rows."""
+        rows = q_rows.shape[0]
+        c = _pick_chunk(rows, m, chunk, bm, k)
+        if c >= m:
+            return ops.fused_rerank(q_rows, id_rows, db, k, metric=metric,
+                                    mode=mode, bq=bq, bm=bm)
+        m_pad = -m % c
+        idp = jnp.pad(id_rows, ((0, 0), (0, m_pad)), constant_values=-1)
+        n_chunks = (m + m_pad) // c
+
+        def body(carry, blk):
+            acc_d, acc_i = carry
+            ids_blk = jax.lax.dynamic_slice_in_dim(idp, blk * c, c, axis=1)
+            d, i = ops.fused_rerank(q_rows, ids_blk, db, k, metric=metric,
+                                    mode=mode, bq=bq, bm=bm)
+            cat_d = jnp.concatenate([acc_d, d], axis=1)
+            cat_i = jnp.concatenate([acc_i, i], axis=1)
+            return merge_topk_pairs(cat_d, cat_i, k), None
+
+        init = (jnp.full((rows, k), jnp.inf, jnp.float32),
+                jnp.full((rows, k), -1, jnp.int32))
+        (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+        return best_d, jnp.where(jnp.isinf(best_d), -1, best_i)
+
+    # slab the batch axis so the kernel's SMEM ids operand (rows*chunk*4 B)
+    # respects the budget even at minimum chunk width for any B
+    if rows_budget <= 0:
+        rows_budget = max(bq, SMEM_ID_BUDGET_BYTES // (4 * bm))
+    if b <= rows_budget:
+        return stream(queries, ids)
+    b_pad = -b % rows_budget
+    qp = jnp.pad(queries, ((0, b_pad), (0, 0)))
+    idp = jnp.pad(ids, ((0, b_pad), (0, 0)), constant_values=-1)
+    n_slab = (b + b_pad) // rows_budget
+    d, i = jax.lax.map(
+        lambda s: stream(s[0], s[1]),
+        (qp.reshape(n_slab, rows_budget, -1),
+         idp.reshape(n_slab, rows_budget, m)))
+    return d.reshape(-1, k)[:b], i.reshape(-1, k)[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_depth", "leaf_pad",
+                                             "metric", "mode", "dedup",
+                                             "chunk", "bq", "bm"))
+def _fused_query_jit(forest: Forest, queries: jax.Array, db: jax.Array,
+                     k: int, max_depth: int, leaf_pad: int, metric: str,
+                     mode: str, dedup: bool, chunk: int, bq: int, bm: int
+                     ) -> tuple[jax.Array, jax.Array]:
+    leaves = traverse(forest, queries, max_depth)
+    cand_ids, mask = gather_candidates(forest, leaves, leaf_pad)
+    return rerank_fused(queries, cand_ids, mask, db, k, metric=metric,
+                        mode=mode, dedup=dedup, chunk=chunk, bq=bq, bm=bm)
+
+
+def fused_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
+                cfg: ForestConfig, metric: str = "l2", dedup: bool = True,
+                mode: str = "auto", chunk: int = 0, bq: int = 8, bm: int = 32
+                ) -> tuple[jax.Array, jax.Array]:
+    """End-to-end single-jit forest query (the production hot path).
+
+    Returns (dists (B, k), ids (B, k)); invalid slots: dist +inf, id -1.
+    """
+    cfg = cfg.resolved(db.shape[0])
+    return _fused_query_jit(forest, queries, db, k, cfg.max_depth,
+                            cfg.leaf_pad, metric, mode, dedup, chunk, bq, bm)
+
+
+def staged_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
+                 cfg: ForestConfig, metric: str = "l2", dedup: bool = True
+                 ) -> tuple[jax.Array, jax.Array]:
+    """The pre-fusion pipeline, kept verbatim as the correctness oracle.
+
+    Four dispatches; materializes (B, M) ids + the (B, M, d) gathered
+    candidate tensor between stages.  Benchmarked against the fused path in
+    benchmarks/fused_vs_staged.py.
+    """
+    cfg = cfg.resolved(db.shape[0])
+    leaves = traverse(forest, queries, cfg.max_depth)
+    cand_ids, mask = gather_candidates(forest, leaves, cfg.leaf_pad)
+    return rerank_topk(queries, cand_ids, mask, db, k=k, metric=metric,
+                       dedup=dedup)

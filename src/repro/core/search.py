@@ -1,9 +1,12 @@
 """Candidate rerank, dedup and top-k — the exact-distance stage of the paper.
 
-The forest produces a padded candidate id matrix per query; this module computes
-exact distances to those candidates and returns the k best.  The compute is
-dispatched to the Pallas kernels on TPU and to their jnp references on CPU
-(see kernels/ops.py).
+The forest produces a padded candidate id matrix per query; this module
+computes exact distances to those candidates and returns the k best.
+
+Role note: ``rerank_topk`` here is the *staged* implementation — it gathers
+the full (B, M, d) candidate tensor before scoring and serves as the oracle
+the fused single-pass path (core/pipeline.py + kernels/fused_query.py) is
+validated against.  Production query paths dispatch through core.pipeline.
 """
 from __future__ import annotations
 
@@ -84,6 +87,17 @@ def rerank_topk(queries: jax.Array, cand_ids: jax.Array, mask: jax.Array,
     dists = -neg_d
     ids = jnp.where(jnp.isinf(dists), -1, ids)
     return dists, ids
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk_pairs(dists: jax.Array, ids: jax.Array, k: int):
+    """Associative (B, m*k)->(B, k) merge used by multi-level reductions.
+
+    Invalid entries carry id -1; their distances are ignored.  (Historically
+    lived in core.sharded_index, which still re-exports it.)
+    """
+    neg, pos = jax.lax.top_k(-jnp.where(ids >= 0, dists, jnp.inf), k)
+    return -neg, jnp.take_along_axis(ids, pos, axis=1)
 
 
 def recall_at_k(pred_ids: jax.Array, true_ids: jax.Array) -> jax.Array:

@@ -6,28 +6,32 @@ when necessary."  Here: inserts append to a host-side overflow buffer mapped
 by (tree, leaf); queries probe the static CSR AND the overflow; a background
 rebuild folds the overflow into a fresh forest once it exceeds
 ``rebuild_frac`` of the DB (amortized O(log N) per insert).
+
+Queries dispatch through the fused single-pass pipeline (core.pipeline):
+traverse + dedup + streamed rerank in one jit, no (B, M, d) intermediate.
 """
 from __future__ import annotations
 
 import threading
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.forest import (Forest, ForestConfig, build_forest,
-                               gather_candidates, traverse)
-from repro.core.search import rerank_topk
+from repro.core.forest import ForestConfig, build_forest
+from repro.core.pipeline import fused_query
+from repro.core.search import merge_topk_pairs
 
 
 class AnnService:
     def __init__(self, db: np.ndarray, cfg: ForestConfig, metric: str = "l2",
-                 seed: int = 0, rebuild_frac: float = 0.1):
+                 seed: int = 0, rebuild_frac: float = 0.1,
+                 mode: str = "auto"):
         self.metric = metric
         self.cfg = cfg
         self.seed = seed
         self.rebuild_frac = rebuild_frac
+        self.mode = mode
         self._lock = threading.Lock()
         self.db = np.asarray(db, np.float32)
         self._build(self.db)
@@ -61,11 +65,8 @@ class AnnService:
         """q (B, d) -> (dists (B,k), ids (B,k)); probes index + overflow."""
         q = jnp.asarray(np.atleast_2d(q).astype(np.float32))
         with self._lock:
-            leaves = traverse(self.forest, q, self.rcfg.max_depth)
-            ids, mask = gather_candidates(self.forest, leaves,
-                                          self.rcfg.leaf_pad)
-            d, i = rerank_topk(q, ids, mask, self.db_dev, k=k,
-                               metric=self.metric)
+            d, i = fused_query(self.forest, q, self.db_dev, k, self.cfg,
+                               metric=self.metric, mode=self.mode)
             if self.overflow_x:
                 # brute-force the (small) overflow and merge
                 ox = jnp.asarray(np.stack(self.overflow_x))
@@ -75,10 +76,7 @@ class AnnService:
                 cat_d = jnp.concatenate([d, od], axis=1)
                 cat_i = jnp.concatenate(
                     [i, jnp.broadcast_to(oi, od.shape)], axis=1)
-                neg, pos = jax.lax.top_k(-jnp.where(cat_i >= 0, cat_d,
-                                                    jnp.inf), k)
-                d = -neg
-                i = jnp.take_along_axis(cat_i, pos, axis=1)
+                d, i = merge_topk_pairs(cat_d, cat_i, k)
         return np.asarray(d), np.asarray(i)
 
     def stats(self) -> dict:

@@ -8,17 +8,17 @@ Sharding model (DESIGN.md §3.1):
   * Within a DB shard, the L trees are sharded over ``tree_axis`` ("model"):
     each cell owns L / |model| trees.
   * Query: the query batch is replicated; every (db, tree) cell traverses its
-    trees, reranks against its local DB rows, and emits a local top-k of
-    (distance, global-id) pairs; a global top-k merge all-gathers the tiny
-    (B, k) payloads over model then db axes — O(cells * k * 8B) bytes/query,
-    independent of DB size.
+    trees, reranks against its local DB rows via the fused gather+distance+
+    top-k path (no (B, M, d) intermediate — see core/pipeline.py), and emits
+    a local top-k of (distance, global-id) pairs; a global top-k merge
+    all-gathers the tiny (B, k) payloads over model then db axes —
+    O(cells * k * 8B) bytes/query, independent of DB size.
 
 Fault tolerance: a cell's index state is a pure function of (db shard, rng
 key), so recovery from a lost node = rebuild of one shard, no global state.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Sequence
 
 import jax
@@ -26,9 +26,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.forest import (Forest, ForestConfig, build_forest,
                                gather_candidates, traverse)
-from repro.kernels import ops
+from repro.core.search import merge_topk_pairs  # noqa: F401  (re-export)
 
 
 class ShardedIndex(NamedTuple):
@@ -69,7 +70,7 @@ def build_sharded_index(key: jax.Array, db: jax.Array, cfg: ForestConfig,
         return jax.tree.map(lambda x: x[None, None], forest)
 
     spec = P(tuple(db_axes), tree_axis)
-    forest = jax.shard_map(
+    forest = compat.shard_map(
         _build, mesh=mesh,
         in_specs=(_db_spec(db_axes),),
         out_specs=jax.tree.map(lambda _: spec, Forest(
@@ -93,19 +94,17 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
     all_axes = tuple(db_axes) + (tree_axis,)
 
     def _query(forest_cell: Forest, queries: jax.Array, db_local: jax.Array):
+        from repro.core.pipeline import rerank_fused
         forest_cell = jax.tree.map(lambda x: x[0, 0], forest_cell)
         db_local = db_local.reshape(n_local, -1)
         # 1) descend the local trees (paper: one gather + compare per level)
         leaves = traverse(forest_cell, queries, cfg.max_depth)
         cand_ids, mask = gather_candidates(forest_cell, leaves, cfg.leaf_pad)
-        if dedup:
-            from repro.core.search import mask_duplicates
-            mask = mask_duplicates(cand_ids, mask)
-        # 2) exact rerank against local DB rows (fused kernel on TPU)
-        cand = db_local[jnp.where(mask, cand_ids, 0)]
-        loc_d, loc_i = ops.rerank_candidates(
-            queries, cand, cand_ids, mask, k=k, metric=metric,
-            mode=kernel_mode)
+        # 2) fused exact rerank against local DB rows — dedup + tile-streamed
+        #    gather + running top-k, no (B, M, d) intermediate per cell
+        loc_d, loc_i = rerank_fused(queries, cand_ids, mask, db_local, k,
+                                    metric=metric, mode=kernel_mode,
+                                    dedup=dedup)
         # 3) globalize ids, then tiny all-gather merge over tree + db axes
         di = jax.lax.axis_index(tuple(db_axes))
         glob_i = jnp.where(loc_i >= 0, loc_i + di * n_local, -1)
@@ -115,7 +114,7 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
         return -neg, jnp.take_along_axis(gi, pos, axis=1)
 
     spec = P(tuple(db_axes), tree_axis)
-    fwd = jax.shard_map(
+    fwd = compat.shard_map(
         _query, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: spec, Forest(
             proj_idx=0, proj_coef=0, thresh=0, child_base=0, perm=0,
@@ -130,10 +129,3 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
         return fwd(index.forest, queries, db)
 
     return query_step
-
-
-@functools.partial(jax.jit, static_argnames=("k",))
-def merge_topk_pairs(dists: jax.Array, ids: jax.Array, k: int):
-    """Associative (B, m*k)->(B, k) merge used by multi-level reductions."""
-    neg, pos = jax.lax.top_k(-jnp.where(ids >= 0, dists, jnp.inf), k)
-    return -neg, jnp.take_along_axis(ids, pos, axis=1)

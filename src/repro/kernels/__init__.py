@@ -3,7 +3,9 @@
 Kernels (each <name>.py has the pl.pallas_call; ref.py has the oracle):
   * matmul_topk    -- fused MXU scoring (l2/dot) + streaming top-k
   * chi2_topk      -- fused chi-square scoring + streaming top-k
-  * distance_topk  -- fused per-query candidate rerank + top-k
+  * distance_topk  -- fused per-query candidate rerank + top-k (pre-gathered)
+  * fused_query    -- DMA row gather + distance + running top-k in one pass
+                      (the forest-query hot path; no (B, M, d) intermediate)
   * embedding_bag  -- scalar-prefetch gather + weighted segment-sum
   * forest_traverse-- batched partition-tree descent
 """

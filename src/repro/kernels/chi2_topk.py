@@ -15,8 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.kernels.common import POS_INF, merge_topk, select_topk_block
 
 EPS = 1e-12
@@ -81,7 +81,7 @@ def chi2_topk(q: jax.Array, db: jax.Array, k: int, bq: int = 64, bn: int = 256,
             jax.ShapeDtypeStruct((b + b_pad, k), jnp.float32),
             jax.ShapeDtypeStruct((b + b_pad, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qp, dbp)

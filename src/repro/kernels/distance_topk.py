@@ -19,8 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.kernels.common import POS_INF, merge_topk, select_topk_block
 
 EPS = 1e-12
@@ -87,7 +87,7 @@ def distance_topk(q: jax.Array, cand: jax.Array, ids: jax.Array,
             jax.ShapeDtypeStruct((b + b_pad, k), jnp.float32),
             jax.ShapeDtypeStruct((b + b_pad, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qp, candp, idsp, maskp)

@@ -18,6 +18,7 @@ from repro.kernels import chi2_topk as _chi2
 from repro.kernels import distance_topk as _dist
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import forest_traverse as _trav
+from repro.kernels import fused_query as _fused
 from repro.kernels import matmul_topk as _mm
 from repro.kernels import ref as _ref
 
@@ -57,6 +58,21 @@ def rerank_candidates(q, cand, ids, mask, k: int, metric: str = "l2",
         return _dist.distance_topk(q, cand, ids, mask, k, metric=metric,
                                    interpret=interp)
     return _ref.distance_topk_ref(q, cand, ids, mask, k, metric=metric)
+
+
+def fused_rerank(q, ids, db, k: int, metric: str = "l2", mode: Mode = "auto",
+                 bq: int = 8, bm: int = 32):
+    """Fused DB-row gather + distance + top-k over one candidate chunk.
+
+    ids (B, M) int32 with -1 marking invalid slots.  Unlike
+    ``rerank_candidates`` this takes the raw DB — the (B, M, d) gathered
+    tensor never materializes in HBM (see kernels/fused_query.py).
+    """
+    use_pallas, interp = _resolve(mode)
+    if use_pallas:
+        return _fused.fused_gather_topk(q, ids, db, k, metric=metric, bq=bq,
+                                        bm=bm, interpret=interp)
+    return _ref.fused_gather_topk_ref(q, ids, db, k, metric=metric)
 
 
 def embedding_bag(ids, weights, table, mode: Mode = "auto"):

@@ -71,6 +71,40 @@ def distance_topk_ref(q: jax.Array, cand: jax.Array, ids: jax.Array,
     return d, jnp.where(jnp.isinf(d), -1, i)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def fused_gather_topk_ref(q: jax.Array, ids: jax.Array, db: jax.Array, k: int,
+                          metric: str = "l2") -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.fused_query.fused_gather_topk (one candidate chunk).
+
+    ids (B, M) int32 with -1 marking invalid slots.  The gather here is an
+    XLA gather over the chunk only — the caller (core.pipeline) streams
+    chunks so the full (B, M_total, d) candidate tensor never materializes.
+    """
+    n = db.shape[0]
+    valid = ids >= 0
+    cand = db[jnp.clip(ids, 0, n - 1)].astype(jnp.float32)   # (B, M, d)
+    qf = q.astype(jnp.float32)[:, None, :]
+    if metric == "l2":
+        scores = jnp.sum((qf - cand) ** 2, axis=-1)
+    elif metric == "dot":
+        scores = -jnp.sum(qf * cand, axis=-1)
+    elif metric == "chi2":
+        scores = jnp.sum((qf - cand) ** 2 / (qf + cand + EPS), axis=-1)
+    elif metric == "cosine":
+        qn = qf / (jnp.sqrt(jnp.sum(qf * qf, -1, keepdims=True)) + EPS)
+        cn = cand / (jnp.sqrt(jnp.sum(cand * cand, -1, keepdims=True)) + EPS)
+        scores = 1.0 - jnp.sum(qn * cn, axis=-1)
+    else:
+        raise ValueError(metric)
+    scores = jnp.where(valid, scores, POS_INF)
+    # lax.top_k (ties -> earlier slot), matching the staged oracle's
+    # selection exactly; cheaper than the lexsort the brute-force refs use
+    neg_d, pos = jax.lax.top_k(-scores, k)
+    d = -neg_d
+    i = jnp.take_along_axis(ids, pos, axis=-1)
+    return d, jnp.where(jnp.isinf(d), -1, i)
+
+
 @jax.jit
 def embedding_bag_ref(ids: jax.Array, weights: jax.Array, table: jax.Array
                       ) -> jax.Array:

@@ -10,20 +10,18 @@ device state (the dry-run launcher must set XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh for CI-size multi-device tests (8 forced host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def dp_axes(multi_pod: bool) -> tuple[str, ...]:

@@ -20,6 +20,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 from repro.configs.base import MACEConfig
@@ -271,7 +273,7 @@ def mace_fwd(params: dict, cfg: MACEConfig, species: jax.Array,
                 (resh(rbf_l), resh(sph_l), resh(send_l), resh(recv_loc)))
             return acc
 
-        return jax.shard_map(
+        return compat.shard_map(
             cell, mesh=mesh,
             in_specs=(P(dp, None, None), P(dp, None), P(dp, None), P(dp),
                       P(dp)),

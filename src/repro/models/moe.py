@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import Axes, dense_init
@@ -280,7 +282,7 @@ def moe_fwd_a2a(params: dict, x: jax.Array, *, n_experts: int,
     tok = dp + (axes.tp,)
     fs = dp if fsdp else None
     w_spec = P(axes.tp, fs, None)
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         cell, mesh=mesh,
         in_specs=(P(tok, None), P(None, None), w_spec, w_spec, w_spec),
         out_specs=(P(tok, None), P(tok)),
@@ -359,7 +361,7 @@ def moe_fwd_sharded(params: dict, x: jax.Array, *, n_experts: int,
     dp = tuple(axes.dp)
     fs = dp if e_fsdp else None
     w_spec = P(axes.tp, fs, None)
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         cell, mesh=mesh,
         in_specs=(P(dp, None), P(None, None), w_spec, w_spec, w_spec),
         out_specs=(P(dp, None), P((dp + (axes.tp,)))),

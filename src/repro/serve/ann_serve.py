@@ -1,7 +1,8 @@
 """End-to-end ANN serving: RPF index behind a dynamic batcher.
 
 This is the paper's system as a service: build the forest over a corpus,
-then serve batched k-NN queries.  Also provides the recsys retrieval bridge —
+then serve batched k-NN queries through the fused single-pass pipeline
+(core/pipeline.py).  Also provides the recsys retrieval bridge —
 MIND interest vectors -> RPF candidate pruning -> exact rerank (compared
 against brute-force fused matmul_topk in benchmarks).
 """
@@ -16,9 +17,13 @@ from repro.serve.batching import DynamicBatcher
 
 def make_ann_server(db: np.ndarray, cfg: ForestConfig, k: int = 10,
                     metric: str = "l2", max_batch: int = 128,
-                    max_wait_s: float = 0.002):
-    """Returns (service, batcher). Submit 1-D query vectors; get (d, ids)."""
-    service = AnnService(db, cfg, metric=metric)
+                    max_wait_s: float = 0.002, mode: str = "auto"):
+    """Returns (service, batcher). Submit 1-D query vectors; get (d, ids).
+
+    ``mode`` is the kernel-dispatch policy (auto|pallas|ref) forwarded to the
+    fused query pipeline the service runs on.
+    """
+    service = AnnService(db, cfg, metric=metric, mode=mode)
 
     def serve_batch(payloads: list) -> list:
         q = np.stack(payloads)

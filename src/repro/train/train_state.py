@@ -6,6 +6,8 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -98,7 +100,7 @@ def make_dp_train_step(loss_fn: Callable, optimizer: Optimizer, mesh: Mesh,
         return (TrainState(state.step + 1, params, opt_state, new_res),
                 {"loss": loss})
 
-    fwd = jax.shard_map(
+    fwd = compat.shard_map(
         _step, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), TrainState(0, 0, 0, 0),
                                is_leaf=lambda x: x is None or isinstance(x, int)),

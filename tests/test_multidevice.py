@@ -16,8 +16,8 @@ def _run(body: str, timeout: int = 420) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro import compat
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
     """) + textwrap.dedent(body)
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
@@ -119,8 +119,7 @@ def test_elastic_checkpoint_reshard():
         with tempfile.TemporaryDirectory() as d:
             ck = Checkpointer(d)
             ck.save(3, {"x": xs}, block=True)
-            mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh2 = compat.make_mesh((2, 4), ("data", "model"))
             s2 = NamedSharding(mesh2, P("model", "data"))
             restored, step = ck.restore({"x": xs}, shardings={"x": s2})
             assert step == 3

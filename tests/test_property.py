@@ -2,13 +2,17 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import ForestConfig, build_forest
-from repro.core.forest import forest_stats, gather_candidates, traverse
-from repro.core.search import mask_duplicates
-from repro.core.sharded_index import merge_topk_pairs
-from repro.kernels import ref
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import ForestConfig, build_forest  # noqa: E402
+from repro.core.forest import forest_stats, gather_candidates, traverse  # noqa: E402
+from repro.core.search import mask_duplicates  # noqa: E402
+from repro.core.sharded_index import merge_topk_pairs  # noqa: E402
+from repro.kernels import ref  # noqa: E402
 
 SETTINGS = dict(max_examples=15, deadline=None)
 
