@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ForestConfig, build_forest, query_forest
+from repro.core import ForestConfig
 from repro.core.knn import exact_knn
 from repro.data.synthetic import clustered_gaussians
+from repro.index import IndexSpec, SearchParams, build_index
 
 
 def run(n_items: int = 100_000, d: int = 64, n_users: int = 64,
@@ -38,15 +39,17 @@ def run(n_items: int = 100_000, d: int = 64, n_users: int = 64,
     jax.block_until_ready(bf_d)
     brute_s = time.perf_counter() - t0
 
-    # RPF over items with L2 on unit vectors (equivalent ordering to dot)
+    # RPF over items with L2 on unit vectors (equivalent ordering to dot),
+    # through the unified index API (the serving surface)
     cfg = ForestConfig(n_trees=L, capacity=12, split_ratio=0.3)
     t0 = time.perf_counter()
-    forest = build_forest(jax.random.key(0), items_j, cfg, tree_chunk=64)
-    jax.block_until_ready(forest.thresh)
+    index = build_index(jax.random.key(0), items,
+                        IndexSpec(backend="rpf", forest=cfg, tree_chunk=64))
+    jax.block_until_ready(index.forest.thresh)
     build_s = time.perf_counter() - t0
+    params = SearchParams(k=k, metric="l2")
     t0 = time.perf_counter()
-    rpf_d, rpf_i = query_forest(forest, flat, items_j, k=k, cfg=cfg,
-                                metric="l2")
+    rpf_d, rpf_i = index.search(flat, params)
     jax.block_until_ready(rpf_d)
     rpf_s = time.perf_counter() - t0
 

@@ -1,11 +1,14 @@
-"""End-to-end serving driver: the paper's index behind a batched service.
+"""End-to-end serving driver: a unified-API index behind a batched service.
 
-  PYTHONPATH=src python examples/ann_serving.py
+  PYTHONPATH=src python examples/ann_serving.py [--tiny]
 
-Builds the RPF index, stands up the dynamic batcher, fires concurrent
-requests, validates recall, and exercises the paper's §5 incremental-update
-path (insert -> immediate queryability -> background rebuild).
+Builds the index from an IndexSpec, stands up the dynamic batcher (batches
+are padded to max_batch, so the jitted query step compiles once), fires
+concurrent requests, validates recall, and exercises the paper's §5
+incremental-update path (add -> immediate queryability -> background
+rebuild).  ``--tiny`` shrinks the corpus for the CI examples-smoke job.
 """
+import argparse
 import threading
 import time
 
@@ -13,41 +16,51 @@ import numpy as np
 
 from repro.core.forest import ForestConfig
 from repro.data.synthetic import mnist_like
+from repro.index import IndexSpec, SearchParams
 from repro.serve.ann_serve import make_ann_server
 
 
-def main():
-    db, _, queries, _ = mnist_like(n=10_000, n_test=128)
-    cfg = ForestConfig(n_trees=40, capacity=12, split_ratio=0.3)
-    service, batcher = make_ann_server(db, cfg, k=5, max_batch=64,
-                                       max_wait_s=0.01)
-    print("index:", service.stats())
+def main(tiny: bool = False):
+    n, n_clients = (2_000, 32) if tiny else (10_000, 128)
+    db, _, queries, _ = mnist_like(n=n, n_test=max(n_clients, 32))
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=20 if tiny else 40,
+                                         capacity=12, split_ratio=0.3))
+    index, batcher = make_ann_server(db, spec, k=5, max_batch=64,
+                                     max_wait_s=0.01)
+    print("index:", index.stats())
 
     # concurrent clients
     results = {}
+
     def client(j):
         results[j] = batcher(queries[j])
 
     t0 = time.perf_counter()
-    threads = [threading.Thread(target=client, args=(j,)) for j in range(128)]
+    threads = [threading.Thread(target=client, args=(j,))
+               for j in range(n_clients)]
     for t in threads:
         t.start()
     for t in threads:
         t.join()
     dt = time.perf_counter() - t0
-    print(f"128 concurrent requests in {dt*1e3:.0f} ms; "
+    print(f"{n_clients} concurrent requests in {dt*1e3:.0f} ms; "
           f"batcher: {batcher.stats}")
 
     # incremental update (paper §5): a novel point becomes queryable at once
     novel = queries[0] * 0.9 + 0.1 * queries[1]
     novel /= np.linalg.norm(novel)
-    new_id = service.insert(novel)
-    d, i = service.query(novel[None], k=1)
+    new_id = index.add(novel)
+    d, i = index.search(novel[None], SearchParams(k=1))
+    d, i = np.asarray(d), np.asarray(i)
     assert int(i[0, 0]) == new_id, (int(i[0, 0]), new_id)
     print(f"inserted point {new_id}: self-query hits it at dist "
-          f"{float(d[0,0]):.2e}")
+          f"{float(d[0, 0]):.2e}")
     batcher.stop()
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--tiny", action="store_true",
+                   help="CI-size corpus (seconds, not minutes)")
+    main(tiny=p.parse_args().tiny)

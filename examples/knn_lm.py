@@ -3,17 +3,18 @@
   PYTHONPATH=src python examples/knn_lm.py
 
 Train a SmolLM-family reduced config on a Markov corpus, memorize (hidden
-state -> next token) pairs into an RPF index, then interpolate LM logits with
-the kNN distribution (Khandelwal et al. 2020 applied through Zhong's index).
-Demonstrates the paper's technique on LM-family archs (DESIGN.md §5).
+state -> next token) pairs into an RPF index via the unified index API
+(repro.index), then interpolate LM logits with the kNN distribution
+(Khandelwal et al. 2020 applied through Zhong's index).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LMConfig
-from repro.core import ForestConfig, build_forest, query_forest
+from repro.core import ForestConfig
 from repro.data.lm_data import MarkovTokens
+from repro.index import IndexSpec, SearchParams, build_index
 from repro.models import transformer as tr
 from repro.train.optimizer import adamw, cosine_schedule
 from repro.train.train_state import init_train_state, make_train_step
@@ -45,24 +46,25 @@ def main():
     mem = data.sample(64, 64)
     mem_tok, mem_next = mem[:, :-1], mem[:, 1:]
     hidden, _ = tr.forward_hidden(state.params, jnp.asarray(mem_tok), CFG)
-    keys = np.asarray(hidden).reshape(-1, CFG.d_model)
+    keys = np.array(hidden).reshape(-1, CFG.d_model)   # copy: jax buffers are read-only
     vals = mem_next.reshape(-1)
     keys /= np.linalg.norm(keys, axis=1, keepdims=True) + 1e-9
 
-    cfg = ForestConfig(n_trees=40, capacity=12)
-    forest = build_forest(jax.random.key(2), jnp.asarray(keys), cfg)
+    index = build_index(jax.random.key(2), keys,
+                        IndexSpec(backend="rpf",
+                                  forest=ForestConfig(n_trees=40,
+                                                      capacity=12)))
 
     # ---- evaluate interpolated next-token accuracy ------------------------
     test = data.sample(32, 64)
     t_tok, t_next = test[:, :-1], test[:, 1:]
     h, _ = tr.forward_hidden(state.params, jnp.asarray(t_tok), CFG)
     logits, _ = tr.forward(state.params, jnp.asarray(t_tok), CFG)
-    q = np.asarray(h).reshape(-1, CFG.d_model)
+    q = np.array(h).reshape(-1, CFG.d_model)
     q /= np.linalg.norm(q, axis=1, keepdims=True) + 1e-9
 
     k = 8
-    d, ids = query_forest(forest, jnp.asarray(q), jnp.asarray(keys), k=k,
-                          cfg=cfg)
+    d, ids = index.search(q, SearchParams(k=k))
     knn_next = vals[np.clip(np.asarray(ids), 0, len(vals) - 1)]   # (Q, k)
     w = np.exp(-np.asarray(d) * 10.0) * (np.asarray(ids) >= 0)
     knn_probs = np.zeros((q.shape[0], CFG.padded_vocab), np.float32)

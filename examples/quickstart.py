@@ -1,45 +1,71 @@
-"""Quickstart: build a random-partition-forest index and query it.
+"""Quickstart: the unified index API over every backend.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--tiny]
 
-The 60-second version of the paper: index 20k 784-D vectors, query with
-exact-NN ground truth, watch recall rise with L at a tiny search cost.
+The 60-second version of the paper through the one public surface
+(repro.index): build an IndexSpec per backend, search with SearchParams,
+watch recall rise with L at a tiny search cost — then compose the
+beyond-paper knobs (int8 shortlist, early-exit waves) with the same call.
+``--tiny`` shrinks the corpus for the CI examples-smoke job.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ForestConfig, build_forest, exact_knn, query_forest,
-                        recall_at_k)
+from repro.core import ForestConfig, exact_knn, recall_at_k
 from repro.data.synthetic import mnist_like
+from repro.index import IndexSpec, SearchParams, build_index
 
 
-def main():
-    print("generating MNIST-statistics data (offline stand-in)...")
-    db, _, queries, _ = mnist_like(n=20_000, n_test=256)
-    db, queries = jnp.asarray(db), jnp.asarray(queries)
+def main(tiny: bool = False):
+    n, n_test = (2_000, 64) if tiny else (20_000, 256)
+    print(f"generating MNIST-statistics data (offline stand-in, n={n})...")
+    db, _, queries, _ = mnist_like(n=n, n_test=n_test)
+    db_j, q_j = jnp.asarray(db), jnp.asarray(queries)
 
-    print("exact ground truth...")
-    _, true_ids = exact_knn(queries, db, k=1)
+    print("exact ground truth (the bruteforce backend is the same oracle)...")
+    _, true_ids = exact_knn(q_j, db_j, k=1)
 
-    for L in (5, 20, 80):
+    # ---- one spec per operating point; one search call for all of them ----
+    for L in (5, 20) if tiny else (5, 20, 80):
         cfg = ForestConfig(n_trees=L, capacity=12, split_ratio=0.3)
-        forest = build_forest(jax.random.key(0), db, cfg)
-        dists, ids = query_forest(forest, queries, db, k=1, cfg=cfg)
+        index = build_index(jax.random.key(0), db,
+                            IndexSpec(backend="rpf", forest=cfg))
+        _, ids = index.search(queries, SearchParams(k=1))
         rec = float(recall_at_k(ids, true_ids))
-        frac = L * cfg.resolved(db.shape[0]).leaf_pad / db.shape[0]
+        frac = L * cfg.resolved(n).leaf_pad / n
         print(f"L={L:3d} trees: recall@1 = {rec:.3f}, "
               f"<= {frac*100:.2f}% of the DB touched per query")
 
-    # k-NN search with the chi-square metric (the paper's ISS experiment)
-    db_h = jnp.abs(db)
-    cfg = ForestConfig(n_trees=40, capacity=12)
-    forest = build_forest(jax.random.key(1), db_h, cfg)
-    d, ids = query_forest(forest, db_h[:8], db_h, k=3, cfg=cfg,
-                          metric="chi2")
+    # ---- every query-time knob composes with every backend ---------------
+    cfg = ForestConfig(n_trees=20 if tiny else 40, capacity=12)
+    index8 = build_index(jax.random.key(0), db,
+                         IndexSpec(backend="rpf+int8", forest=cfg))
+    _, ids8 = index8.search(queries, SearchParams(k=1, expand=4))
+    _, ids8w = index8.search(queries,
+                             SearchParams(k=1, expand=4, adaptive_wave=5,
+                                          tol=0.01))
+    print(f"rpf+int8: recall@1 = {float(recall_at_k(ids8, true_ids)):.3f} "
+          f"(4x less candidate HBM traffic)")
+    print(f"rpf+int8 + early-exit waves: recall@1 = "
+          f"{float(recall_at_k(ids8w, true_ids)):.3f} using "
+          f"{index8.last_trees_used}/{cfg.n_trees} trees")
+
+    # ---- k-NN with the chi-square metric (the paper's ISS experiment) ----
+    db_h = np.abs(db)
+    index_h = build_index(jax.random.key(1), db_h,
+                          IndexSpec(backend="rpf",
+                                    forest=ForestConfig(n_trees=20,
+                                                        capacity=12)))
+    d, ids = index_h.search(db_h[:8], SearchParams(k=3, metric="chi2"))
     print("chi2 3-NN of first db point:", np.asarray(ids[0]),
           "dists", np.round(np.asarray(d[0]), 5))
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--tiny", action="store_true",
+                   help="CI-size corpus (seconds, not minutes)")
+    main(tiny=p.parse_args().tiny)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ForestConfig, build_forest, exact_knn, query_forest
+from repro.core import ForestConfig, exact_knn
+from repro.index import IndexSpec, SearchParams, build_index
 from repro.models import recsys as rs
 from repro.train.optimizer import adamw, cosine_schedule
 from repro.train.train_state import init_train_state, make_train_step
@@ -46,17 +47,18 @@ def main():
                         LoopConfig(total_steps=200, log_every=50))
     print(f"two-tower loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}")
 
-    # ---- encode catalog + build the paper's index ------------------------
+    # ---- encode catalog + build the paper's index (unified API) ----------
     item_emb = rs.two_tower_item(state.params, jnp.arange(N_ITEMS))
     item_emb = item_emb / jnp.linalg.norm(item_emb, axis=1, keepdims=True)
     cfg = ForestConfig(n_trees=60, capacity=16, split_ratio=0.3)
-    forest = build_forest(jax.random.key(1), item_emb, cfg)
+    index = build_index(jax.random.key(1), np.asarray(item_emb),
+                        IndexSpec(backend="rpf", forest=cfg))
 
     # ---- retrieve for a user batch ---------------------------------------
     users = jnp.arange(64)
     u_emb = rs.two_tower_user(state.params, users)
     u_emb = u_emb / jnp.linalg.norm(u_emb, axis=1, keepdims=True)
-    _, rpf_ids = query_forest(forest, u_emb, item_emb, k=20, cfg=cfg)
+    _, rpf_ids = index.search(u_emb, SearchParams(k=20))
     _, bf_ids = exact_knn(u_emb, item_emb, k=20, metric="l2")
     recall = float((np.asarray(rpf_ids)[:, :, None]
                     == np.asarray(bf_ids)[:, None, :]).any(1).mean())

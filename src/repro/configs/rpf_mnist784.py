@@ -3,7 +3,7 @@
 N=60000 database vectors, 784-D, unit-normalized; C=12, r=0.3, K=1;
 L swept over {1,2,5,10,20,40,80,160,320,640}; Euclidean distance; recall@1
 against exact NN. Data: deterministic MNIST-statistics generator (offline
-container — DESIGN.md §6.5).
+container — DESIGN.md §7.5).
 """
 from repro.configs.base import ArchSpec, ShapeCell
 from repro.core.forest import ForestConfig

@@ -1,4 +1,4 @@
-"""Early-exit wave scheduling over tree groups (beyond-paper, DESIGN.md §7).
+"""Early-exit wave scheduling over tree groups (beyond-paper, DESIGN.md §5).
 
 The L trees are queried in waves of ``wave`` trees; after each wave the
 current top-k distances are compared with the previous wave's — when the
@@ -7,16 +7,21 @@ stops.  Easy queries (dense neighborhoods) finish after 1-2 waves; hard ones
 use the full forest — a per-query accuracy-compute tradeoff the static-L
 paper configuration cannot express.  Trees are independent (paper §5), so any
 prefix of the forest is itself a valid (smaller) forest.
+
+Each wave dispatches through the fused single-pass pipeline
+(``core.pipeline.fused_query``): traverse + dedup + chunk-streamed rerank in
+one jit, no (B, M, d) intermediate.  Passing a ``QuantizedDB`` as ``db``
+composes the early-exit schedule with the int8 shortlist rerank source.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.forest import Forest, ForestConfig, gather_candidates, traverse
-from repro.core.search import mask_duplicates, rerank_topk
-from repro.core.sharded_index import merge_topk_pairs
+from repro.core.forest import Forest, ForestConfig
+from repro.core.pipeline import fused_query
+from repro.core.quantized import QuantizedDB
+from repro.core.search import mask_duplicates, merge_topk_pairs
 
 
 def _merge_dedup(d1, i1, d2, i2, k):
@@ -29,11 +34,19 @@ def _merge_dedup(d1, i1, d2, i2, k):
     return merge_topk_pairs(d, jnp.where(keep, i, -1), k)
 
 
-def adaptive_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
-                   cfg: ForestConfig, wave: int = 10, tol: float = 0.01,
-                   metric: str = "l2"):
-    """Returns (dists, ids, trees_used). Host-side loop over tree waves."""
-    cfg = cfg.resolved(db.shape[0])
+def adaptive_query(forest: Forest, queries: jax.Array,
+                   db: jax.Array | QuantizedDB, k: int, cfg: ForestConfig,
+                   wave: int = 10, tol: float = 0.01, metric: str = "l2",
+                   mode: str = "auto", chunk: int = 0, expand: int = 4,
+                   dedup: bool = True):
+    """Returns (dists, ids, trees_used). Host-side loop over tree waves.
+
+    ``dedup`` masks duplicate ids within each wave's candidate set; the
+    cross-wave merge always drops repeats regardless (a neighbor found by
+    several waves must count once).
+    """
+    n_points = db.fp.shape[0] if isinstance(db, QuantizedDB) else db.shape[0]
+    cfg = cfg.resolved(n_points)
     n_trees = forest.n_trees
     best_d = jnp.full((queries.shape[0], k), jnp.inf)
     best_i = jnp.full((queries.shape[0], k), -1, jnp.int32)
@@ -41,9 +54,8 @@ def adaptive_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
     used = 0
     for w0 in range(0, n_trees, wave):
         sub = jax.tree.map(lambda a: a[w0:w0 + wave], forest)
-        leaves = traverse(sub, queries, cfg.max_depth)
-        ids, mask = gather_candidates(sub, leaves, cfg.leaf_pad)
-        d, i = rerank_topk(queries, ids, mask, db, k=k, metric=metric)
+        d, i = fused_query(sub, queries, db, k, cfg, metric=metric, mode=mode,
+                           chunk=chunk, expand=expand, dedup=dedup)
         best_d, best_i = _merge_dedup(best_d, best_i, d, i, k)
         used = min(w0 + wave, n_trees)
         kth = float(jnp.mean(jnp.where(jnp.isfinite(best_d[:, -1]),

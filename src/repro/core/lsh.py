@@ -5,8 +5,14 @@ concatenated hashes per table and L tables.  The paper compares against a
 *cascade* of LSH structures at increasing radii (0.4/0.53/0.63/0.88 on MNIST):
 a query probes radii in order until enough candidates are found.  Buckets are
 host-side hash maps (as in the original Andoni E2LSH software); the distance
-rerank reuses the same JAX/Pallas rerank stage as the forest for a fair
+rerank reuses the same JAX/Pallas fused rerank stage as the forest for a fair
 accuracy-vs-cost comparison.
+
+Batch path: ``LSHIndex.candidates_batch`` / ``CascadedLSH.retrieve_batch``
+hash a whole query batch with ONE projection einsum per level (instead of one
+per point) and return padded (B, M) id/mask arrays shaped for
+``core.pipeline.rerank_fused`` — the unified index API's "lsh-cascade"
+backend feeds those straight into the shared fused rerank stage.
 """
 from __future__ import annotations
 
@@ -21,6 +27,25 @@ class LSHConfig:
     n_bits: int = 12            # K hashes concatenated per table
     width: float = 0.5          # w (bucket width, scales with target radius)
     seed: int = 0
+
+
+def pad_candidate_lists(cands: list, pad_multiple: int = 64
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-query candidate id lists to a common (B, M) matrix + mask.
+
+    M is the max list length rounded up to ``pad_multiple`` (bounds the
+    number of distinct shapes the downstream jitted rerank sees).  Invalid
+    slots hold id 0 and mask False — the contract of
+    ``forest.gather_candidates``.
+    """
+    m = max((len(c) for c in cands), default=0)
+    m = max(pad_multiple, -(-m // pad_multiple) * pad_multiple)
+    ids = np.zeros((len(cands), m), np.int32)
+    mask = np.zeros((len(cands), m), bool)
+    for j, c in enumerate(cands):
+        ids[j, :len(c)] = c
+        mask[j, :len(c)] = True
+    return ids, mask
 
 
 class LSHIndex:
@@ -48,12 +73,31 @@ class LSHIndex:
         return np.floor((proj + self.b[:, None, :]) / self.cfg.width).astype(
             np.int32)
 
-    def candidates(self, q: np.ndarray) -> set:
-        keys = self._hash(q[None, :])[:, 0, :]  # (L, K)
-        out: set = set()
+    def candidate_sets(self, q: np.ndarray) -> list:
+        """(B, d) -> per-query candidate id sets; ONE _hash call per batch."""
+        keys = self._hash(q)                    # (L, B, K)
+        out = [set() for _ in range(q.shape[0])]
         for l in range(self.cfg.n_tables):
-            out.update(self.tables[l].get(tuple(keys[l]), ()))
+            table = self.tables[l]
+            for j, key in enumerate(map(tuple, keys[l])):
+                got = table.get(key)
+                if got:
+                    out[j].update(got)
         return out
+
+    def candidates_batch(self, q: np.ndarray, pad_multiple: int = 64
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """(B, d) -> padded (B, M) int32 ids + (B, M) bool mask.
+
+        Shaped for the shared fused rerank stage (ids/mask contract of
+        ``gather_candidates``); one vectorized hash per batch.
+        """
+        sets = self.candidate_sets(np.atleast_2d(q))
+        return pad_candidate_lists([sorted(s) for s in sets], pad_multiple)
+
+    def candidates(self, q: np.ndarray) -> set:
+        """Single-point shim over the batch path."""
+        return self.candidate_sets(q[None, :])[0]
 
 
 class CascadedLSH:
@@ -70,12 +114,34 @@ class CascadedLSH:
             for i, r in enumerate(radii)
         ]
 
-    def retrieve(self, q: np.ndarray, min_candidates: int = 1) -> np.ndarray:
-        cand: set = set()
+    def retrieve_sets(self, q: np.ndarray, min_candidates: int = 1) -> list:
+        """(B, d) -> per-query candidate sets; each query stops at the first
+        radius level that accumulates >= min_candidates (cascade semantics,
+        batched: one hash per level per batch)."""
+        q = np.atleast_2d(q)
+        out = [set() for _ in range(q.shape[0])]
+        open_q = list(range(q.shape[0]))
         for level in self.levels:               # increasing radius
-            cand.update(level.candidates(q))
-            if len(cand) >= min_candidates:
+            if not open_q:
                 break
+            per_level = level.candidate_sets(q[open_q])
+            still_open = []
+            for j, cand in zip(open_q, per_level):
+                out[j].update(cand)
+                if len(out[j]) < min_candidates:
+                    still_open.append(j)
+            open_q = still_open
+        return out
+
+    def retrieve_batch(self, q: np.ndarray, min_candidates: int = 1,
+                       pad_multiple: int = 64
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """(B, d) -> padded (B, M) ids + mask for the fused rerank stage."""
+        sets = self.retrieve_sets(q, min_candidates)
+        return pad_candidate_lists([sorted(s) for s in sets], pad_multiple)
+
+    def retrieve(self, q: np.ndarray, min_candidates: int = 1) -> np.ndarray:
+        cand = self.retrieve_sets(q[None, :], min_candidates)[0]
         return np.fromiter(cand, dtype=np.int64) if cand else np.empty(0, np.int64)
 
     def query(self, q: np.ndarray, k: int, min_candidates: int = 1

@@ -33,12 +33,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.forest import Forest, ForestConfig, gather_candidates, traverse
+from repro.core.quantized import QuantizedDB
 from repro.core.search import mask_duplicates, merge_topk_pairs, rerank_topk
 from repro.kernels import ops
 
 # The kernel keeps the (B, chunk) id matrix in SMEM; stay well under the
 # ~1 MB scalar-memory budget by default.
 SMEM_ID_BUDGET_BYTES = 512 * 1024
+
+# The int8 coarse stage gathers dequantized candidate blocks with plain jnp
+# (no Pallas kernel reads int8 rows yet); bound that per-chunk gather so the
+# (B, chunk, d) block stays HBM-cache-sized and the full (B, M, d) tensor
+# never exists on this path either.
+GATHER_BUDGET_BYTES = 1 << 20
 
 
 def _pick_chunk(b: int, m: int, chunk: int, bm: int, k: int) -> int:
@@ -116,6 +123,84 @@ def rerank_fused(queries: jax.Array, cand_ids: jax.Array, mask: jax.Array,
     return d.reshape(-1, k)[:b], i.reshape(-1, k)[:b]
 
 
+def _pick_gather_chunk(b: int, m: int, d: int, chunk: int, bm: int, k: int
+                       ) -> int:
+    """Coarse-stage chunk width: explicit > gather-budget-derived.
+
+    Bounds the dequantized (B, chunk, d) f32 block at GATHER_BUDGET_BYTES;
+    never below k rounded up to a bm multiple (the per-chunk top-k needs k
+    columns to select from).
+    """
+    floor = -(-k // bm) * bm
+    if chunk > 0:
+        return min(max(chunk, floor), m)
+    by_budget = GATHER_BUDGET_BYTES // (4 * max(b, 1) * max(d, 1))
+    by_budget = max(bm, (by_budget // bm) * bm)
+    return min(m, max(by_budget, floor))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "expand", "metric", "mode",
+                                             "dedup", "chunk", "bq", "bm"))
+def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
+                           mask: jax.Array, qdb: QuantizedDB, k: int,
+                           expand: int = 4, metric: str = "l2",
+                           mode: str = "auto", dedup: bool = True,
+                           chunk: int = 0, bq: int = 8, bm: int = 32
+                           ) -> tuple[jax.Array, jax.Array]:
+    """int8-shortlist-then-fp32 rerank source for the fused pipeline.
+
+    Stage 1 streams candidate chunks over the int8 rows (4x fewer HBM bytes
+    than fp32) and keeps a running coarse top-k' (k' = expand*k, always L2 —
+    the quantization scheme is L2-calibrated).  Stage 2 reranks only the
+    (B, k') shortlist exactly against the fp32 rows through the fused
+    gather+distance+top-k kernel.  Neither stage materializes (B, M, d).
+
+    Matches the staged quantized oracle (core.quantized.staged_rerank_quantized)
+    exactly on tie-free data.
+    """
+    if dedup:
+        mask = mask_duplicates(cand_ids, mask)
+    ids = jnp.where(mask, cand_ids, -1)
+    b, m = ids.shape
+    kp = min(expand * k, m)
+
+    def coarse(ids_blk: jax.Array) -> jax.Array:
+        """Coarse L2 on dequantized int8 rows for one (B, c) id block."""
+        valid = ids_blk >= 0
+        safe = jnp.where(valid, ids_blk, 0)
+        deq = qdb.q[safe].astype(jnp.float32) * qdb.scale[safe][:, :, None]
+        d = jnp.sum((queries[:, None, :] - deq) ** 2, axis=-1)
+        return jnp.where(valid, d, jnp.inf)
+
+    c = _pick_gather_chunk(b, m, queries.shape[1], chunk, bm, kp)
+    if c >= m:
+        d = coarse(ids)
+        neg, pos = jax.lax.top_k(-d, kp)
+        short_d = -neg
+        short_i = jnp.take_along_axis(ids, pos, axis=1)
+    else:
+        m_pad = -m % c
+        idp = jnp.pad(ids, ((0, 0), (0, m_pad)), constant_values=-1)
+        n_chunks = (m + m_pad) // c
+
+        def body(carry, blk):
+            acc_d, acc_i = carry
+            ids_blk = jax.lax.dynamic_slice_in_dim(idp, blk * c, c, axis=1)
+            d = coarse(ids_blk)
+            cat_d = jnp.concatenate([acc_d, d], axis=1)
+            cat_i = jnp.concatenate([acc_i, ids_blk], axis=1)
+            return merge_topk_pairs(cat_d, cat_i, kp), None
+
+        init = (jnp.full((b, kp), jnp.inf, jnp.float32),
+                jnp.full((b, kp), -1, jnp.int32))
+        (short_d, short_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    short_i = jnp.where(jnp.isinf(short_d), -1, short_i)
+    # exact fp32 rerank of the shortlist only (already deduped)
+    return rerank_fused(queries, short_i, short_i >= 0, qdb.fp, k,
+                        metric=metric, mode=mode, dedup=False, chunk=chunk,
+                        bq=bq, bm=bm)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "max_depth", "leaf_pad",
                                              "metric", "mode", "dedup",
                                              "chunk", "bq", "bm"))
@@ -129,14 +214,40 @@ def _fused_query_jit(forest: Forest, queries: jax.Array, db: jax.Array,
                         mode=mode, dedup=dedup, chunk=chunk, bq=bq, bm=bm)
 
 
-def fused_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,
-                cfg: ForestConfig, metric: str = "l2", dedup: bool = True,
-                mode: str = "auto", chunk: int = 0, bq: int = 8, bm: int = 32
+@functools.partial(jax.jit, static_argnames=("k", "max_depth", "leaf_pad",
+                                             "metric", "mode", "dedup",
+                                             "chunk", "bq", "bm", "expand"))
+def _fused_query_quantized_jit(forest: Forest, queries: jax.Array,
+                               qdb: QuantizedDB, k: int, max_depth: int,
+                               leaf_pad: int, metric: str, mode: str,
+                               dedup: bool, chunk: int, bq: int, bm: int,
+                               expand: int) -> tuple[jax.Array, jax.Array]:
+    leaves = traverse(forest, queries, max_depth)
+    cand_ids, mask = gather_candidates(forest, leaves, leaf_pad)
+    return rerank_fused_quantized(queries, cand_ids, mask, qdb, k,
+                                  expand=expand, metric=metric, mode=mode,
+                                  dedup=dedup, chunk=chunk, bq=bq, bm=bm)
+
+
+def fused_query(forest: Forest, queries: jax.Array,
+                db: jax.Array | QuantizedDB, k: int, cfg: ForestConfig,
+                metric: str = "l2", dedup: bool = True, mode: str = "auto",
+                chunk: int = 0, bq: int = 8, bm: int = 32, expand: int = 4
                 ) -> tuple[jax.Array, jax.Array]:
     """End-to-end single-jit forest query (the production hot path).
 
+    ``db`` selects the rerank source: a plain (N, d) f32 array reranks every
+    candidate exactly through the fused kernel; a ``QuantizedDB`` runs the
+    int8 coarse shortlist (k' = ``expand``*k) first and reranks only the
+    shortlist in fp32 — same fused pipeline, pluggable rerank source.
+
     Returns (dists (B, k), ids (B, k)); invalid slots: dist +inf, id -1.
     """
+    if isinstance(db, QuantizedDB):
+        cfg = cfg.resolved(db.fp.shape[0])
+        return _fused_query_quantized_jit(forest, queries, db, k,
+                                          cfg.max_depth, cfg.leaf_pad, metric,
+                                          mode, dedup, chunk, bq, bm, expand)
     cfg = cfg.resolved(db.shape[0])
     return _fused_query_jit(forest, queries, db, k, cfg.max_depth,
                             cfg.leaf_pad, metric, mode, dedup, chunk, bq, bm)

@@ -7,6 +7,13 @@ which is reranked against the fp32 rows (reading only k' fp32 rows/query).
 
 Recall cost is negligible when expand >= 4 (tests assert parity on the
 benchmark corpora).
+
+Role note: the production dispatch lives in ``core.pipeline`` — pass a
+``QuantizedDB`` to ``pipeline.fused_query`` (or use the unified
+``repro.index`` API with backend="rpf+int8").  The staged implementations
+here (``staged_rerank_quantized``/``staged_query_quantized``) materialize the
+(B, M, d) int8 candidate tensor and survive only as the correctness oracle;
+``query_forest_quantized`` is a deprecation shim over the fused path.
 """
 from __future__ import annotations
 
@@ -33,10 +40,15 @@ def quantize_db(db: jax.Array) -> QuantizedDB:
 
 
 @functools.partial(jax.jit, static_argnames=("k", "expand"))
-def rerank_quantized(queries: jax.Array, cand_ids: jax.Array,
-                     mask: jax.Array, qdb: QuantizedDB, k: int,
-                     expand: int = 4) -> tuple[jax.Array, jax.Array]:
-    """Coarse int8 L2 shortlist (k' = expand*k) -> exact fp32 rerank."""
+def staged_rerank_quantized(queries: jax.Array, cand_ids: jax.Array,
+                            mask: jax.Array, qdb: QuantizedDB, k: int,
+                            expand: int = 4) -> tuple[jax.Array, jax.Array]:
+    """Coarse int8 L2 shortlist (k' = expand*k) -> exact fp32 rerank.
+
+    ORACLE ONLY: gathers the full (B, M, d) int8 candidate tensor.  The
+    production path is ``pipeline.rerank_fused_quantized`` (chunk-streamed,
+    no full-width gather), validated against this function.
+    """
     mask = mask_duplicates(cand_ids, mask)
     # coarse distances on dequantized int8 rows (4x fewer HBM bytes)
     rows = qdb.q[jnp.where(mask, cand_ids, 0)]
@@ -53,10 +65,29 @@ def rerank_quantized(queries: jax.Array, cand_ids: jax.Array,
                        dedup=False)
 
 
-def query_forest_quantized(forest: Forest, queries: jax.Array,
+# kept under the historical name for external callers of the staged stage
+rerank_quantized = staged_rerank_quantized
+
+
+def staged_query_quantized(forest: Forest, queries: jax.Array,
                            qdb: QuantizedDB, k: int, cfg: ForestConfig,
-                           expand: int = 4):
+                           expand: int = 4) -> tuple[jax.Array, jax.Array]:
+    """Pre-fusion quantized query, kept verbatim as the correctness oracle."""
     cfg = cfg.resolved(qdb.fp.shape[0])
     leaves = traverse(forest, queries, cfg.max_depth)
     cand_ids, mask = gather_candidates(forest, leaves, cfg.leaf_pad)
-    return rerank_quantized(queries, cand_ids, mask, qdb, k=k, expand=expand)
+    return staged_rerank_quantized(queries, cand_ids, mask, qdb, k=k,
+                                   expand=expand)
+
+
+def query_forest_quantized(forest: Forest, queries: jax.Array,
+                           qdb: QuantizedDB, k: int, cfg: ForestConfig,
+                           expand: int = 4, metric: str = "l2",
+                           mode: str = "auto"):
+    """DEPRECATED shim: use ``pipeline.fused_query(forest, q, qdb, ...)`` or
+    ``repro.index`` with backend="rpf+int8".  Dispatches through the fused
+    single-pass pipeline (int8 shortlist source, no (B, M, d) gather)."""
+    from repro.core import pipeline  # local import to avoid cycle
+
+    return pipeline.fused_query(forest, queries, qdb, k, cfg, metric=metric,
+                                mode=mode, expand=expand)

@@ -1,26 +1,24 @@
-"""ANN index service: lifecycle + the paper's incremental-update path (§5).
+"""ANN index service: DEPRECATED shim over the unified index API.
 
-The paper: "upon the query of a new data point, we can easily update the
-indexer by saving the novel point in the arrived leaf node and split the node
-when necessary."  Here: inserts append to a host-side overflow buffer mapped
-by (tree, leaf); queries probe the static CSR AND the overflow; a background
-rebuild folds the overflow into a fresh forest once it exceeds
-``rebuild_frac`` of the DB (amortized O(log N) per insert).
+``AnnService`` predates ``repro.index``; it survives as a thin adapter so
+external callers keep working.  New code should use::
 
-Queries dispatch through the fused single-pass pipeline (core.pipeline):
-traverse + dedup + streamed rerank in one jit, no (B, M, d) intermediate.
+    from repro.index import IndexSpec, SearchParams, build_index
+    index = build_index(key, db, IndexSpec(backend="rpf", forest=cfg))
+    dists, ids = index.search(q, SearchParams(k=10))
+
+The behavior is unchanged: queries dispatch through the fused single-pass
+pipeline (core/pipeline.py); inserts append to a host-side overflow buffer
+(paper §5 incremental updates) probed at query time and folded into a rebuilt
+forest once they exceed ``rebuild_frac`` of the DB.
 """
 from __future__ import annotations
 
-import threading
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.forest import ForestConfig, build_forest
-from repro.core.pipeline import fused_query
-from repro.core.search import merge_topk_pairs
+from repro.core.forest import ForestConfig
+from repro.index import IndexSpec, SearchParams, build_index
 
 
 class AnnService:
@@ -32,54 +30,28 @@ class AnnService:
         self.seed = seed
         self.rebuild_frac = rebuild_frac
         self.mode = mode
-        self._lock = threading.Lock()
-        self.db = np.asarray(db, np.float32)
-        self._build(self.db)
-
-    def _build(self, db: np.ndarray):
-        self.rcfg = self.cfg.resolved(db.shape[0])
-        self.forest = build_forest(jax.random.key(self.seed),
-                                   jnp.asarray(db), self.cfg)
-        self.db_dev = jnp.asarray(db)
-        self.overflow_x: list[np.ndarray] = []   # appended points
-        # overflow ids start after the static db
-        self.n_static = db.shape[0]
+        self.index = build_index(
+            jax.random.key(seed), db,
+            IndexSpec(backend="rpf", forest=cfg, seed=seed,
+                      rebuild_frac=rebuild_frac))
 
     # ------------------------------------------------------------------ api
+    @property
+    def db(self) -> np.ndarray:
+        return self.index.db
+
     def insert(self, x: np.ndarray) -> int:
         """Paper §5 incremental update. Returns the new point's id."""
-        with self._lock:
-            self.overflow_x.append(np.asarray(x, np.float32))
-            new_id = self.n_static + len(self.overflow_x) - 1
-            if len(self.overflow_x) >= self.rebuild_frac * self.n_static:
-                self._rebuild_locked()
-            return new_id
-
-    def _rebuild_locked(self):
-        db = np.concatenate([self.db] + [o[None] for o in self.overflow_x])
-        self.db = db
-        self._build(db)
+        return self.index.add(x)
 
     def query(self, q: np.ndarray, k: int = 10
               ) -> tuple[np.ndarray, np.ndarray]:
         """q (B, d) -> (dists (B,k), ids (B,k)); probes index + overflow."""
-        q = jnp.asarray(np.atleast_2d(q).astype(np.float32))
-        with self._lock:
-            d, i = fused_query(self.forest, q, self.db_dev, k, self.cfg,
-                               metric=self.metric, mode=self.mode)
-            if self.overflow_x:
-                # brute-force the (small) overflow and merge
-                ox = jnp.asarray(np.stack(self.overflow_x))
-                from repro.core.distances import PAIRWISE
-                od = PAIRWISE[self.metric](q, ox)
-                oi = self.n_static + jnp.arange(ox.shape[0])[None, :]
-                cat_d = jnp.concatenate([d, od], axis=1)
-                cat_i = jnp.concatenate(
-                    [i, jnp.broadcast_to(oi, od.shape)], axis=1)
-                d, i = merge_topk_pairs(cat_d, cat_i, k)
+        d, i = self.index.search(q, SearchParams(k=k, metric=self.metric,
+                                                 mode=self.mode))
         return np.asarray(d), np.asarray(i)
 
     def stats(self) -> dict:
-        return {"n_static": self.n_static,
-                "n_overflow": len(self.overflow_x),
+        s = self.index.stats()
+        return {"n_static": s["n_static"], "n_overflow": s["n_overflow"],
                 "n_trees": self.cfg.n_trees}

@@ -84,12 +84,31 @@ def build_sharded_index(key: jax.Array, db: jax.Array, cfg: ForestConfig,
 def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
                   db_axes: Sequence[str] = ("data",), tree_axis: str = "model",
                   k: int = 10, metric: str = "l2", dedup: bool = True,
-                  kernel_mode: str = "auto"):
+                  kernel_mode: str = "auto", params=None):
     """Build the jit-able sharded query step: (index, queries, db) -> top-k.
 
     The returned function is the unit the launcher lowers/compiles for the
     dry-run, and the serving hot loop.
+
+    ``params`` (a ``repro.index.SearchParams``) is the unified-API spelling
+    of the query knobs; when given it overrides the k/metric/dedup/
+    kernel_mode arguments and supplies the candidate-chunk width.  Only the
+    per-cell rerank knobs apply here (k, metric, dedup, mode, chunk) — the
+    sharded path has no int8/adaptive/lsh composition, so a params carrying
+    ``adaptive_wave`` or ``min_candidates`` is rejected rather than
+    silently ignored.
     """
+    chunk = 0
+    if params is not None:
+        if params.adaptive_wave or params.min_candidates != 1:
+            raise ValueError(
+                "sharded queries support only the rerank knobs of "
+                "SearchParams (k/metric/dedup/mode/chunk); got "
+                f"adaptive_wave={params.adaptive_wave}, "
+                f"min_candidates={params.min_candidates}")
+        k, metric = params.k, params.metric
+        dedup, kernel_mode = params.dedup, params.mode
+        chunk = params.chunk
     cfg = index_cfg.resolved(n_local)
     all_axes = tuple(db_axes) + (tree_axis,)
 
@@ -104,7 +123,7 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
         #    gather + running top-k, no (B, M, d) intermediate per cell
         loc_d, loc_i = rerank_fused(queries, cand_ids, mask, db_local, k,
                                     metric=metric, mode=kernel_mode,
-                                    dedup=dedup)
+                                    dedup=dedup, chunk=chunk)
         # 3) globalize ids, then tiny all-gather merge over tree + db axes
         di = jax.lax.axis_index(tuple(db_axes))
         glob_i = jnp.where(loc_i >= 0, loc_i + di * n_local, -1)

@@ -2,7 +2,7 @@
 
 The container has no network access, so MNIST-784 and the Princeton/ISS-595
 descriptor sets are replaced by generators matched to their gross statistics
-(documented in DESIGN.md §6.5):
+(documented in DESIGN.md §7.5):
 
 * ``mnist_like``: 10 class manifolds in 784-D. Each class is an affine map of a
   low intrinsic-dimension (default 12) latent gaussian through a sparse,

@@ -1,0 +1,23 @@
+"""Unified Index / SearchParams API — the single public search surface.
+
+    from repro.index import IndexSpec, SearchParams, build_index
+
+    index = build_index(jax.random.key(0), db,
+                        IndexSpec(backend="rpf+int8",
+                                  forest=ForestConfig(n_trees=80)))
+    dists, ids = index.search(queries, SearchParams(k=10, adaptive_wave=20))
+    index.save("/tmp/idx");  index2 = load_index("/tmp/idx")
+
+Backends (``available_backends()``): rpf, rpf+int8, lsh-cascade, bruteforce.
+Every knob in SearchParams composes with every backend; all candidate-based
+backends rerank through the fused single-pass pipeline (DESIGN.md §4/§5).
+Backend modules import lazily on first ``build_index``/``get_backend`` call.
+"""
+from repro.index.api import (Index, available_backends, build_index,
+                             get_backend, load_index, register_backend)
+from repro.index.params import IndexSpec, SearchParams
+
+__all__ = [
+    "Index", "IndexSpec", "SearchParams", "available_backends",
+    "build_index", "get_backend", "load_index", "register_backend",
+]

@@ -1,0 +1,245 @@
+"""Unified Index API: one composable search surface over every backend.
+
+The paper's pitch is ONE indexer with tunable accuracy/cost knobs; this
+module is that surface (DESIGN.md §5).  An ``IndexSpec`` describes how an
+index is built, ``SearchParams`` describes one query's knobs, and every
+registered backend (rpf, rpf+int8, lsh-cascade, bruteforce) answers the same
+``search(queries, params)`` call — all candidate-based backends rerank
+through the fused single-pass pipeline (``core.pipeline``).
+
+Lifecycle (the ``Index`` protocol):
+  * ``build_index(key, db, spec)``   — registry-dispatched constructor,
+  * ``index.search(queries, params)``— (dists (B, k), ids (B, k)),
+  * ``index.add(x)``                 — paper §5 incremental update: the point
+    is queryable immediately (brute-force overflow merge) and folded into a
+    rebuilt index once the overflow exceeds ``spec.rebuild_frac`` of the DB,
+  * ``index.save(path)`` / ``load_index(path)`` — via the elastic
+    checkpointer (checkpoint/checkpointer.py): the device state tree lands
+    as one .npy per leaf + a manifest carrying the spec.
+
+Thread safety: search/add/save serialize on a per-index lock (the serving
+layer calls them from batcher threads).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer, _flatten_with_names
+from repro.core.search import merge_topk_pairs
+from repro.index.params import IndexSpec, SearchParams
+
+_BACKENDS: dict[str, type["Index"]] = {}
+_BUILTINS_LOADED = False
+
+
+def register_backend(name: str):
+    """Class decorator: register an Index subclass under ``name``."""
+
+    def deco(cls: type["Index"]) -> type["Index"]:
+        cls.backend = name
+        _BACKENDS[name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_backends_loaded() -> None:
+    # flag, not `if not _BACKENDS`: a user-registered backend must not
+    # suppress the built-in registrations
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        import repro.index.backends  # noqa: F401  (registers on import)
+
+
+def get_backend(name: str) -> type["Index"]:
+    _ensure_backends_loaded()
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown index backend {name!r}; "
+                       f"registered: {sorted(_BACKENDS)}")
+    return _BACKENDS[name]
+
+
+def available_backends() -> list[str]:
+    _ensure_backends_loaded()
+    return sorted(_BACKENDS)
+
+
+def build_index(key: jax.Array | None, db: np.ndarray,
+                spec: IndexSpec | None = None, **spec_kw) -> "Index":
+    """Build an index per ``spec`` (or ``IndexSpec(**spec_kw)``).
+
+    ``key`` seeds the randomized builds (rpf forests); None falls back to
+    ``jax.random.key(spec.seed)``.
+    """
+    spec = spec if spec is not None else IndexSpec(**spec_kw)
+    return get_backend(spec.backend).build(key, db, spec)
+
+
+def load_index(path: str) -> "Index":
+    """Restore an index saved with ``Index.save`` (backend from manifest)."""
+    manifest = _read_manifest(path)
+    spec = IndexSpec.from_dict(manifest["extra"]["spec"])
+    return get_backend(spec.backend)._load(path, spec, manifest)
+
+
+def _ckpt_dir(path: str, step: int) -> str:
+    return os.path.join(path, f"step_{step:010d}")
+
+
+def _read_manifest(path: str) -> dict:
+    step = Checkpointer(path).latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no index checkpoint under {path}")
+    with open(os.path.join(_ckpt_dir(path, step), "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest
+
+
+class Index:
+    """Base class: shared lifecycle; subclasses implement the static search.
+
+    Subclass contract:
+      * ``_build_state(db_dev)``       — build device/host search state,
+      * ``_search_static(q, params)``  — top-k over the static DB only,
+      * ``_state_skeleton()``          — pytree SHAPE of the saved state
+        (leaf values ignored; structure + names must match ``_state_tree``),
+      * ``_state_tree()``              — the pytree of arrays to checkpoint,
+      * ``_restore_state(state)``      — inverse of ``_state_tree``.
+    """
+
+    backend: str = ""
+
+    def __init__(self, key: jax.Array | None, db: np.ndarray,
+                 spec: IndexSpec):
+        self.spec = spec
+        self._lock = threading.Lock()
+        if key is None:
+            key = jax.random.key(spec.seed)
+        self.key = key
+        self.db = np.ascontiguousarray(np.asarray(db, np.float32))
+        self._overflow: list[np.ndarray] = []
+        self._build_state(jnp.asarray(self.db))
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def build(cls, key: jax.Array | None, db: np.ndarray,
+              spec: IndexSpec) -> "Index":
+        return cls(key, db, spec)
+
+    @property
+    def n_rows(self) -> int:
+        return self.db.shape[0] + len(self._overflow)
+
+    def stats(self) -> dict:
+        return {"backend": self.backend, "n_static": int(self.db.shape[0]),
+                "n_overflow": len(self._overflow)}
+
+    # --------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, params: SearchParams | None = None,
+               **params_kw) -> tuple[jax.Array, jax.Array]:
+        """queries (B, d) or (d,) -> (dists (B, k), ids (B, k)).
+
+        Invalid slots: dist +inf, id -1.  Probes the static index AND the
+        incremental-add overflow; pass ``params`` or SearchParams kwargs.
+        """
+        params = params if params is not None else SearchParams(**params_kw)
+        q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+        with self._lock:
+            d, i = self._search_static(q, params)
+            if self._overflow:
+                d, i = self._merge_overflow(q, d, i, params)
+        return d, i
+
+    def _merge_overflow(self, q: jax.Array, d: jax.Array, i: jax.Array,
+                        params: SearchParams
+                        ) -> tuple[jax.Array, jax.Array]:
+        """Brute-force the (small) overflow buffer and top-k merge."""
+        from repro.core.distances import PAIRWISE
+        ox = jnp.asarray(np.stack(self._overflow))
+        od = PAIRWISE[params.metric](q, ox)
+        oi = self.db.shape[0] + jnp.arange(ox.shape[0])[None, :]
+        cat_d = jnp.concatenate([d, od], axis=1)
+        cat_i = jnp.concatenate([i, jnp.broadcast_to(oi, od.shape)], axis=1)
+        return merge_topk_pairs(cat_d, cat_i, params.k)
+
+    # ------------------------------------------------------------------ add
+    def add(self, x: np.ndarray) -> int:
+        """Paper §5 incremental update. Returns the new point's id."""
+        with self._lock:
+            self._overflow.append(np.asarray(x, np.float32).reshape(-1))
+            new_id = self.db.shape[0] + len(self._overflow) - 1
+            if len(self._overflow) >= max(
+                    1, self.spec.rebuild_frac * self.db.shape[0]):
+                self._fold_overflow()
+            return new_id
+
+    def _fold_overflow(self) -> None:
+        """Rebuild the static state over db + overflow (caller holds lock)."""
+        if not self._overflow:
+            return
+        self.db = np.concatenate([self.db] + [o[None] for o in self._overflow])
+        self._overflow = []
+        self._build_state(jnp.asarray(self.db))
+
+    # -------------------------------------------------------------- save/load
+    def save(self, path: str) -> str:
+        """Checkpoint the index under ``path`` (folds pending adds first, so
+        the saved state is the compacted static index)."""
+        with self._lock:
+            self._fold_overflow()
+            ckpt = Checkpointer(path, keep=1)
+            return ckpt.save(0, self._state_tree(),
+                             extra={"spec": self.spec.to_dict(),
+                                    "backend": self.backend})
+
+    @classmethod
+    def load(cls, path: str) -> "Index":
+        manifest = _read_manifest(path)
+        return cls._load(path, IndexSpec.from_dict(manifest["extra"]["spec"]),
+                         manifest)
+
+    @classmethod
+    def _load(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
+        shapes = {leaf["name"]: (leaf["shape"], leaf["dtype"])
+                  for leaf in manifest["leaves"]}
+        skeleton = cls._state_skeleton(spec)
+        named = _flatten_with_names(skeleton)
+        leaves = []
+        for name, _ in named:
+            shape, dtype = shapes[name]
+            leaves.append(np.zeros(shape, dtype))
+        template = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(skeleton), leaves)
+        state, _ = Checkpointer(path).restore(template,
+                                             step=manifest["step"])
+        obj = cls.__new__(cls)
+        obj.spec = spec
+        obj._lock = threading.Lock()
+        obj._overflow = []
+        obj._restore_state(state)
+        return obj
+
+    # ------------------------------------------------------ subclass hooks
+    def _build_state(self, db_dev: jax.Array) -> None:
+        raise NotImplementedError
+
+    def _search_static(self, q: jax.Array, params: SearchParams
+                       ) -> tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def _state_tree(self) -> dict:
+        raise NotImplementedError
+
+    @classmethod
+    def _state_skeleton(cls, spec: IndexSpec) -> dict:
+        raise NotImplementedError
+
+    def _restore_state(self, state: dict) -> None:
+        raise NotImplementedError

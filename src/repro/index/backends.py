@@ -1,0 +1,185 @@
+"""The registered index backends of the unified API (DESIGN.md §5).
+
+Every candidate-based backend funnels into ``core.pipeline``'s fused
+single-pass rerank — the (B, M, d) gathered candidate tensor never
+materializes on any of them:
+
+  rpf          random-partition forest, fp32 fused rerank (the paper)
+  rpf+int8     same forest, int8 coarse shortlist -> fp32 fused rerank
+  lsh-cascade  multi-radius LSH candidates -> shared fused rerank stage
+  bruteforce   exact scan via the fused matmul/chi2 top-k kernels (oracle
+               backend: what the others are measured against)
+
+``SearchParams.adaptive_wave`` composes with both rpf backends (early-exit
+wave scheduling, core/adaptive.py); ``expand`` tunes the int8 shortlist.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptive import adaptive_query
+from repro.core.forest import Forest, build_forest
+from repro.core.knn import exact_knn
+from repro.core.lsh import CascadedLSH
+from repro.core.pipeline import fused_query, rerank_fused
+from repro.core.quantized import QuantizedDB, quantize_db
+from repro.index.api import Index, register_backend
+from repro.index.params import IndexSpec, SearchParams
+from repro.kernels import ops
+
+_FOREST_SKELETON = Forest(proj_idx=0, proj_coef=0, thresh=0, child_base=0,
+                          perm=0, leaf_offset=0, leaf_count=0, n_nodes=0)
+
+
+@register_backend("rpf")
+class RPFIndex(Index):
+    """The paper's random-partition-forest index, fused fp32 rerank."""
+
+    def _build_state(self, db_dev: jax.Array) -> None:
+        self.db_dev = db_dev
+        self.forest = build_forest(self.key, db_dev, self.spec.forest,
+                                   tree_chunk=self.spec.tree_chunk)
+        self.last_trees_used = self.spec.forest.n_trees
+
+    def _rerank_source(self) -> jax.Array | QuantizedDB:
+        return self.db_dev
+
+    def _search_static(self, q: jax.Array, params: SearchParams
+                       ) -> tuple[jax.Array, jax.Array]:
+        src = self._rerank_source()
+        cfg = self.spec.forest
+        if params.adaptive_wave > 0:
+            d, i, used = adaptive_query(
+                self.forest, q, src, params.k, cfg,
+                wave=params.adaptive_wave, tol=params.tol,
+                metric=params.metric, mode=params.mode, chunk=params.chunk,
+                expand=params.expand, dedup=params.dedup)
+            self.last_trees_used = used
+            return d, i
+        self.last_trees_used = cfg.n_trees
+        return fused_query(self.forest, q, src, params.k, cfg,
+                           metric=params.metric, dedup=params.dedup,
+                           mode=params.mode, chunk=params.chunk,
+                           expand=params.expand)
+
+    def stats(self) -> dict:
+        return {**super().stats(), "n_trees": self.spec.forest.n_trees}
+
+    # ------------------------------------------------------------- save/load
+    def _state_tree(self) -> dict:
+        # self.db stays host-side: Checkpointer snapshots leaves via
+        # device_get, which passes numpy arrays through copy-free
+        return {"db": self.db,
+                "key_data": jax.random.key_data(self.key),
+                "forest": self.forest}
+
+    @classmethod
+    def _state_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0, "key_data": 0, "forest": _FOREST_SKELETON}
+
+    def _restore_state(self, state: dict) -> None:
+        self.key = jax.random.wrap_key_data(
+            jnp.asarray(state["key_data"], jnp.uint32))
+        self.db = np.asarray(state["db"], np.float32)
+        self.db_dev = jnp.asarray(self.db)
+        self.forest = state["forest"]
+        self.last_trees_used = self.spec.forest.n_trees
+
+
+@register_backend("rpf+int8")
+class RPFInt8Index(RPFIndex):
+    """Same forest; int8 coarse shortlist -> exact fp32 fused rerank.
+
+    ``SearchParams.expand`` sets the shortlist width k' = expand*k; the
+    coarse stage is always L2 (the per-row int8 calibration is L2-shaped),
+    the exact stage honors ``params.metric``.
+    """
+
+    def _build_state(self, db_dev: jax.Array) -> None:
+        super()._build_state(db_dev)
+        self.qdb = quantize_db(db_dev)
+
+    def _rerank_source(self) -> QuantizedDB:
+        return self.qdb
+
+    def _restore_state(self, state: dict) -> None:
+        super()._restore_state(state)
+        self.qdb = quantize_db(self.db_dev)
+
+
+@register_backend("lsh-cascade")
+class LSHCascadeIndex(Index):
+    """The paper's LSH-cascade baseline behind the same search surface.
+
+    Host-side bucket probe (vectorized: one hash per batch per level), then
+    the SAME fused rerank stage as the forest backends — fair accuracy/cost
+    comparisons come free.
+    """
+
+    def _build_state(self, db_dev: jax.Array) -> None:
+        self.db_dev = db_dev
+        self.cascade = CascadedLSH(
+            self.db, list(self.spec.lsh_radii),
+            n_tables=self.spec.lsh_tables, n_bits=self.spec.lsh_bits,
+            width_scale=self.spec.lsh_width_scale, seed=self.spec.seed)
+        self.last_mean_candidates = 0.0
+
+    def _search_static(self, q: jax.Array, params: SearchParams
+                       ) -> tuple[jax.Array, jax.Array]:
+        ids, mask = self.cascade.retrieve_batch(
+            np.asarray(q), min_candidates=params.min_candidates)
+        self.last_mean_candidates = float(mask.sum(1).mean())
+        # candidate sets are already unique per query -> dedup not needed
+        return rerank_fused(q, jnp.asarray(ids), jnp.asarray(mask),
+                            self.db_dev, params.k, metric=params.metric,
+                            mode=params.mode, dedup=False, chunk=params.chunk)
+
+    def stats(self) -> dict:
+        return {**super().stats(), "n_levels": len(self.spec.lsh_radii),
+                "n_tables": self.spec.lsh_tables}
+
+    def _state_tree(self) -> dict:
+        return {"db": self.db,
+                "key_data": jax.random.key_data(self.key)}
+
+    @classmethod
+    def _state_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0, "key_data": 0}
+
+    def _restore_state(self, state: dict) -> None:
+        self.key = jax.random.wrap_key_data(
+            jnp.asarray(state["key_data"], jnp.uint32))
+        self.db = np.asarray(state["db"], np.float32)
+        # tables are a pure function of (db, spec): rebuild deterministically
+        self._build_state(jnp.asarray(self.db))
+
+
+@register_backend("bruteforce")
+class BruteForceIndex(Index):
+    """Exact scan through the fused score+top-k kernels (the recall oracle)."""
+
+    def _build_state(self, db_dev: jax.Array) -> None:
+        self.db_dev = db_dev
+
+    def _search_static(self, q: jax.Array, params: SearchParams
+                       ) -> tuple[jax.Array, jax.Array]:
+        if params.metric == "cosine":   # not a kernel metric; jnp pairwise
+            return exact_knn(q, self.db_dev, k=params.k, metric="cosine")
+        return ops.topk(q, self.db_dev, params.k, metric=params.metric,
+                        mode=params.mode)
+
+    def _state_tree(self) -> dict:
+        return {"db": self.db,
+                "key_data": jax.random.key_data(self.key)}
+
+    @classmethod
+    def _state_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0, "key_data": 0}
+
+    def _restore_state(self, state: dict) -> None:
+        self.key = jax.random.wrap_key_data(
+            jnp.asarray(state["key_data"], jnp.uint32))
+        self.db = np.asarray(state["db"], np.float32)
+        self.db_dev = jnp.asarray(self.db)

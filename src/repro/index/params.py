@@ -1,0 +1,90 @@
+"""IndexSpec / SearchParams — the two value types of the unified index API.
+
+Kept dependency-light (only ForestConfig) so any layer — core, serving,
+benchmarks, the sharded runtime — can import them without cycles.  Both are
+frozen (hashable), so SearchParams can ride through jit static arguments.
+
+See DESIGN.md §5 for the full spec/params tables and the backend registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.forest import ForestConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Every query-time knob, composable with every backend.
+
+    k              neighbors returned
+    metric         l2 | dot | chi2 | cosine (exact-rerank metric)
+    mode           kernel dispatch: auto (Pallas on TPU) | pallas | ref
+    dedup          mask duplicate candidate ids before rerank
+    expand         int8 shortlist width multiplier (quantized backends):
+                   coarse stage keeps expand*k candidates for fp32 rerank
+    adaptive_wave  >0 queries the forest in waves of this many trees with
+                   early exit (rpf backends); 0 = single full-forest pass
+    tol            early-exit threshold: stop when the mean k-th distance
+                   improves by less than this relative fraction per wave
+    chunk          candidate-axis streaming width (0 = budget-derived)
+    min_candidates lsh-cascade: probe radii until this many candidates
+    """
+
+    k: int = 10
+    metric: str = "l2"
+    mode: str = "auto"
+    dedup: bool = True
+    expand: int = 4
+    adaptive_wave: int = 0
+    tol: float = 0.01
+    chunk: int = 0
+    min_candidates: int = 1
+
+    def __post_init__(self):
+        if self.mode not in ("auto", "pallas", "ref"):
+            raise ValueError(f"mode must be auto|pallas|ref, got {self.mode!r}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Build-time description of an index: backend + build config.
+
+    backend        registry key: rpf | rpf+int8 | lsh-cascade | bruteforce
+    forest         ForestConfig for the rpf backends (trees/capacity/ratio)
+    lsh_radii      cascade radii (increasing) for lsh-cascade
+    lsh_tables     tables per cascade level (L)
+    lsh_bits       concatenated hashes per table (K)
+    lsh_width_scale  bucket width = width_scale * radius
+    tree_chunk     >0 builds forest trees in lax.map chunks of this size
+                   (bounds peak build memory for very large L)
+    seed           fallback build seed when no PRNG key is supplied
+    rebuild_frac   incremental adds trigger a background rebuild once the
+                   overflow exceeds this fraction of the static DB
+    """
+
+    backend: str = "rpf"
+    forest: ForestConfig = ForestConfig()
+    lsh_radii: tuple[float, ...] = (0.4, 0.53, 0.63, 0.88)
+    lsh_tables: int = 10
+    lsh_bits: int = 12
+    lsh_width_scale: float = 1.0
+    tree_chunk: int = 0
+    seed: int = 0
+    rebuild_frac: float = 0.1
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["forest"] = dict(self.forest._asdict())
+        d["lsh_radii"] = list(self.lsh_radii)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "IndexSpec":
+        d = dict(d)
+        d["forest"] = ForestConfig(**d.get("forest", {}))
+        d["lsh_radii"] = tuple(d.get("lsh_radii", ()))
+        return cls(**d)

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.forest import ForestConfig
 from repro.core.knn import exact_knn
+from repro.index import IndexSpec, SearchParams
 from repro.serve.ann_serve import make_ann_server
 
 
@@ -40,12 +41,14 @@ def main() -> None:
         db, _, queries, _ = iss_like(n=args.n_db, n_test=args.n_queries)
         metric = "chi2"
 
-    cfg = ForestConfig(n_trees=args.trees, capacity=args.capacity,
-                       split_ratio=0.3)
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=args.trees,
+                                         capacity=args.capacity,
+                                         split_ratio=0.3))
     t0 = time.perf_counter()
-    service, batcher = make_ann_server(db, cfg, k=args.k, metric=metric)
+    index, batcher = make_ann_server(db, spec, k=args.k, metric=metric)
     print(f"[serve] index built over {args.n_db} x {db.shape[1]} "
-          f"in {time.perf_counter()-t0:.1f}s; {service.stats()}")
+          f"in {time.perf_counter()-t0:.1f}s; {index.stats()}")
 
     # fire concurrent requests through the batcher
     results = [None] * args.requests
@@ -72,10 +75,10 @@ def main() -> None:
     print(f"[serve] recall@1 = {rec:.3f}")
 
     # the paper's incremental-update path (§5)
-    new_id = service.insert(queries[0])
-    d, i = service.query(queries[0][None], k=1)
-    print(f"[serve] inserted id {new_id}; self-query -> id {int(i[0, 0])} "
-          f"dist {float(d[0, 0]):.2e}")
+    new_id = index.add(queries[0])
+    d, i = index.search(queries[0][None], SearchParams(k=1, metric=metric))
+    print(f"[serve] inserted id {new_id}; self-query -> id "
+          f"{int(np.asarray(i)[0, 0])} dist {float(np.asarray(d)[0, 0]):.2e}")
     batcher.stop()
 
 

@@ -1,47 +1,74 @@
-"""End-to-end ANN serving: RPF index behind a dynamic batcher.
+"""End-to-end ANN serving: a unified-API index behind a dynamic batcher.
 
-This is the paper's system as a service: build the forest over a corpus,
-then serve batched k-NN queries through the fused single-pass pipeline
-(core/pipeline.py).  Also provides the recsys retrieval bridge —
-MIND interest vectors -> RPF candidate pruning -> exact rerank (compared
-against brute-force fused matmul_topk in benchmarks).
+This is the paper's system as a service: build any registered backend over a
+corpus (IndexSpec), then serve batched k-NN queries through the fused
+single-pass pipeline (core/pipeline.py).  Batches are PADDED to ``max_batch``
+before hitting the index so the jitted query step compiles exactly once —
+variable-size batches would otherwise trigger a fresh XLA compile per
+distinct size (serve/batching.py promises fixed batch shapes).
+
+Also provides the recsys retrieval bridge — MIND interest vectors -> RPF
+candidate pruning -> exact rerank (compared against brute-force fused
+matmul_topk in benchmarks).
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.core.forest import ForestConfig
 from repro.core.service import AnnService
+from repro.index import Index, IndexSpec, SearchParams, build_index
 from repro.serve.batching import DynamicBatcher
 
 
-def make_ann_server(db: np.ndarray, cfg: ForestConfig, k: int = 10,
-                    metric: str = "l2", max_batch: int = 128,
-                    max_wait_s: float = 0.002, mode: str = "auto"):
-    """Returns (service, batcher). Submit 1-D query vectors; get (d, ids).
+def make_ann_server(db: np.ndarray, spec: IndexSpec | ForestConfig,
+                    k: int = 10, metric: str = "l2", max_batch: int = 128,
+                    max_wait_s: float = 0.002, mode: str = "auto",
+                    params: SearchParams | None = None
+                    ) -> tuple[Index, DynamicBatcher]:
+    """Returns (index, batcher). Submit 1-D query vectors; get (d, ids).
 
-    ``mode`` is the kernel-dispatch policy (auto|pallas|ref) forwarded to the
-    fused query pipeline the service runs on.
+    ``spec`` selects the backend (a bare ForestConfig is accepted as
+    shorthand for the rpf backend); ``params`` carries the per-query knobs
+    (k/metric/mode arguments are the legacy shorthand for the common ones).
     """
-    service = AnnService(db, cfg, metric=metric, mode=mode)
+    if isinstance(spec, ForestConfig):
+        spec = IndexSpec(backend="rpf", forest=spec)
+    if params is None:
+        params = SearchParams(k=k, metric=metric, mode=mode)
+    index = build_index(jax.random.key(spec.seed), db, spec)
+    d_dim = index.db.shape[1]
 
     def serve_batch(payloads: list) -> list:
+        # fixed batch shape: pad to max_batch, slice results — one compile.
+        # Pad rows REPEAT the last real query (not zeros): batch-coupled
+        # paths (the adaptive-wave stop criterion is a batch mean; the
+        # lsh cascade probes per row) must not be skewed by synthetic points.
+        n = len(payloads)
         q = np.stack(payloads)
-        d, i = service.query(q, k=k)
-        return [(d[j], i[j]) for j in range(len(payloads))]
+        q = np.concatenate(
+            [q, np.repeat(q[-1:], max_batch - n, axis=0)]) if n < max_batch \
+            else q
+        dists, ids = index.search(q, params)
+        dists, ids = np.asarray(dists), np.asarray(ids)
+        return [(dists[j], ids[j]) for j in range(n)]
 
     batcher = DynamicBatcher(serve_batch, max_batch=max_batch,
                              max_wait_s=max_wait_s).start()
-    return service, batcher
+    return index, batcher
 
 
-def retrieval_via_index(service: AnnService, interests: np.ndarray,
+def retrieval_via_index(service: "AnnService | Index", interests: np.ndarray,
                         k: int = 100) -> tuple[np.ndarray, np.ndarray]:
     """Multi-interest retrieval (MIND): query the index once per interest,
     merge by max-score (= min inner-product distance)."""
     b, n_int, d = interests.shape
     flat = interests.reshape(b * n_int, d)
-    dists, ids = service.query(flat, k=k)
+    if isinstance(service, Index):
+        dists, ids = map(np.asarray, service.search(flat, SearchParams(k=k)))
+    else:
+        dists, ids = service.query(flat, k=k)
     dists = dists.reshape(b, n_int * k)
     ids = ids.reshape(b, n_int * k)
     order = np.argsort(dists, axis=1)[:, :k]

@@ -27,8 +27,14 @@ class Request:
 
 class DynamicBatcher:
     def __init__(self, serve_batch_fn: Callable[[list], list],
-                 max_batch: int = 64, max_wait_s: float = 0.005):
-        """serve_batch_fn: list[payload] -> list[result] (padded inside)."""
+                 max_batch: int = 64, max_wait_s: float = 0.005,
+                 latency_window: int = 1024):
+        """serve_batch_fn: list[payload] -> list[result] (padded inside).
+
+        Latencies are kept in a fixed-size ring buffer of ``latency_window``
+        samples (bounded memory under sustained traffic); p99_latency_ms is
+        computed over that window.
+        """
         self.fn = serve_batch_fn
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -37,7 +43,8 @@ class DynamicBatcher:
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self.stats = {"batches": 0, "requests": 0, "mean_batch": 0.0,
                       "p99_latency_ms": 0.0}
-        self._latencies: list[float] = []
+        self._latencies = np.zeros(max(1, latency_window), np.float64)
+        self._latency_count = 0      # total samples ever observed
 
     def start(self):
         self._worker.start()
@@ -76,14 +83,18 @@ class DynamicBatcher:
                     break
             results = self.fn([r.payload for r in batch])
             now = time.perf_counter()
+            window = self._latencies.shape[0]
             for r, res in zip(batch, results):
                 r.result = res
-                self._latencies.append((now - r.enqueue_t) * 1e3)
+                self._latencies[self._latency_count % window] = \
+                    (now - r.enqueue_t) * 1e3
+                self._latency_count += 1
                 r.event.set()
             self.stats["batches"] += 1
             self.stats["requests"] += len(batch)
             self.stats["mean_batch"] = (self.stats["requests"]
                                         / self.stats["batches"])
-            if self._latencies:
+            if self._latency_count:
+                filled = self._latencies[:min(self._latency_count, window)]
                 self.stats["p99_latency_ms"] = float(
-                    np.percentile(self._latencies[-1000:], 99))
+                    np.percentile(filled, 99))
