@@ -1,0 +1,158 @@
+"""Mutation churn under the segmented index lifecycle (DESIGN.md §8).
+
+Interleaves add/delete/upsert/search against one index and reports search
+latency percentiles — including while a background ``compact()`` rebuild is
+in flight.  The pre-segment design re-stacked the overflow on every query
+and stalled every reader behind the synchronous fold-rebuild; this
+benchmark is the regression tripwire for both fixes:
+
+  * search p50/p99 during steady churn (delta cache, tombstone masking),
+  * search p50/p99 DURING the background compaction (readers must keep
+    answering from the published view while the rebuild runs off-lock),
+  * correctness: after the churn + compaction, results match a numpy
+    brute-force oracle over the surviving live point set.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.mutation_churn [--smoke] [--mode auto]
+
+Writes artifacts/BENCH_mutation_churn.json (uploaded by the CI bench-smoke
+job) and merges into artifacts/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ForestConfig
+from repro.index import IndexSpec, SearchParams, build_index
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_mutation_churn.json")
+
+
+def _pct(xs: list, p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+
+
+def run_churn(n_db: int, dim: int, n_ops: int, batch: int, mode: str,
+              seed: int = 0) -> dict:
+    from repro.data.synthetic import clustered_gaussians
+    rng = np.random.default_rng(seed)
+    db = clustered_gaussians(n_db, dim, n_clusters=max(8, n_db // 128),
+                             seed=seed)
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=16, capacity=16),
+                     delta_cap=max(64, n_db // 20))
+    index = build_index(jax.random.key(seed), db, spec)
+    params = SearchParams(k=10, mode=mode)
+    queries = db[rng.integers(0, n_db, size=batch)] + 0.005
+
+    # warm the jitted search paths (steady-state latency is the metric)
+    jax.block_until_ready(index.search(queries, params))
+
+    live = list(range(n_db))
+    dead: list = []
+    lat_steady, lat_compact, lat_post = [], [], []
+    compact_thread = None
+    compact_at = n_ops // 2
+    t_compact_start = t_compact = float("nan")
+
+    for op in range(n_ops):
+        gid = index.add(rng.normal(size=dim).astype(np.float32))
+        live.append(gid)
+        victim = live.pop(int(rng.integers(len(live))))
+        index.delete(victim)
+        dead.append(victim)
+        if op % 7 == 6:
+            index.upsert(live[-1], rng.normal(size=dim).astype(np.float32))
+        if op == compact_at:
+            # hammer searches for the whole background rebuild: every one
+            # must answer from the published view without blocking on it
+            t_compact_start = time.perf_counter()
+            compact_thread = index.compact(block=False)
+            while compact_thread.is_alive() and len(lat_compact) < 500:
+                t0 = time.perf_counter()
+                jax.block_until_ready(index.search(queries, params))
+                lat_compact.append(time.perf_counter() - t0)
+            compact_thread.join()
+            t_compact = time.perf_counter() - t_compact_start
+            continue
+
+        t0 = time.perf_counter()
+        jax.block_until_ready(index.search(queries, params))
+        dt = time.perf_counter() - t0
+        if compact_thread is not None:
+            lat_post.append(dt)
+        else:
+            lat_steady.append(dt)
+
+    # correctness after the dust settles: compact and compare against a
+    # numpy brute-force oracle over the live point set
+    index.compact()
+    gids, rows = index.live_points()
+    d = np.sum((queries[:, None, :] - rows[None, :, :]) ** 2, axis=-1)
+    oracle = gids[np.argsort(d, axis=1)[:, :params.k]]
+    _, got = index.search(queries, params)
+    got = np.asarray(got)
+    recall = float((got[:, :, None] == oracle[:, None, :]).any(-1).mean())
+    deleted_surfaced = bool(np.isin(got, np.asarray(dead)).any())
+
+    st = index.stats()
+    return {
+        "n_db": n_db, "dim": dim, "n_ops": n_ops, "batch": batch,
+        "mode": mode,
+        "p50_steady_ms": round(_pct(lat_steady, 50) * 1e3, 3),
+        "p99_steady_ms": round(_pct(lat_steady, 99) * 1e3, 3),
+        "p50_during_compaction_ms": round(_pct(lat_compact, 50) * 1e3, 3),
+        "p99_during_compaction_ms": round(_pct(lat_compact, 99) * 1e3, 3),
+        "p50_post_compaction_ms": round(_pct(lat_post, 50) * 1e3, 3),
+        "p99_post_compaction_ms": round(_pct(lat_post, 99) * 1e3, 3),
+        "searches_during_compaction": len(lat_compact),
+        "compaction_wall_s": round(t_compact, 3),
+        "final_recall_vs_oracle": recall,
+        "deleted_id_surfaced": deleted_surfaced,
+        "n_segments_final": st["n_segments"],
+        "n_compactions": st["n_compactions"],
+    }
+
+
+def main(smoke: bool = False, mode: str = "auto") -> dict:
+    print(f"[mutation_churn] mode={mode} smoke={smoke}")
+    if smoke:
+        row = run_churn(n_db=1500, dim=24, n_ops=60, batch=8, mode=mode)
+    else:
+        row = run_churn(n_db=20000, dim=64, n_ops=400, batch=32, mode=mode)
+    print(f"  steady p50={row['p50_steady_ms']:.2f}ms "
+          f"p99={row['p99_steady_ms']:.2f}ms | during compaction "
+          f"p50={row['p50_during_compaction_ms']:.2f}ms "
+          f"p99={row['p99_during_compaction_ms']:.2f}ms "
+          f"({row['searches_during_compaction']} searches overlapped a "
+          f"{row['compaction_wall_s']:.2f}s rebuild)")
+    print(f"  final recall vs oracle = {row['final_recall_vs_oracle']:.3f}, "
+          f"deleted id surfaced = {row['deleted_id_surfaced']}")
+    out = {"row": row, "smoke": smoke, "mode": mode,
+           "backend": jax.default_backend(),
+           "recall_floor_ok": row["final_recall_vs_oracle"] >= 0.8,
+           "no_tombstone_leak": not row["deleted_id_surfaced"]}
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  -> {os.path.relpath(ARTIFACT)}")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny corpus for CI (seconds, not minutes)")
+    p.add_argument("--mode", default="auto",
+                   choices=["auto", "pallas", "ref"])
+    args = p.parse_args()
+    result = main(smoke=args.smoke, mode=args.mode)
+    from benchmarks.common import record
+    record({}, "mutation_churn", result)   # run.py records for harness runs

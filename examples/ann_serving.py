@@ -56,6 +56,18 @@ def main(tiny: bool = False):
     assert int(i[0, 0]) == new_id, (int(i[0, 0]), new_id)
     print(f"inserted point {new_id}: self-query hits it at dist "
           f"{float(d[0, 0]):.2e}")
+
+    # mutate WHILE serving (DESIGN.md §8): delete + background compaction —
+    # batcher threads keep answering from the published immutable view
+    index.delete(new_id)
+    t = index.compact(block=False)
+    d, i = batcher(novel)                       # served mid-rebuild
+    assert int(i[0]) != new_id, "tombstoned id surfaced while compacting"
+    t.join()
+    st = index.stats()
+    print(f"deleted {new_id} + compacted in the background while serving: "
+          f"{st['n_live']} live rows, {st['n_segments']} segment(s), "
+          f"{st['n_compactions']} compaction(s)")
     batcher.stop()
 
 

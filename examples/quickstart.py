@@ -53,6 +53,29 @@ def main(tiny: bool = False):
           f"{float(recall_at_k(ids8w, true_ids)):.3f} using "
           f"{index8.last_trees_used}/{cfg.n_trees} trees")
 
+    # ---- mutating an index: add / delete / upsert / compact --------------
+    # (paper §5 + DESIGN.md §8: adds land in a delta buffer, deletes are
+    # tombstones masked inside the fused rerank, compact() rebuilds the
+    # live set in the background without blocking searches)
+    index = build_index(jax.random.key(0), db,
+                        IndexSpec(backend="rpf",
+                                  forest=ForestConfig(n_trees=20,
+                                                      capacity=12)))
+    novel = (0.5 * (db[0] + db[1])).astype(np.float32)
+    gid = index.add(novel)                      # queryable immediately
+    _, ids = index.search(novel[None], SearchParams(k=1))
+    assert int(np.asarray(ids)[0, 0]) == gid
+    index.delete([0, 1])                        # gone from results at once
+    index.upsert(2, novel * 0.9)                # replace id 2's vector
+    _, ids = index.search(novel[None], SearchParams(k=3))
+    assert not np.isin(np.asarray(ids), [0, 1]).any()
+    st = index.stats()
+    print(f"mutated: {st['n_live']} live rows, {st['n_tombstones']} "
+          f"tombstones, {st['n_segments']} segment(s)")
+    index.compact()                             # explicit rebuild (off-lock)
+    print("compacted:", {k: index.stats()[k]
+                         for k in ("n_live", "n_tombstones", "n_segments")})
+
     # ---- k-NN with the chi-square metric (the paper's ISS experiment) ----
     db_h = np.abs(db)
     index_h = build_index(jax.random.key(1), db_h,

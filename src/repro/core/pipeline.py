@@ -68,14 +68,22 @@ def _pick_chunk(b: int, m: int, chunk: int, bm: int, k: int) -> int:
 def rerank_fused(queries: jax.Array, cand_ids: jax.Array, mask: jax.Array,
                  db: jax.Array, k: int, metric: str = "l2",
                  mode: str = "auto", dedup: bool = True, chunk: int = 0,
-                 bq: int = 8, bm: int = 32, rows_budget: int = 0
+                 bq: int = 8, bm: int = 32, rows_budget: int = 0,
+                 valid: jax.Array | None = None
                  ) -> tuple[jax.Array, jax.Array]:
     """Chunk-streamed fused rerank: (B, M) candidate ids -> top-k.
 
     Drop-in for search.rerank_topk but never materializes (B, M, d); the
     per-chunk work dispatches through the mode policy (Pallas kernel on TPU
     or forced, jnp reference otherwise).
+
+    ``valid`` is an optional (N,) bool row-validity mask (the segmented
+    index's tombstone bitmap): candidates whose DB row is dead are folded
+    into the existing id/mask path — their slots become id -1 before the
+    kernel, so they issue no DMA and never occupy a top-k slot.
     """
+    if valid is not None:
+        mask = mask & valid[jnp.clip(cand_ids, 0, valid.shape[0] - 1)]
     if dedup:
         mask = mask_duplicates(cand_ids, mask)
     ids = jnp.where(mask, cand_ids, -1)
@@ -145,7 +153,8 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
                            mask: jax.Array, qdb: QuantizedDB, k: int,
                            expand: int = 4, metric: str = "l2",
                            mode: str = "auto", dedup: bool = True,
-                           chunk: int = 0, bq: int = 8, bm: int = 32
+                           chunk: int = 0, bq: int = 8, bm: int = 32,
+                           valid: jax.Array | None = None
                            ) -> tuple[jax.Array, jax.Array]:
     """int8-shortlist-then-fp32 rerank source for the fused pipeline.
 
@@ -155,9 +164,14 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
     (B, k') shortlist exactly against the fp32 rows through the fused
     gather+distance+top-k kernel.  Neither stage materializes (B, M, d).
 
+    ``valid`` (optional (N,) bool tombstone mask) is applied at the coarse
+    stage, so dead rows never occupy shortlist slots.
+
     Matches the staged quantized oracle (core.quantized.staged_rerank_quantized)
     exactly on tie-free data.
     """
+    if valid is not None:
+        mask = mask & valid[jnp.clip(cand_ids, 0, valid.shape[0] - 1)]
     if dedup:
         mask = mask_duplicates(cand_ids, mask)
     ids = jnp.where(mask, cand_ids, -1)
@@ -206,12 +220,14 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
                                              "chunk", "bq", "bm"))
 def _fused_query_jit(forest: Forest, queries: jax.Array, db: jax.Array,
                      k: int, max_depth: int, leaf_pad: int, metric: str,
-                     mode: str, dedup: bool, chunk: int, bq: int, bm: int
+                     mode: str, dedup: bool, chunk: int, bq: int, bm: int,
+                     valid: jax.Array | None
                      ) -> tuple[jax.Array, jax.Array]:
     leaves = traverse(forest, queries, max_depth)
     cand_ids, mask = gather_candidates(forest, leaves, leaf_pad)
     return rerank_fused(queries, cand_ids, mask, db, k, metric=metric,
-                        mode=mode, dedup=dedup, chunk=chunk, bq=bq, bm=bm)
+                        mode=mode, dedup=dedup, chunk=chunk, bq=bq, bm=bm,
+                        valid=valid)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "max_depth", "leaf_pad",
@@ -221,18 +237,21 @@ def _fused_query_quantized_jit(forest: Forest, queries: jax.Array,
                                qdb: QuantizedDB, k: int, max_depth: int,
                                leaf_pad: int, metric: str, mode: str,
                                dedup: bool, chunk: int, bq: int, bm: int,
-                               expand: int) -> tuple[jax.Array, jax.Array]:
+                               expand: int, valid: jax.Array | None
+                               ) -> tuple[jax.Array, jax.Array]:
     leaves = traverse(forest, queries, max_depth)
     cand_ids, mask = gather_candidates(forest, leaves, leaf_pad)
     return rerank_fused_quantized(queries, cand_ids, mask, qdb, k,
                                   expand=expand, metric=metric, mode=mode,
-                                  dedup=dedup, chunk=chunk, bq=bq, bm=bm)
+                                  dedup=dedup, chunk=chunk, bq=bq, bm=bm,
+                                  valid=valid)
 
 
 def fused_query(forest: Forest, queries: jax.Array,
                 db: jax.Array | QuantizedDB, k: int, cfg: ForestConfig,
                 metric: str = "l2", dedup: bool = True, mode: str = "auto",
-                chunk: int = 0, bq: int = 8, bm: int = 32, expand: int = 4
+                chunk: int = 0, bq: int = 8, bm: int = 32, expand: int = 4,
+                valid: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """End-to-end single-jit forest query (the production hot path).
 
@@ -240,6 +259,7 @@ def fused_query(forest: Forest, queries: jax.Array,
     candidate exactly through the fused kernel; a ``QuantizedDB`` runs the
     int8 coarse shortlist (k' = ``expand``*k) first and reranks only the
     shortlist in fp32 — same fused pipeline, pluggable rerank source.
+    ``valid`` optionally masks dead DB rows (segment tombstones).
 
     Returns (dists (B, k), ids (B, k)); invalid slots: dist +inf, id -1.
     """
@@ -247,10 +267,12 @@ def fused_query(forest: Forest, queries: jax.Array,
         cfg = cfg.resolved(db.fp.shape[0])
         return _fused_query_quantized_jit(forest, queries, db, k,
                                           cfg.max_depth, cfg.leaf_pad, metric,
-                                          mode, dedup, chunk, bq, bm, expand)
+                                          mode, dedup, chunk, bq, bm, expand,
+                                          valid)
     cfg = cfg.resolved(db.shape[0])
     return _fused_query_jit(forest, queries, db, k, cfg.max_depth,
-                            cfg.leaf_pad, metric, mode, dedup, chunk, bq, bm)
+                            cfg.leaf_pad, metric, mode, dedup, chunk, bq, bm,
+                            valid)
 
 
 def staged_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,

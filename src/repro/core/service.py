@@ -7,10 +7,14 @@ external callers keep working.  New code should use::
     index = build_index(key, db, IndexSpec(backend="rpf", forest=cfg))
     dists, ids = index.search(q, SearchParams(k=10))
 
-The behavior is unchanged: queries dispatch through the fused single-pass
-pipeline (core/pipeline.py); inserts append to a host-side overflow buffer
-(paper §5 incremental updates) probed at query time and folded into a rebuilt
-forest once they exceed ``rebuild_frac`` of the DB.
+The behavior tracks the segmented index lifecycle (DESIGN.md §8): queries
+dispatch through the fused single-pass pipeline (core/pipeline.py) against
+the published immutable view (no reader/writer lock contention); inserts
+land in the delta buffer (paper §5 incremental updates, immediately
+queryable) and are sealed into an immutable segment once they exceed
+``rebuild_frac`` of the static rows; deletes/upserts tombstone the old row.
+``compact()`` exposes the explicit (optionally background) rebuild that
+replaced the old synchronous overflow fold.
 """
 from __future__ import annotations
 
@@ -44,9 +48,21 @@ class AnnService:
         """Paper §5 incremental update. Returns the new point's id."""
         return self.index.add(x)
 
+    def delete(self, ids) -> int:
+        """Tombstone one id or an iterable of ids. Returns the count."""
+        return self.index.delete(ids)
+
+    def upsert(self, gid: int, x: np.ndarray) -> int:
+        """Insert-or-replace the vector for ``gid`` (id preserved)."""
+        return self.index.upsert(gid, x)
+
+    def compact(self, block: bool = True):
+        """Rebuild the live point set into one segment (off the lock)."""
+        return self.index.compact(block=block)
+
     def query(self, q: np.ndarray, k: int = 10
               ) -> tuple[np.ndarray, np.ndarray]:
-        """q (B, d) -> (dists (B,k), ids (B,k)); probes index + overflow."""
+        """q (B, d) -> (dists (B,k), ids (B,k)); probes index + delta."""
         d, i = self.index.search(q, SearchParams(k=k, metric=self.metric,
                                                  mode=self.mode))
         return np.asarray(d), np.asarray(i)
@@ -54,4 +70,7 @@ class AnnService:
     def stats(self) -> dict:
         s = self.index.stats()
         return {"n_static": s["n_static"], "n_overflow": s["n_overflow"],
+                "n_segments": s["n_segments"],
+                "n_tombstones": s["n_tombstones"],
+                "n_compactions": s["n_compactions"],
                 "n_trees": self.cfg.n_trees}

@@ -84,7 +84,8 @@ def build_sharded_index(key: jax.Array, db: jax.Array, cfg: ForestConfig,
 def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
                   db_axes: Sequence[str] = ("data",), tree_axis: str = "model",
                   k: int = 10, metric: str = "l2", dedup: bool = True,
-                  kernel_mode: str = "auto", params=None):
+                  kernel_mode: str = "auto", params=None,
+                  with_validity: bool = False):
     """Build the jit-able sharded query step: (index, queries, db) -> top-k.
 
     The returned function is the unit the launcher lowers/compiles for the
@@ -97,6 +98,14 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
     sharded path has no int8/adaptive/lsh composition, so a params carrying
     ``adaptive_wave`` or ``min_candidates`` is rejected rather than
     silently ignored.
+
+    ``with_validity=True`` grows the step signature to
+    ``(index, queries, db, live)`` where ``live`` is an (N,) bool row
+    bitmap sharded like the DB rows: the segmented-lifecycle tombstone
+    mask (DESIGN.md §8).  Each cell folds its local slice into the fused
+    rerank's id/mask path, so a deleted row never reaches any cell's
+    top-k — serving a mutating snapshot needs no index rebuild, only a
+    refreshed bitmap.
     """
     chunk = 0
     if params is not None:
@@ -112,18 +121,23 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
     cfg = index_cfg.resolved(n_local)
     all_axes = tuple(db_axes) + (tree_axis,)
 
-    def _query(forest_cell: Forest, queries: jax.Array, db_local: jax.Array):
+    def _query(forest_cell: Forest, queries: jax.Array, db_local: jax.Array,
+               live_local: jax.Array | None = None):
         from repro.core.pipeline import rerank_fused
         forest_cell = jax.tree.map(lambda x: x[0, 0], forest_cell)
         db_local = db_local.reshape(n_local, -1)
+        if live_local is not None:
+            live_local = live_local.reshape(n_local)
         # 1) descend the local trees (paper: one gather + compare per level)
         leaves = traverse(forest_cell, queries, cfg.max_depth)
         cand_ids, mask = gather_candidates(forest_cell, leaves, cfg.leaf_pad)
         # 2) fused exact rerank against local DB rows — dedup + tile-streamed
-        #    gather + running top-k, no (B, M, d) intermediate per cell
+        #    gather + running top-k, no (B, M, d) intermediate per cell;
+        #    tombstoned rows fold into the same id/mask path
         loc_d, loc_i = rerank_fused(queries, cand_ids, mask, db_local, k,
                                     metric=metric, mode=kernel_mode,
-                                    dedup=dedup, chunk=chunk)
+                                    dedup=dedup, chunk=chunk,
+                                    valid=live_local)
         # 3) globalize ids, then tiny all-gather merge over tree + db axes
         di = jax.lax.axis_index(tuple(db_axes))
         glob_i = jnp.where(loc_i >= 0, loc_i + di * n_local, -1)
@@ -133,12 +147,29 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
         return -neg, jnp.take_along_axis(gi, pos, axis=1)
 
     spec = P(tuple(db_axes), tree_axis)
+    forest_specs = jax.tree.map(lambda _: spec, Forest(
+        proj_idx=0, proj_coef=0, thresh=0, child_base=0, perm=0,
+        leaf_offset=0, leaf_count=0, n_nodes=0))
+
+    if with_validity:
+        fwd = compat.shard_map(
+            _query, mesh=mesh,
+            in_specs=(forest_specs, P(), _db_spec(db_axes),
+                      _db_spec(db_axes)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def query_step(index: ShardedIndex, queries: jax.Array,
+                       db: jax.Array, live: jax.Array):
+            return fwd(index.forest, queries, db, live)
+
+        return query_step
+
     fwd = compat.shard_map(
-        _query, mesh=mesh,
-        in_specs=(jax.tree.map(lambda _: spec, Forest(
-            proj_idx=0, proj_coef=0, thresh=0, child_base=0, perm=0,
-            leaf_offset=0, leaf_count=0, n_nodes=0)),
-            P(), _db_spec(db_axes)),
+        lambda f, q, db_local: _query(f, q, db_local), mesh=mesh,
+        in_specs=(forest_specs, P(), _db_spec(db_axes)),
         out_specs=(P(), P()),
         check_vma=False,
     )

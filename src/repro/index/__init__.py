@@ -12,12 +12,22 @@ Backends (``available_backends()``): rpf, rpf+int8, lsh-cascade, bruteforce.
 Every knob in SearchParams composes with every backend; all candidate-based
 backends rerank through the fused single-pass pipeline (DESIGN.md §4/§5).
 Backend modules import lazily on first ``build_index``/``get_backend`` call.
+
+Mutation lifecycle (DESIGN.md §8): ``index.add(x)`` / ``index.delete(ids)``
+/ ``index.upsert(id, x)`` mutate through an LSM-style segment model —
+adds land in a delta buffer sealed into immutable segments, deletes are
+tombstones masked inside the fused rerank.  ``index.snapshot()`` returns a
+frozen, independently searchable ``IndexView`` (readers never take the
+writer lock) and ``index.compact(block=False)`` rebuilds the live point
+set in the background without stalling searches.
 """
 from repro.index.api import (Index, available_backends, build_index,
                              get_backend, load_index, register_backend)
 from repro.index.params import IndexSpec, SearchParams
+from repro.index.segments import IndexView, SealedSegment
 
 __all__ = [
-    "Index", "IndexSpec", "SearchParams", "available_backends",
-    "build_index", "get_backend", "load_index", "register_backend",
+    "Index", "IndexSpec", "IndexView", "SealedSegment", "SearchParams",
+    "available_backends", "build_index", "get_backend", "load_index",
+    "register_backend",
 ]

@@ -7,18 +7,29 @@ registered backend (rpf, rpf+int8, lsh-cascade, bruteforce) answers the same
 ``search(queries, params)`` call — all candidate-based backends rerank
 through the fused single-pass pipeline (``core.pipeline``).
 
-Lifecycle (the ``Index`` protocol):
+Lifecycle (DESIGN.md §8 — segmented, LSM-style):
   * ``build_index(key, db, spec)``   — registry-dispatched constructor,
-  * ``index.search(queries, params)``— (dists (B, k), ids (B, k)),
-  * ``index.add(x)``                 — paper §5 incremental update: the point
-    is queryable immediately (brute-force overflow merge) and folded into a
-    rebuilt index once the overflow exceeds ``spec.rebuild_frac`` of the DB,
-  * ``index.save(path)`` / ``load_index(path)`` — via the elastic
-    checkpointer (checkpoint/checkpointer.py): the device state tree lands
-    as one .npy per leaf + a manifest carrying the spec.
+  * ``index.search(queries, params)``— (dists (B, k), ids (B, k)); reads a
+    published immutable ``IndexView`` — NO writer lock on the read path,
+  * ``index.add(x)`` / ``index.upsert(id, x)`` / ``index.delete(ids)`` —
+    paper §5 incremental updates: adds land in a small delta buffer
+    (immediately queryable), the delta is sealed into an immutable segment
+    once it outgrows ``spec.delta_cap``, and deletes/upserts tombstone the
+    old row via a per-segment validity bitmap that the fused rerank masks,
+  * ``index.snapshot()``            — the current ``IndexView``: a frozen,
+    independently searchable point-in-time state (copy-on-write; later
+    mutations never leak into it),
+  * ``index.compact(block=...)``    — rebuild the live point set into one
+    fresh segment.  The rebuild runs OFF the writer lock (readers and
+    writers proceed concurrently) and the segment list is swapped in
+    atomically, folding in any deletes that raced the rebuild,
+  * ``index.save(path)`` / ``load_index(path)`` — versioned multi-segment
+    manifest (format 2) via the elastic checkpointer; format-1 checkpoints
+    written by older code load through a read shim.
 
-Thread safety: search/add/save serialize on a per-index lock (the serving
-layer calls them from batcher threads).
+Thread safety: mutations serialize on a per-index lock and publish a fresh
+immutable view; searches read the latest view with a single attribute load
+(the serving layer calls them from batcher threads while writers mutate).
 """
 from __future__ import annotations
 
@@ -31,8 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer, _flatten_with_names
-from repro.core.search import merge_topk_pairs
 from repro.index.params import IndexSpec, SearchParams
+from repro.index.segments import DELTA_SID, DeltaBuffer, IndexView, SealedSegment
 
 _BACKENDS: dict[str, type["Index"]] = {}
 _BUILTINS_LOADED = False
@@ -103,18 +114,21 @@ def _read_manifest(path: str) -> dict:
 
 
 class Index:
-    """Base class: shared lifecycle; subclasses implement the static search.
+    """Base class: the segmented mutable lifecycle; backends plug in engines.
 
-    Subclass contract:
-      * ``_build_state(db_dev)``       — build device/host search state,
-      * ``_search_static(q, params)``  — top-k over the static DB only,
-      * ``_state_skeleton()``          — pytree SHAPE of the saved state
-        (leaf values ignored; structure + names must match ``_state_tree``),
-      * ``_state_tree()``              — the pytree of arrays to checkpoint,
-      * ``_restore_state(state)``      — inverse of ``_state_tree``.
+    Subclass contract (see index/backends.py):
+      * ``engine_cls``            — the per-segment search engine: built as
+        ``engine_cls(spec, key, rows)``, exposing
+        ``search(q, params, valid=None) -> (dists, local_ids)``, host
+        ``db`` rows, ``state_tree()`` / ``state_skeleton(spec)`` /
+        ``from_state(spec, state)`` for checkpointing,
+      * ``_v1_skeleton(spec)``    — pytree shape of the legacy single-
+        segment checkpoint format (the format-1 read shim),
+      * ``_extra_stats()``        — backend-specific ``stats()`` keys.
     """
 
     backend: str = ""
+    engine_cls: type | None = None
 
     def __init__(self, key: jax.Array | None, db: np.ndarray,
                  spec: IndexSpec):
@@ -123,9 +137,31 @@ class Index:
         if key is None:
             key = jax.random.key(spec.seed)
         self.key = key
-        self.db = np.ascontiguousarray(np.asarray(db, np.float32))
-        self._overflow: list[np.ndarray] = []
-        self._build_state(jnp.asarray(self.db))
+        db = np.ascontiguousarray(np.asarray(db, np.float32))
+        self._d = int(db.shape[1])
+        engine = self.engine_cls(spec, key, db)
+        seg = SealedSegment(sid=0, engine=engine,
+                            gids=np.arange(db.shape[0], dtype=np.int32))
+        self._init_runtime([seg], next_gid=db.shape[0], next_sid=1)
+
+    def _init_runtime(self, segments: list[SealedSegment], next_gid: int,
+                      next_sid: int) -> None:
+        """Shared tail of __init__ and the checkpoint loaders."""
+        self._segments = list(segments)
+        self._delta = DeltaBuffer(self._d)
+        self._next_gid = int(next_gid)
+        self._next_sid = int(next_sid)
+        self._compacting = False
+        self._n_seals = 0
+        self._n_compactions = 0
+        self._n_deleted_total = 0
+        # live-row directory: global id -> (segment sid | DELTA_SID, row)
+        self._loc: dict[int, tuple[int, int]] = {}
+        for seg in self._segments:
+            rows = np.flatnonzero(seg.live)
+            self._loc.update(zip(seg.gids[rows].tolist(),
+                                 ((seg.sid, int(r)) for r in rows)))
+        self._publish_locked()
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
@@ -133,71 +169,311 @@ class Index:
               spec: IndexSpec) -> "Index":
         return cls(key, db, spec)
 
+    def _publish_locked(self) -> None:
+        """Swap in a fresh immutable view (caller holds the writer lock)."""
+        self._view = IndexView(tuple(self._segments), self._delta.view())
+
+    def snapshot(self) -> IndexView:
+        """The current immutable view: searchable, frozen, lock-free."""
+        return self._view
+
     @property
     def n_rows(self) -> int:
-        return self.db.shape[0] + len(self._overflow)
+        """Number of LIVE points (tombstoned rows excluded)."""
+        return self._view.n_live
+
+    @property
+    def db(self) -> np.ndarray:
+        """All sealed rows, segment order (compat; includes tombstoned rows
+        still physically present until the next ``compact()``)."""
+        segments = self._view.segments
+        if len(segments) == 1:
+            return segments[0].rows
+        if not segments:
+            return np.zeros((0, self._d), np.float32)
+        return np.concatenate([s.rows for s in segments])
+
+    def live_points(self) -> tuple[np.ndarray, np.ndarray]:
+        """Canonical (gids, rows) of the live point set (segment order) —
+        the ordering ``compact()`` rebuilds with."""
+        return self._view.live_points()
+
+    @property
+    def _primary_engine(self):
+        return self._view.segments[0].engine
 
     def stats(self) -> dict:
-        return {"backend": self.backend, "n_static": int(self.db.shape[0]),
-                "n_overflow": len(self._overflow)}
+        """Consistent counter snapshot (taken under the writer lock)."""
+        with self._lock:
+            segments = list(self._segments)
+            n_static = sum(s.n_rows for s in segments)
+            n_dead = sum(s.n_dead for s in segments)
+            n_delta = self._delta.n_live
+            return {
+                "backend": self.backend,
+                "n_static": n_static,
+                "n_overflow": n_delta,
+                "n_delta": n_delta,
+                "n_live": n_static - n_dead + n_delta,
+                "n_tombstones": n_dead + (self._delta.count
+                                          - self._delta.n_live),
+                "n_deleted_total": self._n_deleted_total,
+                "n_segments": len(segments),
+                "n_seals": self._n_seals,
+                "n_compactions": self._n_compactions,
+                "compaction_in_progress": self._compacting,
+                **self._extra_stats(),
+            }
+
+    def _extra_stats(self) -> dict:
+        return {}
 
     # --------------------------------------------------------------- search
     def search(self, queries: np.ndarray, params: SearchParams | None = None,
                **params_kw) -> tuple[jax.Array, jax.Array]:
         """queries (B, d) or (d,) -> (dists (B, k), ids (B, k)).
 
-        Invalid slots: dist +inf, id -1.  Probes the static index AND the
-        incremental-add overflow; pass ``params`` or SearchParams kwargs.
+        Invalid slots: dist +inf, id -1.  Fans out over the sealed segments
+        and the incremental-add delta, with tombstones masked inside the
+        fused rerank; reads the published view — never the writer lock.
         """
-        params = params if params is not None else SearchParams(**params_kw)
-        q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
-        with self._lock:
-            d, i = self._search_static(q, params)
-            if self._overflow:
-                d, i = self._merge_overflow(q, d, i, params)
-        return d, i
+        return self._view.search(queries, params, **params_kw)
 
-    def _merge_overflow(self, q: jax.Array, d: jax.Array, i: jax.Array,
-                        params: SearchParams
-                        ) -> tuple[jax.Array, jax.Array]:
-        """Brute-force the (small) overflow buffer and top-k merge."""
-        from repro.core.distances import PAIRWISE
-        ox = jnp.asarray(np.stack(self._overflow))
-        od = PAIRWISE[params.metric](q, ox)
-        oi = self.db.shape[0] + jnp.arange(ox.shape[0])[None, :]
-        cat_d = jnp.concatenate([d, od], axis=1)
-        cat_i = jnp.concatenate([i, jnp.broadcast_to(oi, od.shape)], axis=1)
-        return merge_topk_pairs(cat_d, cat_i, params.k)
-
-    # ------------------------------------------------------------------ add
+    # ------------------------------------------------------------ mutations
     def add(self, x: np.ndarray) -> int:
-        """Paper §5 incremental update. Returns the new point's id."""
-        with self._lock:
-            self._overflow.append(np.asarray(x, np.float32).reshape(-1))
-            new_id = self.db.shape[0] + len(self._overflow) - 1
-            if len(self._overflow) >= max(
-                    1, self.spec.rebuild_frac * self.db.shape[0]):
-                self._fold_overflow()
-            return new_id
+        """Paper §5 incremental update. Returns the new point's id.
 
-    def _fold_overflow(self) -> None:
-        """Rebuild the static state over db + overflow (caller holds lock)."""
-        if not self._overflow:
+        The point lands in the delta buffer (immediately queryable); once
+        the delta outgrows the seal threshold it is sealed into an
+        immutable segment with its own engine — no full rebuild (that is
+        ``compact()``'s job, explicitly or in the background).
+        """
+        x = np.asarray(x, np.float32).reshape(-1)
+        with self._lock:
+            gid = self._next_gid
+            self._next_gid += 1
+            row = self._delta.append(x, gid)
+            self._loc[gid] = (DELTA_SID, row)
+            self._maybe_seal_locked()
+            self._publish_locked()
+            return gid
+
+    def delete(self, ids) -> int:
+        """Tombstone one id or an iterable of ids. Returns the count.
+
+        Raises KeyError (before any mutation) if any id is unknown or
+        already deleted; deleted rows stop appearing in search results
+        immediately and are physically dropped at the next seal/compact.
+        """
+        id_list = [int(ids)] if np.isscalar(ids) else [int(g) for g in ids]
+        with self._lock:
+            locs, seen = [], set()
+            for gid in id_list:
+                loc = self._loc.get(gid)
+                if loc is None or gid in seen:
+                    raise KeyError(f"id {gid} is not a live point")
+                seen.add(gid)
+                locs.append(loc)
+            # apply: one bitmap copy per touched segment, not per id
+            by_sid: dict[int, list[int]] = {}
+            for gid, (sid, row) in zip(id_list, locs):
+                del self._loc[gid]
+                by_sid.setdefault(sid, []).append(row)
+            for sid, rows in by_sid.items():
+                if sid == DELTA_SID:
+                    for row in rows:
+                        self._delta.kill(row)
+                else:
+                    i = self._segment_pos_locked(sid)
+                    self._segments[i] = self._segments[i].with_tombstones(
+                        np.asarray(rows))
+            self._n_deleted_total += len(id_list)
+            self._publish_locked()
+        return len(id_list)
+
+    def upsert(self, gid: int, x: np.ndarray) -> int:
+        """Insert-or-replace the vector for ``gid`` (id is preserved).
+
+        The old row (if any) is tombstoned and the new vector appended to
+        the delta under the same global id — searches see exactly one live
+        row per id at all times.
+        """
+        gid = int(gid)
+        x = np.asarray(x, np.float32).reshape(-1)
+        with self._lock:
+            old = self._loc.get(gid)
+            if old is not None:
+                self._kill_locked(old)
+            row = self._delta.append(x, gid)
+            self._loc[gid] = (DELTA_SID, row)
+            if gid >= self._next_gid:
+                self._next_gid = gid + 1
+            self._maybe_seal_locked()
+            self._publish_locked()
+        return gid
+
+    def _segment_pos_locked(self, sid: int) -> int:
+        for i, seg in enumerate(self._segments):
+            if seg.sid == sid:
+                return i
+        raise AssertionError(f"directory references unknown segment {sid}")
+
+    def _kill_locked(self, loc: tuple[int, int]) -> None:
+        sid, row = loc
+        if sid == DELTA_SID:
+            self._delta.kill(row)
             return
-        self.db = np.concatenate([self.db] + [o[None] for o in self._overflow])
-        self._overflow = []
-        self._build_state(jnp.asarray(self.db))
+        i = self._segment_pos_locked(sid)
+        self._segments[i] = self._segments[i].with_tombstones(
+            np.asarray([row]))
+
+    # ----------------------------------------------------------- seal/flush
+    def _seal_threshold(self) -> float:
+        if self.spec.delta_cap > 0:
+            return float(self.spec.delta_cap)
+        n_static = sum(s.n_rows for s in self._segments)
+        return max(1.0, self.spec.rebuild_frac * n_static)
+
+    def _maybe_seal_locked(self) -> None:
+        if self._delta.count >= self._seal_threshold():
+            self._seal_delta_locked()
+
+    def _seal_delta_locked(self) -> None:
+        """Freeze the delta's live rows into a new immutable segment."""
+        rows, gids = self._delta.live_rows()
+        if rows.shape[0] == 0:
+            self._delta = DeltaBuffer(self._d)
+            return
+        sid = self._next_sid
+        # build the engine BEFORE retiring the delta: a failed build (OOM,
+        # interrupt) must not lose the pending adds or corrupt the directory
+        engine = self.engine_cls(self.spec, jax.random.fold_in(self.key, sid),
+                                 rows)
+        self._next_sid += 1
+        self._delta = DeltaBuffer(self._d)
+        self._segments.append(SealedSegment(sid=sid, engine=engine,
+                                            gids=gids))
+        self._loc.update(zip(gids.tolist(),
+                             ((sid, j) for j in range(gids.shape[0]))))
+        self._n_seals += 1
+
+    def flush(self) -> None:
+        """Seal any pending delta rows into an immutable segment."""
+        with self._lock:
+            self._seal_delta_locked()
+            self._publish_locked()
+
+    # ------------------------------------------------------------ compaction
+    def compact(self, block: bool = True):
+        """Rebuild the live point set into one fresh segment.
+
+        The expensive rebuild runs OFF the writer lock: concurrent
+        searches keep reading the old view and concurrent mutations keep
+        landing (deletes that race the rebuild are re-applied to the new
+        segment at swap time; adds sealed during the rebuild survive as
+        their own segments).  ``block=False`` runs the rebuild on a
+        daemon thread and returns it; ``block=True`` returns a stats dict.
+
+        The rebuild uses the index's original key over the live rows in
+        canonical (segment) order, so a compacted index answers bitwise
+        identically to a fresh ``build_index(key, live_rows, spec)``.
+        """
+        with self._lock:
+            if self._compacting:
+                raise RuntimeError("compaction already in progress")
+            self._compacting = True
+            try:
+                self._seal_delta_locked()
+                snap = list(self._segments)
+                parts = []
+                for seg in snap:
+                    live_idx = np.flatnonzero(seg.live)
+                    parts.append((seg.sid, live_idx, seg.rows[live_idx],
+                                  seg.gids[live_idx]))
+                self._publish_locked()
+            except BaseException:
+                self._compacting = False
+                raise
+
+        def _rebuild() -> dict:
+            try:
+                sources = [(sid, int(r)) for sid, live_idx, _, _ in parts
+                           for r in live_idx]
+                gids = (np.concatenate([p[3] for p in parts])
+                        if parts else np.zeros(0, np.int32))
+                rows = (np.concatenate([p[2] for p in parts])
+                        if parts else np.zeros((0, self._d), np.float32))
+                engine = (self.engine_cls(self.spec, self.key, rows)
+                          if rows.shape[0] else None)
+                with self._lock:
+                    snap_sids = {seg.sid for seg in snap}
+                    newer = [s for s in self._segments
+                             if s.sid not in snap_sids]
+                    if engine is not None:
+                        # fold in deletes/upserts that raced the rebuild:
+                        # a source row is still live iff the directory
+                        # still points at its pre-compaction location
+                        live = np.fromiter(
+                            (self._loc.get(int(g)) == src
+                             for g, src in zip(gids, sources)),
+                            bool, count=gids.shape[0])
+                        sid = self._next_sid
+                        self._next_sid += 1
+                        seg = SealedSegment(sid=sid, engine=engine,
+                                            gids=gids, live=live)
+                        for j, (g, alive) in enumerate(zip(gids.tolist(),
+                                                           live)):
+                            if alive:
+                                self._loc[g] = (sid, j)
+                        self._segments = [seg] + newer
+                    else:
+                        self._segments = newer
+                    self._n_compactions += 1
+                    self._publish_locked()
+                    return {"n_rows": int(rows.shape[0]),
+                            "n_segments_in": len(snap),
+                            "n_segments_out": len(self._segments)}
+            finally:
+                self._compacting = False
+
+        if block:
+            return _rebuild()
+        t = threading.Thread(target=_rebuild, daemon=True)
+        t.start()
+        return t
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> str:
-        """Checkpoint the index under ``path`` (folds pending adds first, so
-        the saved state is the compacted static index)."""
+        """Checkpoint the index under ``path`` (multi-segment manifest v2).
+
+        Pending delta rows are sealed first (cheap — a per-delta engine
+        build, NOT a full rebuild), then every segment's engine state,
+        global-id column and tombstone bitmap land through the elastic
+        checkpointer.  A save→load roundtrip is bitwise: the restored
+        index answers every query identically to the saved one.
+        """
         with self._lock:
-            self._fold_overflow()
+            self._seal_delta_locked()
+            self._publish_locked()
+            tree: dict = {"key_data": jax.random.key_data(self.key),
+                          "segments": {}}
+            seg_meta = []
+            for i, seg in enumerate(self._segments):
+                tree["segments"][f"{i:03d}"] = {
+                    "engine": seg.engine.state_tree(),
+                    "gids": seg.gids,
+                    "live": seg.live,
+                }
+                seg_meta.append({"sid": seg.sid, "n_rows": seg.n_rows})
             ckpt = Checkpointer(path, keep=1)
-            return ckpt.save(0, self._state_tree(),
+            return ckpt.save(0, tree,
                              extra={"spec": self.spec.to_dict(),
-                                    "backend": self.backend})
+                                    "backend": self.backend,
+                                    "format": 2,
+                                    "dim": self._d,
+                                    "segments": seg_meta,
+                                    "next_gid": self._next_gid,
+                                    "next_sid": self._next_sid})
 
     @classmethod
     def load(cls, path: str) -> "Index":
@@ -206,10 +482,11 @@ class Index:
                          manifest)
 
     @classmethod
-    def _load(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
+    def _restore_tree(cls, path: str, manifest: dict, skeleton) -> dict:
+        """Restore a checkpoint into the SHAPE of ``skeleton`` (leaf values
+        ignored; shapes/dtypes come from the manifest)."""
         shapes = {leaf["name"]: (leaf["shape"], leaf["dtype"])
                   for leaf in manifest["leaves"]}
-        skeleton = cls._state_skeleton(spec)
         named = _flatten_with_names(skeleton)
         leaves = []
         for name, _ in named:
@@ -218,28 +495,60 @@ class Index:
         template = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(skeleton), leaves)
         state, _ = Checkpointer(path).restore(template,
-                                             step=manifest["step"])
+                                              step=manifest["step"])
+        return state
+
+    @classmethod
+    def _load(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
+        if manifest["extra"].get("format", 1) >= 2:
+            return cls._load_v2(path, spec, manifest)
+        return cls._load_v1(path, spec, manifest)
+
+    @classmethod
+    def _load_v2(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
+        extra = manifest["extra"]
+        n_seg = len(extra["segments"])
+        skeleton = {"key_data": 0,
+                    "segments": {f"{i:03d}": {
+                        "engine": cls.engine_cls.state_skeleton(spec),
+                        "gids": 0, "live": 0} for i in range(n_seg)}}
+        state = cls._restore_tree(path, manifest, skeleton)
         obj = cls.__new__(cls)
         obj.spec = spec
         obj._lock = threading.Lock()
-        obj._overflow = []
-        obj._restore_state(state)
+        obj.key = jax.random.wrap_key_data(
+            jnp.asarray(state["key_data"], jnp.uint32))
+        obj._d = int(extra["dim"])
+        segments = []
+        for i, meta in enumerate(extra["segments"]):
+            st = state["segments"][f"{i:03d}"]
+            segments.append(SealedSegment(
+                sid=int(meta["sid"]),
+                engine=cls.engine_cls.from_state(spec, st["engine"]),
+                gids=np.asarray(st["gids"], np.int32),
+                live=np.asarray(st["live"], bool)))
+        obj._init_runtime(segments, next_gid=extra["next_gid"],
+                          next_sid=extra["next_sid"])
+        return obj
+
+    @classmethod
+    def _load_v1(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
+        """Read shim for the legacy single-segment checkpoint format."""
+        state = cls._restore_tree(path, manifest, cls._v1_skeleton(spec))
+        obj = cls.__new__(cls)
+        obj.spec = spec
+        obj._lock = threading.Lock()
+        obj.key = jax.random.wrap_key_data(
+            jnp.asarray(state["key_data"], jnp.uint32))
+        engine = cls.engine_cls.from_state(spec, state)
+        obj._d = int(engine.db.shape[1])
+        n = engine.db.shape[0]
+        seg = SealedSegment(sid=0, engine=engine,
+                            gids=np.arange(n, dtype=np.int32))
+        obj._init_runtime([seg], next_gid=n, next_sid=1)
         return obj
 
     # ------------------------------------------------------ subclass hooks
-    def _build_state(self, db_dev: jax.Array) -> None:
-        raise NotImplementedError
-
-    def _search_static(self, q: jax.Array, params: SearchParams
-                       ) -> tuple[jax.Array, jax.Array]:
-        raise NotImplementedError
-
-    def _state_tree(self) -> dict:
-        raise NotImplementedError
-
     @classmethod
-    def _state_skeleton(cls, spec: IndexSpec) -> dict:
-        raise NotImplementedError
-
-    def _restore_state(self, state: dict) -> None:
+    def _v1_skeleton(cls, spec: IndexSpec) -> dict:
         raise NotImplementedError

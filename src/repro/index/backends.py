@@ -1,4 +1,4 @@
-"""The registered index backends of the unified API (DESIGN.md §5).
+"""The registered index backends of the unified API (DESIGN.md §5/§8).
 
 Every candidate-based backend funnels into ``core.pipeline``'s fused
 single-pass rerank — the (B, M, d) gathered candidate tensor never
@@ -7,11 +7,23 @@ materializes on any of them:
   rpf          random-partition forest, fp32 fused rerank (the paper)
   rpf+int8     same forest, int8 coarse shortlist -> fp32 fused rerank
   lsh-cascade  multi-radius LSH candidates -> shared fused rerank stage
-  bruteforce   exact scan via the fused matmul/chi2 top-k kernels (oracle
+  bruteforce   exact scan through the same fused rerank stage (oracle
                backend: what the others are measured against)
 
 ``SearchParams.adaptive_wave`` composes with both rpf backends (early-exit
 wave scheduling, core/adaptive.py); ``expand`` tunes the int8 shortlist.
+
+Since the segmented-lifecycle redesign each backend is split in two:
+
+  * an **engine** — the immutable per-segment search core.  Engines are
+    built once over a frozen row block (``engine_cls(spec, key, rows)``),
+    answer ``search(q, params, valid=None)`` with SEGMENT-LOCAL ids, and
+    accept an optional ``valid`` (n,) bool tombstone mask that is threaded
+    down the fused pipeline's id/mask path (dead rows never reach the
+    top-k).  One engine instance exists per sealed segment.
+  * a thin ``Index`` subclass — picks the engine, exposes the legacy
+    attribute surface (``index.forest`` / ``.qdb`` / ``.cascade`` resolve
+    to the primary segment's engine) and the v1-checkpoint read shim.
 """
 from __future__ import annotations
 
@@ -21,33 +33,39 @@ import numpy as np
 
 from repro.core.adaptive import adaptive_query
 from repro.core.forest import Forest, build_forest
-from repro.core.knn import exact_knn
 from repro.core.lsh import CascadedLSH
 from repro.core.pipeline import fused_query, rerank_fused
 from repro.core.quantized import QuantizedDB, quantize_db
 from repro.index.api import Index, register_backend
 from repro.index.params import IndexSpec, SearchParams
-from repro.kernels import ops
+from repro.index.segments import brute_force_topk
 
 _FOREST_SKELETON = Forest(proj_idx=0, proj_coef=0, thresh=0, child_base=0,
                           perm=0, leaf_offset=0, leaf_count=0, n_nodes=0)
 
 
-@register_backend("rpf")
-class RPFIndex(Index):
-    """The paper's random-partition-forest index, fused fp32 rerank."""
+# ---------------------------------------------------------------------------
+# engines: the immutable per-segment search cores
+# ---------------------------------------------------------------------------
 
-    def _build_state(self, db_dev: jax.Array) -> None:
-        self.db_dev = db_dev
-        self.forest = build_forest(self.key, db_dev, self.spec.forest,
-                                   tree_chunk=self.spec.tree_chunk)
-        self.last_trees_used = self.spec.forest.n_trees
+
+class RPFEngine:
+    """The paper's random-partition-forest core, fused fp32 rerank."""
+
+    def __init__(self, spec: IndexSpec, key: jax.Array, rows: np.ndarray):
+        self.spec = spec
+        self.db = np.ascontiguousarray(np.asarray(rows, np.float32))
+        self.db_dev = jnp.asarray(self.db)
+        self.forest = build_forest(key, self.db_dev, spec.forest,
+                                   tree_chunk=spec.tree_chunk)
+        self.last_trees_used = spec.forest.n_trees
 
     def _rerank_source(self) -> jax.Array | QuantizedDB:
         return self.db_dev
 
-    def _search_static(self, q: jax.Array, params: SearchParams
-                       ) -> tuple[jax.Array, jax.Array]:
+    def search(self, q: jax.Array, params: SearchParams,
+               valid: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array]:
         src = self._rerank_source()
         cfg = self.spec.forest
         if params.adaptive_wave > 0:
@@ -55,131 +73,210 @@ class RPFIndex(Index):
                 self.forest, q, src, params.k, cfg,
                 wave=params.adaptive_wave, tol=params.tol,
                 metric=params.metric, mode=params.mode, chunk=params.chunk,
-                expand=params.expand, dedup=params.dedup)
+                expand=params.expand, dedup=params.dedup, valid=valid)
             self.last_trees_used = used
             return d, i
         self.last_trees_used = cfg.n_trees
         return fused_query(self.forest, q, src, params.k, cfg,
                            metric=params.metric, dedup=params.dedup,
                            mode=params.mode, chunk=params.chunk,
-                           expand=params.expand)
-
-    def stats(self) -> dict:
-        return {**super().stats(), "n_trees": self.spec.forest.n_trees}
+                           expand=params.expand, valid=valid)
 
     # ------------------------------------------------------------- save/load
-    def _state_tree(self) -> dict:
+    def state_tree(self) -> dict:
         # self.db stays host-side: Checkpointer snapshots leaves via
         # device_get, which passes numpy arrays through copy-free
-        return {"db": self.db,
-                "key_data": jax.random.key_data(self.key),
-                "forest": self.forest}
+        return {"db": self.db, "forest": self.forest}
 
     @classmethod
-    def _state_skeleton(cls, spec: IndexSpec) -> dict:
-        return {"db": 0, "key_data": 0, "forest": _FOREST_SKELETON}
+    def state_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0, "forest": _FOREST_SKELETON}
 
-    def _restore_state(self, state: dict) -> None:
-        self.key = jax.random.wrap_key_data(
-            jnp.asarray(state["key_data"], jnp.uint32))
-        self.db = np.asarray(state["db"], np.float32)
-        self.db_dev = jnp.asarray(self.db)
-        self.forest = state["forest"]
-        self.last_trees_used = self.spec.forest.n_trees
+    @classmethod
+    def from_state(cls, spec: IndexSpec, state: dict) -> "RPFEngine":
+        obj = cls.__new__(cls)
+        obj.spec = spec
+        obj.db = np.asarray(state["db"], np.float32)
+        obj.db_dev = jnp.asarray(obj.db)
+        obj.forest = state["forest"]
+        obj.last_trees_used = spec.forest.n_trees
+        return obj
 
 
-@register_backend("rpf+int8")
-class RPFInt8Index(RPFIndex):
+class RPFInt8Engine(RPFEngine):
     """Same forest; int8 coarse shortlist -> exact fp32 fused rerank.
 
     ``SearchParams.expand`` sets the shortlist width k' = expand*k; the
     coarse stage is always L2 (the per-row int8 calibration is L2-shaped),
-    the exact stage honors ``params.metric``.
+    the exact stage honors ``params.metric``.  The tombstone mask is
+    applied at the coarse stage, so dead rows never occupy shortlist slots.
     """
 
-    def _build_state(self, db_dev: jax.Array) -> None:
-        super()._build_state(db_dev)
-        self.qdb = quantize_db(db_dev)
+    def __init__(self, spec: IndexSpec, key: jax.Array, rows: np.ndarray):
+        super().__init__(spec, key, rows)
+        self.qdb = quantize_db(self.db_dev)
 
     def _rerank_source(self) -> QuantizedDB:
         return self.qdb
 
-    def _restore_state(self, state: dict) -> None:
-        super()._restore_state(state)
-        self.qdb = quantize_db(self.db_dev)
+    @classmethod
+    def from_state(cls, spec: IndexSpec, state: dict) -> "RPFInt8Engine":
+        obj = super().from_state(spec, state)
+        obj.qdb = quantize_db(obj.db_dev)
+        return obj
 
 
-@register_backend("lsh-cascade")
-class LSHCascadeIndex(Index):
+class LSHEngine:
     """The paper's LSH-cascade baseline behind the same search surface.
 
     Host-side bucket probe (vectorized: one hash per batch per level), then
     the SAME fused rerank stage as the forest backends — fair accuracy/cost
-    comparisons come free.
+    comparisons come free.  Hash projections depend only on (seed, d), so
+    every segment of the same index hashes identically to a fresh build.
     """
 
-    def _build_state(self, db_dev: jax.Array) -> None:
-        self.db_dev = db_dev
+    def __init__(self, spec: IndexSpec, key: jax.Array, rows: np.ndarray):
+        self.spec = spec
+        self.db = np.ascontiguousarray(np.asarray(rows, np.float32))
+        self.db_dev = jnp.asarray(self.db)
         self.cascade = CascadedLSH(
-            self.db, list(self.spec.lsh_radii),
-            n_tables=self.spec.lsh_tables, n_bits=self.spec.lsh_bits,
-            width_scale=self.spec.lsh_width_scale, seed=self.spec.seed)
+            self.db, list(spec.lsh_radii),
+            n_tables=spec.lsh_tables, n_bits=spec.lsh_bits,
+            width_scale=spec.lsh_width_scale, seed=spec.seed)
         self.last_mean_candidates = 0.0
 
-    def _search_static(self, q: jax.Array, params: SearchParams
-                       ) -> tuple[jax.Array, jax.Array]:
+    def search(self, q: jax.Array, params: SearchParams,
+               valid: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array]:
         ids, mask = self.cascade.retrieve_batch(
             np.asarray(q), min_candidates=params.min_candidates)
         self.last_mean_candidates = float(mask.sum(1).mean())
         # candidate sets are already unique per query -> dedup not needed
         return rerank_fused(q, jnp.asarray(ids), jnp.asarray(mask),
                             self.db_dev, params.k, metric=params.metric,
-                            mode=params.mode, dedup=False, chunk=params.chunk)
+                            mode=params.mode, dedup=False, chunk=params.chunk,
+                            valid=valid)
 
-    def stats(self) -> dict:
-        return {**super().stats(), "n_levels": len(self.spec.lsh_radii),
-                "n_tables": self.spec.lsh_tables}
-
-    def _state_tree(self) -> dict:
-        return {"db": self.db,
-                "key_data": jax.random.key_data(self.key)}
+    def state_tree(self) -> dict:
+        return {"db": self.db}
 
     @classmethod
-    def _state_skeleton(cls, spec: IndexSpec) -> dict:
-        return {"db": 0, "key_data": 0}
+    def state_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0}
 
-    def _restore_state(self, state: dict) -> None:
-        self.key = jax.random.wrap_key_data(
-            jnp.asarray(state["key_data"], jnp.uint32))
-        self.db = np.asarray(state["db"], np.float32)
+    @classmethod
+    def from_state(cls, spec: IndexSpec, state: dict) -> "LSHEngine":
         # tables are a pure function of (db, spec): rebuild deterministically
-        self._build_state(jnp.asarray(self.db))
+        return cls(spec, None, np.asarray(state["db"], np.float32))
+
+
+class BruteForceEngine:
+    """Exact scan routed through the shared fused rerank stage.
+
+    One code path with and without tombstones (the mask only flips score
+    slots to +inf), so a mutated bruteforce index answers bitwise
+    identically to a fresh build over the live rows — the oracle property
+    the mutation tests lean on.
+    """
+
+    def __init__(self, spec: IndexSpec, key: jax.Array, rows: np.ndarray):
+        self.spec = spec
+        self.db = np.ascontiguousarray(np.asarray(rows, np.float32))
+        self.db_dev = jnp.asarray(self.db)
+
+    def search(self, q: jax.Array, params: SearchParams,
+               valid: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array]:
+        return brute_force_topk(q, self.db_dev, params, valid=valid)
+
+    def state_tree(self) -> dict:
+        return {"db": self.db}
+
+    @classmethod
+    def state_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0}
+
+    @classmethod
+    def from_state(cls, spec: IndexSpec, state: dict) -> "BruteForceEngine":
+        return cls(spec, None, np.asarray(state["db"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# registered Index subclasses: engine choice + legacy attribute surface
+# ---------------------------------------------------------------------------
+
+
+@register_backend("rpf")
+class RPFIndex(Index):
+    """The paper's random-partition-forest index, fused fp32 rerank."""
+
+    engine_cls = RPFEngine
+
+    @property
+    def forest(self) -> Forest:
+        """Primary segment's forest (compat with the pre-segment API)."""
+        return self._primary_engine.forest
+
+    @property
+    def db_dev(self) -> jax.Array:
+        return self._primary_engine.db_dev
+
+    @property
+    def last_trees_used(self) -> int:
+        return self._primary_engine.last_trees_used
+
+    def _extra_stats(self) -> dict:
+        return {"n_trees": self.spec.forest.n_trees}
+
+    @classmethod
+    def _v1_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0, "key_data": 0, "forest": _FOREST_SKELETON}
+
+
+@register_backend("rpf+int8")
+class RPFInt8Index(RPFIndex):
+    """Same forest; int8 coarse shortlist -> exact fp32 fused rerank."""
+
+    engine_cls = RPFInt8Engine
+
+    @property
+    def qdb(self) -> QuantizedDB:
+        return self._primary_engine.qdb
+
+
+@register_backend("lsh-cascade")
+class LSHCascadeIndex(Index):
+    """The paper's LSH-cascade baseline behind the same search surface."""
+
+    engine_cls = LSHEngine
+
+    @property
+    def cascade(self) -> CascadedLSH:
+        return self._primary_engine.cascade
+
+    @property
+    def last_mean_candidates(self) -> float:
+        return self._primary_engine.last_mean_candidates
+
+    def _extra_stats(self) -> dict:
+        return {"n_levels": len(self.spec.lsh_radii),
+                "n_tables": self.spec.lsh_tables}
+
+    @classmethod
+    def _v1_skeleton(cls, spec: IndexSpec) -> dict:
+        return {"db": 0, "key_data": 0}
 
 
 @register_backend("bruteforce")
 class BruteForceIndex(Index):
-    """Exact scan through the fused score+top-k kernels (the recall oracle)."""
+    """Exact scan via the shared fused rerank stage (the recall oracle)."""
 
-    def _build_state(self, db_dev: jax.Array) -> None:
-        self.db_dev = db_dev
+    engine_cls = BruteForceEngine
 
-    def _search_static(self, q: jax.Array, params: SearchParams
-                       ) -> tuple[jax.Array, jax.Array]:
-        if params.metric == "cosine":   # not a kernel metric; jnp pairwise
-            return exact_knn(q, self.db_dev, k=params.k, metric="cosine")
-        return ops.topk(q, self.db_dev, params.k, metric=params.metric,
-                        mode=params.mode)
-
-    def _state_tree(self) -> dict:
-        return {"db": self.db,
-                "key_data": jax.random.key_data(self.key)}
+    @property
+    def db_dev(self) -> jax.Array:
+        return self._primary_engine.db_dev
 
     @classmethod
-    def _state_skeleton(cls, spec: IndexSpec) -> dict:
+    def _v1_skeleton(cls, spec: IndexSpec) -> dict:
         return {"db": 0, "key_data": 0}
-
-    def _restore_state(self, state: dict) -> None:
-        self.key = jax.random.wrap_key_data(
-            jnp.asarray(state["key_data"], jnp.uint32))
-        self.db = np.asarray(state["db"], np.float32)
-        self.db_dev = jnp.asarray(self.db)

@@ -62,8 +62,13 @@ class IndexSpec:
     tree_chunk     >0 builds forest trees in lax.map chunks of this size
                    (bounds peak build memory for very large L)
     seed           fallback build seed when no PRNG key is supplied
-    rebuild_frac   incremental adds trigger a background rebuild once the
-                   overflow exceeds this fraction of the static DB
+    delta_cap      seal the mutable delta buffer into an immutable sealed
+                   segment once it holds this many rows (0 = derive from
+                   rebuild_frac * static rows, the legacy trigger)
+    rebuild_frac   DEPRECATED spelling of the seal trigger: when delta_cap
+                   is 0, the delta seals at rebuild_frac * static rows.
+                   Adds no longer trigger a synchronous full rebuild —
+                   that is ``Index.compact()``'s job (DESIGN.md §8).
     """
 
     backend: str = "rpf"
@@ -74,6 +79,7 @@ class IndexSpec:
     lsh_width_scale: float = 1.0
     tree_chunk: int = 0
     seed: int = 0
+    delta_cap: int = 0
     rebuild_frac: float = 0.1
 
     def to_dict(self) -> dict[str, Any]:

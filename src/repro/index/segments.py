@@ -1,0 +1,338 @@
+"""Segmented mutable-index state: sealed segments, the delta buffer, views.
+
+The mutation half of the unified Index API (DESIGN.md §8) is LSM-shaped:
+
+  * ``SealedSegment`` — an immutable block of rows with a backend-built
+    search state ("engine"), a global-id column, and a tombstone bitmap.
+    Sealed segments are never edited in place: a delete produces a new
+    ``SealedSegment`` object sharing the engine/rows/ids and carrying a
+    copy-on-write ``live`` bitmap, so published views stay frozen.
+  * ``DeltaBuffer`` — the one mutable piece: a small growable host buffer
+    of freshly added rows, brute-force searched through the same fused
+    rerank kernel as every sealed backend.  The stacked device copy is
+    cached and re-uploaded only when new rows landed since the last search
+    (never re-stacked per query).
+  * ``IndexView`` — an immutable snapshot of (sealed segments, delta
+    prefix, tombstones).  ``Index.search`` grabs the current view with a
+    single attribute read — readers never take the writer lock — and
+    ``Index.snapshot()`` hands the view out directly for repeatable reads.
+
+Engines are duck-typed (see ``index/backends.py``): anything exposing
+``search(q, params, valid=None) -> (dists, local_ids)`` plus the host
+``db`` rows works.  All distance math — sealed, delta, and brute-force —
+funnels through ``core.pipeline.rerank_fused``'s fused gather+distance+
+top-k path, so a row's distance is bitwise-identical no matter which
+segment it currently lives in (the property the mutation tests pin).
+"""
+from __future__ import annotations
+
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.search import merge_topk_pairs
+from repro.index.params import SearchParams
+
+# location tag for rows living in the (unsealed) delta buffer
+DELTA_SID = -1
+
+_DELTA_MIN_CAP = 64
+
+
+@jax.jit
+def _remap_gids(local_ids: jax.Array, gids_dev: jax.Array) -> jax.Array:
+    """Segment-local result ids -> global ids (-1 slots pass through)."""
+    safe = jnp.maximum(local_ids, 0)
+    return jnp.where(local_ids >= 0, gids_dev[safe], -1)
+
+
+def brute_force_topk(q: jax.Array, rows_dev: jax.Array, params: SearchParams,
+                     valid: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Exact scan via the fused rerank path: (B, k) dists + LOCAL row ids.
+
+    Used by the bruteforce backend and the delta overlay.  Routing the scan
+    through ``rerank_fused`` (ids = arange, mask = validity) keeps the
+    distance arithmetic identical to every candidate-based backend, which
+    is what makes mutated-index results bitwise-comparable to fresh builds.
+    The id matrix is padded to >= k columns so the top-k is well-defined
+    on segments smaller than k.
+    """
+    from repro.core.pipeline import rerank_fused
+    b = q.shape[0]
+    n = rows_dev.shape[0]
+    m = max(n, params.k)
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
+    if valid is None:
+        mask = jnp.ones((b, n), bool)
+    else:
+        mask = jnp.broadcast_to(valid[None, :], (b, n))
+    if m > n:
+        ids = jnp.pad(ids, ((0, 0), (0, m - n)), constant_values=-1)
+        mask = jnp.pad(mask, ((0, 0), (0, m - n)))
+    return rerank_fused(q, ids, mask, rows_dev, params.k,
+                        metric=params.metric, mode=params.mode, dedup=False,
+                        chunk=params.chunk)
+
+
+class SealedSegment:
+    """Immutable sealed segment: engine + global ids + tombstone bitmap.
+
+    ``live`` is copy-on-write: ``with_tombstones`` returns a new segment
+    sharing the engine/gids (and their cached device copies) with a fresh
+    bitmap, so views published before a delete keep the old liveness.
+    """
+
+    __slots__ = ("sid", "engine", "gids", "live", "n_dead", "identity_gids",
+                 "_gids_dev_cell", "_live_dev")
+
+    def __init__(self, sid: int, engine, gids: np.ndarray,
+                 live: np.ndarray | None = None,
+                 identity_gids: bool | None = None,
+                 _gids_dev_cell: list | None = None):
+        self.sid = sid
+        self.engine = engine
+        self.gids = np.ascontiguousarray(np.asarray(gids, np.int32))
+        if live is None:
+            live = np.ones(self.gids.shape[0], bool)
+        self.live = live
+        self.n_dead = int(live.size - np.count_nonzero(live))
+        if identity_gids is None:
+            identity_gids = bool(np.array_equal(
+                self.gids, np.arange(self.gids.shape[0], dtype=np.int32)))
+        self.identity_gids = identity_gids
+        # one-element cell shared across with_tombstones copies
+        self._gids_dev_cell = (_gids_dev_cell if _gids_dev_cell is not None
+                               else [None])
+        self._live_dev = None
+
+    @property
+    def n_rows(self) -> int:
+        return self.gids.shape[0]
+
+    @property
+    def n_live(self) -> int:
+        return self.n_rows - self.n_dead
+
+    @property
+    def rows(self) -> np.ndarray:
+        return self.engine.db
+
+    @property
+    def gids_dev(self) -> jax.Array:
+        if self._gids_dev_cell[0] is None:
+            self._gids_dev_cell[0] = jnp.asarray(self.gids)
+        return self._gids_dev_cell[0]
+
+    @property
+    def live_dev(self) -> jax.Array:
+        if self._live_dev is None:
+            self._live_dev = jnp.asarray(self.live)
+        return self._live_dev
+
+    def with_tombstones(self, rows: np.ndarray) -> "SealedSegment":
+        """New segment object with ``rows`` (local indices) marked dead."""
+        live = self.live.copy()
+        live[rows] = False
+        return SealedSegment(self.sid, self.engine, self.gids, live=live,
+                             identity_gids=self.identity_gids,
+                             _gids_dev_cell=self._gids_dev_cell)
+
+    def search(self, q: jax.Array, params: SearchParams
+               ) -> tuple[jax.Array, jax.Array]:
+        """(dists, GLOBAL ids) over this segment's live rows."""
+        valid = self.live_dev if self.n_dead else None
+        d, li = self.engine.search(q, params, valid=valid)
+        return d, _remap_gids(li, self.gids_dev)
+
+
+class DeltaBuffer:
+    """Growable host buffer of freshly added rows (the LSM memtable).
+
+    Appends go to a capacity-doubling numpy buffer; rows are NEVER edited
+    in place (an upsert appends a new row and tombstones the old), so any
+    prefix of the buffer is immutable and can be shared with views.  The
+    device copy is cached per (buffer, uploaded-count): a search after a
+    burst of adds uploads once, later searches reuse it — the stacked
+    buffer is invalidated by append/seal, not rebuilt per query.
+    """
+
+    def __init__(self, dim: int):
+        self.dim = dim
+        cap = _DELTA_MIN_CAP
+        self._rows = np.zeros((cap, dim), np.float32)
+        self._gids = np.full(cap, -1, np.int32)
+        self._live = np.zeros(cap, bool)
+        self.count = 0
+        self.n_live = 0
+        self._dev_lock = threading.Lock()
+        self._dev_cache: tuple | None = None   # (buf_obj, count, rows, gids)
+
+    def append(self, x: np.ndarray, gid: int) -> int:
+        if self.count == self._rows.shape[0]:
+            self._rows = np.concatenate([self._rows,
+                                         np.zeros_like(self._rows)])
+            self._gids = np.concatenate([self._gids,
+                                         np.full(self.count, -1, np.int32)])
+            self._live = np.concatenate([self._live,
+                                         np.zeros(self.count, bool)])
+        row = self.count
+        self._rows[row] = x
+        self._gids[row] = gid
+        self._live[row] = True
+        self.count = row + 1
+        self.n_live += 1
+        return row
+
+    def kill(self, row: int) -> None:
+        if self._live[row]:
+            self._live[row] = False
+            self.n_live -= 1
+
+    def live_rows(self) -> tuple[np.ndarray, np.ndarray]:
+        """(rows (m, d), gids (m,)) of the live prefix — the seal payload."""
+        idx = np.flatnonzero(self._live[:self.count])
+        return (np.ascontiguousarray(self._rows[idx]),
+                self._gids[idx].copy())
+
+    def view(self) -> "DeltaView | None":
+        """Immutable snapshot of the current live prefix (None if empty)."""
+        if self.n_live == 0:
+            return None
+        return DeltaView(self, self.count, self._live[:self.count].copy())
+
+    def device_rows(self, min_count: int) -> tuple[jax.Array, jax.Array]:
+        """Cached device copy of the buffer covering >= min_count rows."""
+        with self._dev_lock:
+            cache = self._dev_cache
+            if (cache is not None and cache[0] is self._rows
+                    and cache[1] >= min_count):
+                return cache[2], cache[3]
+            buf, count = self._rows, self.count
+            rows_dev = jnp.asarray(buf)
+            gids_dev = jnp.asarray(self._gids)
+            self._dev_cache = (buf, count, rows_dev, gids_dev)
+            return rows_dev, gids_dev
+
+
+class DeltaView:
+    """Frozen (buffer, count, liveness) triple — one snapshot of the delta."""
+
+    __slots__ = ("_buffer", "count", "live", "_arrays")
+
+    def __init__(self, buffer: DeltaBuffer, count: int, live: np.ndarray):
+        self._buffer = buffer
+        self.count = count
+        self.live = live
+        self._arrays = None
+
+    @property
+    def n_live(self) -> int:
+        return int(np.count_nonzero(self.live))
+
+    def _device_arrays(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        if self._arrays is None:
+            rows_dev, gids_dev = self._buffer.device_rows(self.count)
+            valid = np.zeros(rows_dev.shape[0], bool)
+            valid[:self.count] = self.live
+            self._arrays = (rows_dev, gids_dev, jnp.asarray(valid))
+        return self._arrays
+
+    def search(self, q: jax.Array, params: SearchParams
+               ) -> tuple[jax.Array, jax.Array]:
+        """(dists, GLOBAL ids) over the live delta rows (brute force)."""
+        rows_dev, gids_dev, valid = self._device_arrays()
+        d, li = brute_force_topk(q, rows_dev, params, valid=valid)
+        return d, _remap_gids(li, gids_dev)
+
+
+class IndexView:
+    """An immutable snapshot of the whole index: what ``search`` reads.
+
+    ``Index`` republishes a fresh view after every mutation; readers pick
+    it up with one attribute load and never touch the writer lock.  A view
+    handed out via ``Index.snapshot()`` keeps answering from its frozen
+    point-in-time state even while the live index mutates or compacts.
+    """
+
+    __slots__ = ("segments", "delta")
+
+    def __init__(self, segments: tuple[SealedSegment, ...],
+                 delta: DeltaView | None):
+        self.segments = segments
+        self.delta = delta
+
+    @property
+    def n_live(self) -> int:
+        n = sum(s.n_live for s in self.segments)
+        return n + (self.delta.n_live if self.delta is not None else 0)
+
+    def live_points(self) -> tuple[np.ndarray, np.ndarray]:
+        """Canonical (gids, rows) of the live point set, segment order.
+
+        This is the ordering ``compact()`` rebuilds with, and the ordering
+        the mutation tests use to build the "equivalent fresh index".
+        """
+        gids, rows = [], []
+        for seg in self.segments:
+            idx = np.flatnonzero(seg.live)
+            gids.append(seg.gids[idx])
+            rows.append(seg.rows[idx])
+        if self.delta is not None:
+            idx = np.flatnonzero(self.live_delta_mask())
+            gids.append(self._buffer_gids()[idx])
+            rows.append(self._buffer_rows()[idx])
+        if not gids:
+            return np.zeros(0, np.int32), np.zeros((0, 0), np.float32)
+        return np.concatenate(gids), np.concatenate(rows)
+
+    # small host-side accessors for live_points (delta internals)
+    def live_delta_mask(self) -> np.ndarray:
+        return self.delta.live
+
+    def _buffer_gids(self) -> np.ndarray:
+        return self.delta._buffer._gids[:self.delta.count]
+
+    def _buffer_rows(self) -> np.ndarray:
+        return self.delta._buffer._rows[:self.delta.count]
+
+    def search(self, queries, params: SearchParams | None = None,
+               **params_kw) -> tuple[jax.Array, jax.Array]:
+        """queries (B, d) or (d,) -> (dists (B, k), ids (B, k)).
+
+        Fans out over sealed segments + the delta overlay and merges with
+        the associative top-k merge; tombstoned rows are masked inside the
+        fused rerank (never surface, never occupy result slots).  Invalid
+        slots: dist +inf, id -1.
+        """
+        params = params if params is not None else SearchParams(**params_kw)
+        q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+        segments = self.segments
+        if (len(segments) == 1 and self.delta is None
+                and segments[0].n_dead == 0 and segments[0].identity_gids):
+            # pristine single-segment index: the exact pre-mutation path
+            return segments[0].engine.search(q, params)
+        parts = []
+        for seg in segments:
+            if seg.n_live == 0:
+                continue
+            parts.append(seg.search(q, params))
+        if self.delta is not None:
+            parts.append(self.delta.search(q, params))
+        if not parts:
+            b = q.shape[0]
+            return (jnp.full((b, params.k), jnp.inf, jnp.float32),
+                    jnp.full((b, params.k), -1, jnp.int32))
+        if len(parts) == 1:
+            return parts[0]
+        cat_d = jnp.concatenate([p[0] for p in parts], axis=1)
+        cat_i = jnp.concatenate([p[1] for p in parts], axis=1)
+        return _merge_parts(cat_d, cat_i, params.k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_parts(cat_d: jax.Array, cat_i: jax.Array, k: int):
+    return merge_topk_pairs(cat_d, cat_i, k)

@@ -13,6 +13,13 @@ Contract (mirrored by ``kernels.ref.fused_gather_topk_ref``):
   q (B, d) f32/bf16, ids (B, M) int32 with -1 marking invalid slots,
   db (N, d) -> (dists (B, k) f32, ids (B, k) int32); invalid: +inf / -1.
 
+The -1 id slot is the kernel's whole masking vocabulary, and it is load
+bearing for the segmented mutable index: tombstoned (deleted/upserted) DB
+rows are folded into this same id/mask path by ``core.pipeline`` — a dead
+row's candidate slot becomes -1 before the kernel, so it issues no DMA,
+scores +inf, and can never occupy a top-k slot.  The kernel itself needs
+no tombstone concept.
+
 Layout: grid = (B/bq, M/bm), candidate axis innermost ("arbitrary") so the
 (bq, k) state lives in the revisited output block across the whole stream.
 

@@ -25,19 +25,29 @@ from repro.serve.batching import DynamicBatcher
 def make_ann_server(db: np.ndarray, spec: IndexSpec | ForestConfig,
                     k: int = 10, metric: str = "l2", max_batch: int = 128,
                     max_wait_s: float = 0.002, mode: str = "auto",
-                    params: SearchParams | None = None
+                    params: SearchParams | None = None,
+                    index: Index | None = None
                     ) -> tuple[Index, DynamicBatcher]:
     """Returns (index, batcher). Submit 1-D query vectors; get (d, ids).
 
     ``spec`` selects the backend (a bare ForestConfig is accepted as
     shorthand for the rpf backend); ``params`` carries the per-query knobs
     (k/metric/mode arguments are the legacy shorthand for the common ones).
+    Pass a prebuilt ``index`` to serve an existing (possibly mutated)
+    index instead of building a fresh one from ``db``.
+
+    The served index is fully mutable while serving: ``index.add`` /
+    ``delete`` / ``upsert`` publish new immutable views that in-flight
+    batches pick up on their next search, and ``index.compact(block=False)``
+    rebuilds in the background without stalling the batcher threads
+    (searches read published views, never the writer lock — DESIGN.md §8).
     """
     if isinstance(spec, ForestConfig):
         spec = IndexSpec(backend="rpf", forest=spec)
     if params is None:
         params = SearchParams(k=k, metric=metric, mode=mode)
-    index = build_index(jax.random.key(spec.seed), db, spec)
+    if index is None:
+        index = build_index(jax.random.key(spec.seed), db, spec)
     d_dim = index.db.shape[1]
 
     def serve_batch(payloads: list) -> list:

@@ -1,0 +1,437 @@
+"""Segmented mutable-index lifecycle (repro.index, DESIGN.md §8).
+
+Covers the PR-3 acceptance criteria:
+  * search over a mutated index (adds + deletes + upserts, pre- AND
+    post-compaction) is bitwise-identical to a fresh build of the
+    equivalent live point set, for every registered backend,
+  * searches issued during a background compaction return without
+    blocking on the rebuild (readers never take the writer lock),
+  * delete-then-search tombstone correctness vs a brute-force oracle,
+    including the adaptive-wave and int8-shortlist compositions,
+  * threaded add/delete/search/save stress + mid-mutation save→load
+    bitwise roundtrip,
+  * the format-1 (single-segment) checkpoint read shim,
+  * snapshot isolation and the mutation counters in ``stats()``.
+
+The bitwise tests run each backend in its full-recall regime (fat leaves /
+full-width shortlist / all-level cascade probing) so approximate candidate
+generation cannot mask a divergence: any distance or id mismatch is then a
+real bug in the segment fan-out, tombstone masking, or merge.
+"""
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ForestConfig
+from repro.index import (IndexSpec, SearchParams, build_index, load_index)
+
+N_DB, DIM = 220, 12
+
+# full-recall regimes: every live point is a candidate on every path
+FULL_RECALL = {
+    "rpf": (IndexSpec(backend="rpf",
+                      forest=ForestConfig(n_trees=4, capacity=512)),
+            SearchParams(k=5)),
+    "rpf+int8": (IndexSpec(backend="rpf+int8",
+                           forest=ForestConfig(n_trees=4, capacity=512)),
+                 SearchParams(k=5, expand=128)),
+    "lsh-cascade": (IndexSpec(backend="lsh-cascade",
+                              lsh_radii=(0.5, 1.0, 2.0), lsh_tables=6,
+                              lsh_bits=6),
+                    SearchParams(k=5, min_candidates=10**9)),
+    "bruteforce": (IndexSpec(backend="bruteforce"), SearchParams(k=5)),
+}
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    db = np.abs(rng.normal(size=(N_DB, DIM))).astype(np.float32)
+    db /= np.linalg.norm(db, axis=1, keepdims=True)
+    q = np.abs(db[:6] + 0.01 * rng.normal(size=(6, DIM)).astype(np.float32))
+    return db, q
+
+
+def _mutate(index, dim=DIM, seed=3):
+    """A fixed add/delete/upsert churn: multi-segment + tombstones in both
+    sealed segments and the delta."""
+    rng = np.random.default_rng(seed)
+    added = [index.add(np.abs(rng.normal(size=dim)).astype(np.float32))
+             for _ in range(25)]
+    index.delete(list(range(0, 40, 3)) + added[::4])
+    index.upsert(7, np.abs(rng.normal(size=dim)).astype(np.float32))
+    return index
+
+
+def _assert_bitwise_vs_fresh(index, q, spec, params):
+    """Mutated-index results == fresh build of the live point set, bitwise."""
+    gids, rows = index.live_points()
+    fresh = build_index(jax.random.key(0), rows, spec)
+    dm, im = map(np.asarray, index.search(q, params))
+    df, i_f = map(np.asarray, fresh.search(q, params))
+    # fresh ids are positions into the canonical live ordering -> map back
+    i_f_g = np.where(i_f >= 0, gids[np.maximum(i_f, 0)], -1)
+    assert np.array_equal(im, i_f_g), f"{im}\nvs\n{i_f_g}"
+    assert np.array_equal(dm, df), "distances must be bitwise identical"
+
+
+# ---------------------------------------------------------------------------
+# acceptance: mutated index == fresh build, pre- and post-compaction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", sorted(FULL_RECALL))
+def test_mutated_index_bitwise_vs_fresh(corpus, backend):
+    db, q = corpus
+    spec, params = FULL_RECALL[backend]
+    index = _mutate(build_index(jax.random.key(0), db, spec))
+    if backend == "lsh-cascade":
+        # the delta overlay is brute-forced (recall 1 by construction); the
+        # hash-probed equivalence needs the adds sealed into a hashed segment
+        index.flush()
+    assert index.stats()["n_segments"] >= 1
+    _assert_bitwise_vs_fresh(index, q, spec, params)      # pre-compaction
+    gids_before, _ = index.live_points()
+    index.compact()
+    st = index.stats()
+    assert st["n_segments"] == 1 and st["n_tombstones"] == 0
+    gids_after, _ = index.live_points()
+    assert np.array_equal(gids_before, gids_after)        # order preserved
+    _assert_bitwise_vs_fresh(index, q, spec, params)      # post-compaction
+
+
+def test_post_compaction_bitwise_any_config(corpus):
+    """compact() rebuilds with the index's original key over the canonical
+    live ordering, so post-compaction bitwise equality holds for ANY forest
+    config — not just the full-recall regime."""
+    db, q = corpus
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=10, capacity=8))
+    index = _mutate(build_index(jax.random.key(0), db, spec))
+    index.compact()
+    _assert_bitwise_vs_fresh(index, q, spec, SearchParams(k=4))
+
+
+# ---------------------------------------------------------------------------
+# tombstone correctness vs the brute-force oracle (incl. compositions)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,params", [
+    ("rpf", SearchParams(k=5)),
+    ("rpf", SearchParams(k=5, adaptive_wave=2, tol=1e-9)),
+    ("rpf+int8", SearchParams(k=5, expand=128)),
+    ("rpf+int8", SearchParams(k=5, expand=128, adaptive_wave=2, tol=1e-9)),
+    ("lsh-cascade", SearchParams(k=5, min_candidates=10**9)),
+    ("bruteforce", SearchParams(k=5)),
+])
+def test_delete_then_search_matches_bruteforce_oracle(corpus, backend,
+                                                      params):
+    db, q = corpus
+    spec = FULL_RECALL[backend][0]
+    index = build_index(jax.random.key(0), db, spec)
+    deleted = list(range(0, 60, 2))
+    index.delete(deleted)
+    if backend == "lsh-cascade":
+        index.flush()
+    _, ids = index.search(q, params)
+    ids = np.asarray(ids)
+    assert not np.isin(ids, deleted).any(), "tombstoned id surfaced"
+    # numpy brute-force oracle over the live rows only
+    gids, rows = index.live_points()
+    d = np.sum((q[:, None, :] - rows[None, :, :]) ** 2, axis=-1)
+    oracle = gids[np.argsort(d, axis=1)[:, :params.k]]
+    if backend == "lsh-cascade":
+        # hashing bounds recall even with all levels probed: require only
+        # that every result is live and most of the oracle is recovered
+        assert np.isin(ids, gids).all()
+        assert (ids == oracle).mean() > 0.5
+    else:
+        assert np.array_equal(ids, oracle)
+
+
+def test_upsert_replaces_vector_and_keeps_id(corpus):
+    db, q = corpus
+    spec, params = FULL_RECALL["rpf"]
+    index = build_index(jax.random.key(0), db, spec)
+    new_vec = np.abs(np.full(DIM, 0.9, np.float32))
+    index.upsert(3, new_vec)
+    d, i = index.search(new_vec[None], SearchParams(k=1))
+    assert int(np.asarray(i)[0, 0]) == 3
+    assert float(np.asarray(d)[0, 0]) < 1e-9
+    # the OLD vector for id 3 must be gone: searching near it no longer
+    # returns id 3 (its nearest live neighbor is some other point)
+    d, i = index.search(db[3][None], SearchParams(k=3))
+    assert 3 not in np.asarray(i).ravel().tolist()
+    # exactly one live row per id at all times
+    gids, _ = index.live_points()
+    assert np.unique(gids).size == gids.size
+
+
+def test_delete_validation_is_atomic(corpus):
+    db, _ = corpus
+    index = build_index(jax.random.key(0), db, FULL_RECALL["rpf"][0])
+    with pytest.raises(KeyError):
+        index.delete([1, 2, 10**6])          # unknown id -> no mutation
+    assert index.stats()["n_tombstones"] == 0
+    with pytest.raises(KeyError):
+        index.delete([3, 3])                 # duplicate in one batch
+    assert index.stats()["n_tombstones"] == 0
+    index.delete([1, 2])
+    with pytest.raises(KeyError):
+        index.delete(1)                      # double delete
+    assert index.stats()["n_tombstones"] == 2
+    # the published view stayed consistent through the rejected batches
+    _, ids = index.search(db[:4], SearchParams(k=3))
+    assert not np.isin(np.asarray(ids), [1, 2]).any()
+    assert np.isin(3, np.asarray(index.live_points()[0]))
+
+
+# ---------------------------------------------------------------------------
+# snapshots: copy-on-write point-in-time reads
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_isolation(corpus):
+    db, _ = corpus
+    spec, params = FULL_RECALL["rpf"]
+    index = build_index(jax.random.key(0), db, spec)
+    snap = index.snapshot()
+    d0, i0 = map(np.asarray, snap.search(db[5][None], params))
+    index.delete(5)
+    index.add(db[5] * 0.5)
+    # the snapshot still answers from its frozen state — bitwise
+    d1, i1 = map(np.asarray, snap.search(db[5][None], params))
+    assert np.array_equal(i0, i1) and np.array_equal(d0, d1)
+    assert int(i1[0, 0]) == 5
+    # the live index sees the mutation
+    _, i2 = index.search(db[5][None], params)
+    assert 5 not in np.asarray(i2).ravel().tolist()
+
+
+def test_stats_counters(corpus):
+    db, _ = corpus
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=4, capacity=64),
+                     delta_cap=8)
+    index = build_index(jax.random.key(0), db, spec)
+    for j in range(20):
+        index.add(db[j] + 0.01)
+    st = index.stats()
+    assert st["n_seals"] == 2 and st["n_segments"] == 3    # 2 sealed deltas
+    assert st["n_overflow"] == 20 - 16
+    index.delete([0, 1, 2])
+    st = index.stats()
+    assert st["n_tombstones"] == 3 and st["n_deleted_total"] == 3
+    assert st["n_live"] == N_DB + 20 - 3
+    index.compact()
+    st = index.stats()
+    assert st["n_segments"] == 1 and st["n_compactions"] == 1
+    assert st["n_tombstones"] == 0 and st["n_live"] == N_DB + 20 - 3
+
+
+# ---------------------------------------------------------------------------
+# non-blocking background compaction
+# ---------------------------------------------------------------------------
+
+
+def test_search_during_compaction_does_not_block(corpus, monkeypatch):
+    db, q = corpus
+    spec, params = FULL_RECALL["rpf"]
+    index = _mutate(build_index(jax.random.key(0), db, spec))
+    index.flush()
+    d0, i0 = map(np.asarray, index.search(q, params))      # warm the jit
+
+    import repro.index.backends as backends_mod
+    real_build = backends_mod.build_forest
+    build_started = threading.Event()
+
+    def slow_build(*a, **kw):
+        build_started.set()
+        time.sleep(3.0)
+        return real_build(*a, **kw)
+
+    monkeypatch.setattr(backends_mod, "build_forest", slow_build)
+    t = index.compact(block=False)
+    assert build_started.wait(30), "compaction rebuild never started"
+    assert index.stats()["compaction_in_progress"]
+    # a search issued mid-rebuild must return promptly (it reads the
+    # published view — never the writer lock, never the rebuild)
+    t0 = time.perf_counter()
+    d1, i1 = map(np.asarray, index.search(q, params))
+    dt = time.perf_counter() - t0
+    assert dt < 2.0, f"search blocked on the background rebuild ({dt:.2f}s)"
+    assert np.array_equal(i0, i1) and np.array_equal(d0, d1)
+    # mutations keep landing during the rebuild too
+    gid = index.add(np.abs(np.full(DIM, 0.7, np.float32)))
+    t.join(30)
+    assert not index.stats()["compaction_in_progress"]
+    # the racing add survived the swap and deletes were folded in
+    _, i2 = index.search(np.full(DIM, 0.7, np.float32)[None],
+                         SearchParams(k=1))
+    assert int(np.asarray(i2)[0, 0]) == gid
+    _assert_bitwise_vs_fresh(index, q, spec, params)
+
+
+def test_delete_racing_compaction_is_folded_in(corpus):
+    db, q = corpus
+    spec, params = FULL_RECALL["rpf"]
+    index = build_index(jax.random.key(0), db, spec)
+    # run a real background compaction and delete while it is in flight
+    t = index.compact(block=False)
+    index.delete([11, 13])
+    t.join(30)
+    _, ids = index.search(q, params)
+    assert not np.isin(np.asarray(ids), [11, 13]).any()
+    st = index.stats()
+    assert st["n_compactions"] == 1
+    assert st["n_live"] == N_DB - 2
+
+
+# ---------------------------------------------------------------------------
+# save/load: mid-mutation bitwise roundtrip + format-1 read shim
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["rpf", "bruteforce"])
+def test_mid_mutation_save_load_roundtrip_bitwise(corpus, backend, tmp_path):
+    db, q = corpus
+    spec, params = FULL_RECALL[backend]
+    index = _mutate(build_index(jax.random.key(0), db, spec))
+    path = os.path.join(tmp_path, "idx")
+    index.save(path)                        # seals the delta, keeps segments
+    d0, i0 = map(np.asarray, index.search(q, params))
+    index2 = load_index(path)
+    d1, i1 = map(np.asarray, index2.search(q, params))
+    assert np.array_equal(i0, i1)
+    assert np.array_equal(d0, d1)           # bitwise, not just allclose
+    s0, s1 = index.stats(), index2.stats()
+    assert s0["n_segments"] == s1["n_segments"] > 1
+    assert s0["n_tombstones"] == s1["n_tombstones"] > 0
+    assert s0["n_live"] == s1["n_live"]
+    # the restored index keeps mutating: ids continue past the saved ones
+    gid = index2.add(db[0] * 0.5)
+    assert gid == index.add(db[0] * 0.5)
+
+
+def test_v1_checkpoint_read_shim(corpus, tmp_path):
+    """Checkpoints written by the pre-segment (format-1) code still load."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    db, q = corpus
+    spec, params = FULL_RECALL["rpf"]
+    index = build_index(jax.random.key(0), db, spec)
+    # emulate the PR-2 writer: flat {db, key_data, forest} + spec extra
+    path = os.path.join(tmp_path, "v1_idx")
+    Checkpointer(path, keep=1).save(
+        0, {"db": index.db, "key_data": jax.random.key_data(index.key),
+            "forest": index.forest},
+        extra={"spec": spec.to_dict(), "backend": "rpf"})
+    index2 = load_index(path)
+    d0, i0 = map(np.asarray, index.search(q, params))
+    d1, i1 = map(np.asarray, index2.search(q, params))
+    assert np.array_equal(i0, i1) and np.array_equal(d0, d1)
+    # and the shimmed index is fully mutable
+    index2.delete(0)
+    _, ids = index2.search(q, params)
+    assert 0 not in np.asarray(ids).ravel().tolist()
+
+
+# ---------------------------------------------------------------------------
+# threaded add/delete/search/save stress
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_mutation_stress(corpus, tmp_path):
+    db, q = corpus
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=4, capacity=32),
+                     delta_cap=16)
+    index = build_index(jax.random.key(0), db, spec)
+    errors: list = []
+    stop = threading.Event()
+
+    def writer(tid):
+        try:
+            rng = np.random.default_rng(tid)
+            mine = []
+            for j in range(30):
+                mine.append(index.add(
+                    np.abs(rng.normal(size=DIM)).astype(np.float32)))
+                if j % 3 == 2:
+                    index.delete(mine.pop(rng.integers(len(mine))))
+                if j % 7 == 6:
+                    index.upsert(mine[-1],
+                                 np.abs(rng.normal(size=DIM)
+                                        ).astype(np.float32))
+        except Exception as e:                       # pragma: no cover
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                d, i = index.search(q, SearchParams(k=3))
+                assert np.asarray(i).shape == (len(q), 3)
+        except Exception as e:                       # pragma: no cover
+            errors.append(e)
+
+    def saver():
+        try:
+            for j in range(2):
+                index.save(os.path.join(tmp_path, f"stress_{j}"))
+        except Exception as e:                       # pragma: no cover
+            errors.append(e)
+
+    writers = [threading.Thread(target=writer, args=(tid,))
+               for tid in range(3)]
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    saver_t = threading.Thread(target=saver)
+    for t in writers + readers + [saver_t]:
+        t.start()
+    for t in writers + [saver_t]:
+        t.join(120)
+    index.compact()
+    stop.set()
+    for t in readers:
+        t.join(120)
+    assert not errors, errors
+
+    # post-churn invariants: directory, live set, and search agree
+    st = index.stats()
+    gids, rows = index.live_points()
+    assert st["n_live"] == gids.shape[0]
+    assert np.unique(gids).size == gids.size
+    _, ids = index.search(q, SearchParams(k=5))
+    live = set(gids.tolist())
+    for g in np.asarray(ids).ravel().tolist():
+        assert g == -1 or g in live
+    # a save→load roundtrip after the churn is still bitwise
+    path = os.path.join(tmp_path, "final")
+    index.save(path)
+    d0, i0 = map(np.asarray, index.search(q, SearchParams(k=5)))
+    index2 = load_index(path)
+    d1, i1 = map(np.asarray, index2.search(q, SearchParams(k=5)))
+    assert np.array_equal(i0, i1) and np.array_equal(d0, d1)
+
+
+# ---------------------------------------------------------------------------
+# empty-index edge: everything deleted
+# ---------------------------------------------------------------------------
+
+
+def test_delete_everything_then_readd(corpus):
+    db, _ = corpus
+    small = db[:16]
+    index = build_index(jax.random.key(0), small, FULL_RECALL["rpf"][0])
+    index.delete(list(range(16)))
+    d, i = index.search(small[:2], SearchParams(k=3))
+    assert (np.asarray(i) == -1).all()
+    assert np.isinf(np.asarray(d)).all()
+    index.compact()
+    assert index.stats()["n_segments"] == 0
+    gid = index.add(small[0])
+    _, i = index.search(small[:1], SearchParams(k=1))
+    assert int(np.asarray(i)[0, 0]) == gid

@@ -51,6 +51,41 @@ def test_sharded_index_end_to_end():
     assert "OK rec1" in out
 
 
+def test_sharded_index_validity_mask():
+    """with_validity=True: the tombstone bitmap rides the fused rerank's
+    id/mask path per cell — deleted rows never surface from any shard and
+    the remaining results match the unmasked path exactly."""
+    out = _run("""
+        from repro.core.sharded_index import build_sharded_index, make_query_fn
+        from repro.core import ForestConfig
+        from repro.data.synthetic import clustered_gaussians
+        N, d = 4096, 48
+        db = jnp.asarray(clustered_gaussians(N, d, seed=0))
+        q = db[:32] + 0.01
+        cfg = ForestConfig(n_trees=16, capacity=12)
+        idx = build_sharded_index(jax.random.key(0), db, cfg, mesh)
+        qfn = make_query_fn(idx.cfg, idx.n_local, mesh, k=5)
+        qfn_v = make_query_fn(idx.cfg, idx.n_local, mesh, k=5,
+                              with_validity=True)
+        dead = np.arange(0, 64, 2)
+        live = np.ones(N, bool); live[dead] = False
+        with mesh:
+            d0, i0 = qfn(idx, q, db)
+            d1, i1 = qfn_v(idx, q, db, jnp.asarray(live))
+            d2, i2 = qfn_v(idx, q, db, jnp.ones(N, dtype=bool))
+        i1 = np.asarray(i1)
+        assert not np.isin(i1, dead).any(), "tombstoned row surfaced"
+        # all-live mask == unmasked path, bitwise
+        np.testing.assert_array_equal(np.asarray(i2), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(d2), np.asarray(d0))
+        # masked results are live rows with sorted distances
+        dd = np.asarray(d1)
+        assert (np.diff(dd, axis=1) >= -1e-6).all()
+        print("OK validity")
+    """)
+    assert "OK validity" in out
+
+
 def test_dp_train_step_with_compression():
     out = _run("""
         from repro.configs.base import LMConfig
