@@ -1,0 +1,133 @@
+"""Probes-vs-trees recall frontier: the accuracy/cost surface of DESIGN.md §9.
+
+The paper's only recall knob is L (trees), which multiplies BOTH build
+memory and query cost.  Multi-probe traversal reaches the same recall from
+far fewer trees by descending to the ``n_probes`` most marginal leaves per
+tree.  This benchmark sweeps the (n_trees, n_probes) grid on one built
+forest (both are search-time knobs — ``SearchParams(n_trees=…, n_probes=…)``
+— so one build serves the whole sweep), measuring recall@k against the
+brute-force oracle and p50 query latency.
+
+Headline numbers (the CI acceptance gate):
+  * ``single_probe_trees_at_target`` — fewest trees reaching the target
+    recall with the paper's single descent,
+  * ``multi_probe_trees_at_target``  — fewest trees reaching it with any
+    n_probes > 1,
+  * ``trees_saved_ratio``            — their ratio (>= 2 expected: the
+    multi-probe frontier dominates), asserted by the CI bench-smoke job.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.recall_frontier [--smoke]
+      [--target-recall 0.95] [--k 10]
+
+Writes artifacts/BENCH_recall_frontier.json (the perf-trajectory artifact
+CI uploads) and merges into artifacts/bench_results.json.  docs/TUNING.md
+walks a worked example over this output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import ForestConfig, exact_knn, recall_at_k
+from repro.data.synthetic import mnist_like
+from repro.index import IndexSpec, SearchParams, build_index
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_recall_frontier.json")
+
+
+def _p50_us(index, q, params, iters: int) -> float:
+    """Median per-query latency (jit-warm) of index.search under params."""
+    jax.block_until_ready(index.search(q, params))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(index.search(q, params))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) / q.shape[0] * 1e6)
+
+
+def run(n: int, n_test: int, trees_grid: list[int], probes_grid: list[int],
+        k: int, target: float, iters: int, capacity: int = 24) -> dict:
+    db, _, queries, _ = mnist_like(n=n, n_test=n_test, seed=0)
+    print(f"  corpus: mnist-statistics n={n} d={db.shape[1]} "
+          f"B={n_test} k={k} target={target}")
+    _, true_ids = exact_knn(jax.numpy.asarray(queries),
+                            jax.numpy.asarray(db), k=k)
+
+    l_max = max(trees_grid)
+    cfg = ForestConfig(n_trees=l_max, capacity=capacity, split_ratio=0.3)
+    index = build_index(jax.random.key(0), db,
+                        IndexSpec(backend="rpf", forest=cfg))
+    leaf_pad = cfg.resolved(n).leaf_pad
+
+    rows = []
+    for t in trees_grid:
+        for p in probes_grid:
+            if t * p > l_max:
+                # beyond the single-probe baseline's candidate budget —
+                # off the interesting side of the frontier; skip to keep
+                # the CI smoke sweep bounded
+                continue
+            params = SearchParams(k=k, n_trees=t, n_probes=p)
+            _, ids = index.search(queries, params)
+            rec = float(recall_at_k(ids, true_ids))
+            p50 = _p50_us(index, queries, params, iters)
+            rows.append(dict(n_trees=t, n_probes=p, recall=round(rec, 4),
+                             p50_us=round(p50, 1),
+                             candidate_rows=t * p * leaf_pad))
+            print(f"  L={t:3d} probes={p:2d}: recall@{k}={rec:.3f} "
+                  f"p50={p50:8.1f}us/q rows={t * p * leaf_pad}")
+
+    def fewest_trees(pred):
+        hit = [r["n_trees"] for r in rows if pred(r) and r["recall"] >= target]
+        return min(hit) if hit else None
+
+    single = fewest_trees(lambda r: r["n_probes"] == 1)
+    multi = fewest_trees(lambda r: r["n_probes"] > 1)
+    return dict(rows=rows, n=n, d=int(db.shape[1]), k=k,
+                target_recall=target, leaf_pad=leaf_pad,
+                trees_grid=trees_grid, probes_grid=probes_grid,
+                single_probe_trees_at_target=single,
+                multi_probe_trees_at_target=multi,
+                trees_saved_ratio=(round(single / multi, 2)
+                                   if single and multi else None),
+                frontier_ok=bool(multi is not None
+                                 and (single is None or multi * 2 <= single)))
+
+
+def main(smoke: bool = False, target: float = 0.95, k: int = 10) -> dict:
+    print(f"[recall_frontier] smoke={smoke}")
+    if smoke:
+        out = run(n=4000, n_test=64, trees_grid=[8, 16, 32, 64, 128],
+                  probes_grid=[1, 2, 4, 8], k=k, target=target, iters=3)
+    else:
+        out = run(n=20000, n_test=256, trees_grid=[8, 16, 32, 64, 128, 256],
+                  probes_grid=[1, 2, 4, 8, 16], k=k, target=target, iters=9)
+    out.update(smoke=smoke, backend=jax.default_backend())
+
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    record({}, "recall_frontier", out)
+    print(f"  -> {os.path.relpath(ARTIFACT)} "
+          f"single_probe_trees={out['single_probe_trees_at_target']} "
+          f"multi_probe_trees={out['multi_probe_trees_at_target']} "
+          f"frontier_ok={out['frontier_ok']}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-size sweep")
+    ap.add_argument("--target-recall", type=float, default=0.95)
+    ap.add_argument("--k", type=int, default=10)
+    a = ap.parse_args()
+    main(smoke=a.smoke, target=a.target_recall, k=a.k)

@@ -5,10 +5,21 @@ Compares, for multi-interest (MIND-style) retrieval over a 1M-item catalog
   * brute force: fused score+top-k over all candidates (kernels/matmul_topk),
   * RPF index:   forest-pruned candidates + exact rerank (the paper).
 Reports recall@k of RPF vs brute force and the candidate-reduction factor.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.retrieval_compare
+      [--target-recall R] [--full] [--trees L]
+
+``--target-recall`` routes the search knobs through the recall-targeted
+tuner (``repro.index.tune``, DESIGN.md §9) on a held-out interest sample —
+the recommended spelling.  ``--trees`` (the old hand-picked L) survives as
+a DEPRECATED alias that pins the single-probe configuration.
 """
 from __future__ import annotations
 
+import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -17,11 +28,12 @@ import numpy as np
 from repro.core import ForestConfig
 from repro.core.knn import exact_knn
 from repro.data.synthetic import clustered_gaussians
-from repro.index import IndexSpec, SearchParams, build_index
+from repro.index import IndexSpec, SearchParams, build_index, tune
 
 
 def run(n_items: int = 100_000, d: int = 64, n_users: int = 64,
-        n_interests: int = 4, L: int = 40, k: int = 20) -> dict:
+        n_interests: int = 4, L: int = 40, k: int = 20,
+        target_recall: float | None = None) -> dict:
     items = clustered_gaussians(n_items, d, n_clusters=256, seed=3)
     items /= np.linalg.norm(items, axis=1, keepdims=True)
     rng = np.random.default_rng(0)
@@ -47,7 +59,18 @@ def run(n_items: int = 100_000, d: int = 64, n_users: int = 64,
                         IndexSpec(backend="rpf", forest=cfg, tree_chunk=64))
     jax.block_until_ready(index.forest.thresh)
     build_s = time.perf_counter() - t0
-    params = SearchParams(k=k, metric="l2")
+    if target_recall is not None:
+        # tune on a DISJOINT interest sample drawn the same way (the
+        # reported recall stays honestly held out from the tuning set;
+        # the tuner's oracle is its own exact k-NN over the index rows)
+        tune_seeds = rng.integers(0, n_items, size=64)
+        tune_q = (items[tune_seeds] + 0.05 * rng.normal(
+            size=(64, d)).astype(np.float32))
+        params = tune(index, tune_q, target_recall=target_recall, k=k)
+        print(f"  tuned for recall@{k} >= {target_recall}: "
+              f"n_trees={params.n_trees or L}, n_probes={params.n_probes}")
+    else:
+        params = SearchParams(k=k, metric="l2")
     t0 = time.perf_counter()
     rpf_d, rpf_i = index.search(flat, params)
     jax.block_until_ready(rpf_d)
@@ -57,13 +80,17 @@ def run(n_items: int = 100_000, d: int = 64, n_users: int = 64,
     hits = (np.asarray(rpf_i)[:, :, None]
             == np.asarray(bf_i)[:, None, :]).any(1).mean()
     rcfg = cfg.resolved(n_items)
+    trees_used = params.n_trees or L
+    cand = trees_used * params.n_probes * rcfg.leaf_pad
     out = dict(n_items=n_items, L=L, k=k,
+               trees_used=trees_used, n_probes=params.n_probes,
+               target_recall=target_recall,
                recall_vs_brute=float(hits),
                brute_us=round(brute_s / flat.shape[0] * 1e6, 1),
                rpf_us=round(rpf_s / flat.shape[0] * 1e6, 1),
                speedup=round(brute_s / rpf_s, 2),
-               candidates_per_query=L * rcfg.leaf_pad,
-               reduction=round(n_items / (L * rcfg.leaf_pad), 1),
+               candidates_per_query=cand,
+               reduction=round(n_items / cand, 1),
                build_s=round(build_s, 1))
     print(f"  RPF recall@{k} vs brute = {hits:.3f}; "
           f"{out['reduction']}x candidate reduction; "
@@ -71,12 +98,26 @@ def run(n_items: int = 100_000, d: int = 64, n_users: int = 64,
     return out
 
 
-def main(fast: bool = True):
+def main(fast: bool = True, target_recall: float | None = None,
+         trees: int | None = None):
     print("[retrieval] recsys retrieval_cand: RPF index vs brute force")
+    if trees is not None:
+        warnings.warn("--trees/-L is deprecated: state a --target-recall "
+                      "and let repro.index.tune pick the knobs "
+                      "(docs/TUNING.md)", DeprecationWarning, stacklevel=2)
     if fast:
-        return run(n_items=100_000)
-    return run(n_items=1_000_000, L=80)
+        return run(n_items=100_000, L=trees or 40,
+                   target_recall=target_recall)
+    return run(n_items=1_000_000, L=trees or 80, target_recall=target_recall)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target-recall", type=float, default=None,
+                    help="route search knobs through repro.index.tune")
+    ap.add_argument("--trees", "-L", type=int, default=None,
+                    help="DEPRECATED: hand-picked tree count (old spelling)")
+    ap.add_argument("--full", action="store_true",
+                    help="1M-item catalog (minutes on CPU)")
+    a = ap.parse_args()
+    main(fast=not a.full, target_recall=a.target_recall, trees=a.trees)

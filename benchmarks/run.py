@@ -12,8 +12,8 @@ import sys
 import time
 
 from benchmarks import (fig4_mnist, fig5_iss, fused_vs_staged,
-                        retrieval_compare, roofline_table, speedup_table,
-                        tree_stats)
+                        recall_frontier, retrieval_compare, roofline_table,
+                        speedup_table, tree_stats)
 from benchmarks.common import csv_row, record
 
 
@@ -23,7 +23,7 @@ def main() -> None:
                    help="full N=60000/250736 runs (slow on CPU)")
     p.add_argument("--only", default="",
                    help="comma list: fig4,fig5,speedup,tree,retrieval,"
-                        "fused,roof")
+                        "fused,frontier,roof")
     args = p.parse_args()
     fast = not args.paper_scale
     only = set(args.only.split(",")) if args.only else None
@@ -84,6 +84,14 @@ def main() -> None:
             f"speedup={worst['speedup']}x"
             f";traffic={worst['traffic_ratio']:.1f}x"
             f";ids_match={r['all_ids_match']}"))
+    if want("frontier"):
+        r = recall_frontier.main(smoke=fast)
+        record(results, "recall_frontier", r)
+        rows.append(csv_row(
+            "recall_frontier", 0.0,
+            f"single_trees={r['single_probe_trees_at_target']}"
+            f";multi_trees={r['multi_probe_trees_at_target']}"
+            f";saved={r['trees_saved_ratio']}x"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

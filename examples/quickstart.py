@@ -1,12 +1,16 @@
 """Quickstart: the unified index API over every backend.
 
-  PYTHONPATH=src python examples/quickstart.py [--tiny]
+  PYTHONPATH=src python examples/quickstart.py [--tiny] [--target-recall R]
 
 The 60-second version of the paper through the one public surface
 (repro.index): build an IndexSpec per backend, search with SearchParams,
 watch recall rise with L at a tiny search cost — then compose the
-beyond-paper knobs (int8 shortlist, early-exit waves) with the same call.
-``--tiny`` shrinks the corpus for the CI examples-smoke job.
+beyond-paper knobs (multi-probe descent, int8 shortlist, early-exit waves)
+with the same call, and let the recall-targeted tuner pick the cheapest
+operating point (docs/TUNING.md).  ``--tiny`` shrinks the corpus for the
+CI examples-smoke job; ``--target-recall`` sets the tuner's goal (the old
+way — hand-picking L per backend — still works and is shown first, but
+the tuner is the recommended spelling).
 """
 import argparse
 
@@ -16,11 +20,11 @@ import numpy as np
 
 from repro.core import ForestConfig, exact_knn, recall_at_k
 from repro.data.synthetic import mnist_like
-from repro.index import IndexSpec, SearchParams, build_index
+from repro.index import IndexSpec, SearchParams, build_index, tune
 
 
-def main(tiny: bool = False):
-    n, n_test = (2_000, 64) if tiny else (20_000, 256)
+def main(tiny: bool = False, target_recall: float = 0.9):
+    n, n_test = (2_000, 128) if tiny else (20_000, 256)
     print(f"generating MNIST-statistics data (offline stand-in, n={n})...")
     db, _, queries, _ = mnist_like(n=n, n_test=n_test)
     db_j, q_j = jnp.asarray(db), jnp.asarray(queries)
@@ -38,6 +42,25 @@ def main(tiny: bool = False):
         frac = L * cfg.resolved(n).leaf_pad / n
         print(f"L={L:3d} trees: recall@1 = {rec:.3f}, "
               f"<= {frac*100:.2f}% of the DB touched per query")
+
+    # ---- or skip the hand-tuning: state a recall target ------------------
+    # tune() measures recall against a brute-force oracle on a query
+    # sample, walks the probes-vs-trees frontier (DESIGN.md §9) and keeps
+    # the cheapest SearchParams meeting the target as the index default.
+    index = build_index(jax.random.key(0), db,
+                        IndexSpec(backend="rpf",
+                                  forest=ForestConfig(n_trees=20 if tiny
+                                                      else 40, capacity=12)))
+    # tune on the first half of the query sample, report on the (held-out)
+    # second half — never measure on the queries you tuned with
+    half = queries.shape[0] // 2
+    tuned = tune(index, queries[:half], target_recall=target_recall, k=1)
+    _, ids_t = index.search(queries[half:])  # tuned params now the default
+    print(f"tuned for recall@1 >= {target_recall}: held-out measured "
+          f"{float(recall_at_k(ids_t, true_ids[half:])):.3f} with "
+          f"n_trees={tuned.n_trees or index.spec.forest.n_trees}, "
+          f"n_probes={tuned.n_probes} "
+          f"(persisted: save/load keeps this operating point)")
 
     # ---- every query-time knob composes with every backend ---------------
     cfg = ForestConfig(n_trees=20 if tiny else 40, capacity=12)
@@ -91,4 +114,7 @@ if __name__ == "__main__":
     p = argparse.ArgumentParser()
     p.add_argument("--tiny", action="store_true",
                    help="CI-size corpus (seconds, not minutes)")
-    main(tiny=p.parse_args().tiny)
+    p.add_argument("--target-recall", type=float, default=0.9,
+                   help="recall@1 goal handed to repro.index.tune")
+    a = p.parse_args()
+    main(tiny=a.tiny, target_recall=a.target_recall)

@@ -1,6 +1,7 @@
 """Core library: the paper's random-partition-forest ANN index + baselines."""
 from repro.core.forest import (Forest, ForestConfig, build_forest,
-                               gather_candidates, query_forest, traverse)
+                               gather_candidates, gather_candidates_multi,
+                               query_forest, traverse, traverse_multiprobe)
 from repro.core.knn import exact_knn
 from repro.core.pipeline import fused_query, rerank_fused, staged_query
 from repro.core.search import (mask_duplicates, merge_topk_pairs, recall_at_k,
@@ -8,7 +9,8 @@ from repro.core.search import (mask_duplicates, merge_topk_pairs, recall_at_k,
 
 __all__ = [
     "Forest", "ForestConfig", "build_forest", "gather_candidates",
-    "query_forest", "traverse", "exact_knn", "mask_duplicates",
+    "gather_candidates_multi", "query_forest", "traverse",
+    "traverse_multiprobe", "exact_knn", "mask_duplicates",
     "merge_topk_pairs", "recall_at_k", "rerank_topk",
     "fused_query", "rerank_fused", "staged_query",
 ]

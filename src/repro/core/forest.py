@@ -9,7 +9,9 @@ Paper semantics (Zhong 2015, §3):
   * A node is split when it holds more than C (capacity) points, so leaves hold
     between ~r*C and C points and the partition adapts to data density.
   * Query: descend each tree (one coordinate gather + one compare per level, no
-    backtracking), union the L leaf point-sets, rerank exactly.
+    backtracking), union the L leaf point-sets, rerank exactly.  Beyond-paper:
+    ``traverse_multiprobe`` widens the descent to the n_probes most marginal
+    leaves per tree (DESIGN.md §9); the paper's query is its n_probes=1 case.
 
 TPU-native re-expression (see DESIGN.md §2):
   * level-synchronous build — all overflowing nodes of a depth split together,
@@ -255,7 +257,8 @@ def traverse(forest: Forest, queries: jax.Array, max_depth: int) -> jax.Array:
 
     queries: (B, d) -> leaf ids (L, B). One gather + compare per level, exactly
     the paper's "one random coordinate access ... one float comparison per node
-    visited".
+    visited".  This is the ``n_probes = 1`` primitive; see
+    :func:`traverse_multiprobe` for the widened descent (DESIGN.md §9).
     """
 
     def one_tree(tree: Forest):
@@ -271,6 +274,114 @@ def traverse(forest: Forest, queries: jax.Array, max_depth: int) -> jax.Array:
         return jax.lax.fori_loop(0, max_depth, step, node0)
 
     return jax.vmap(one_tree)(forest)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth", "n_probes"))
+def traverse_multiprobe(forest: Forest, queries: jax.Array, max_depth: int,
+                        n_probes: int) -> jax.Array:
+    """Priority-ordered multi-probe descent (DESIGN.md §9).
+
+    Maps each query to its ``n_probes`` most marginal leaves per tree:
+    probe 0 is the primary leaf (bitwise-identical to :func:`traverse`);
+    probes 1..n_probes-1 are bounded best-first re-descents that flip the
+    routing decision at the internal node with the smallest signed
+    projection margin ``|t(x)| = |y - psi|`` along the primary path and
+    then continue greedily to a leaf.  Two descents that diverge at an
+    internal node end in disjoint subtrees, so the probes of one tree are
+    pairwise-distinct leaves.
+
+    queries: (B, d) -> leaf ids (L, B, n_probes) int32; slots for which no
+    alternate exists (shallow paths with fewer than ``n_probes - 1``
+    internal nodes) hold -1 and are masked by
+    :func:`gather_candidates_multi`.  Static shapes throughout: the probe
+    count bounds the expansion, every re-descent is a ``fori_loop`` of the
+    same gather+compare step as the primary descent.
+    """
+    n_alt = max(0, min(n_probes - 1, max_depth))
+    b = queries.shape[0]
+
+    def one_tree(tree: Forest):
+        def project(node):
+            idx = tree.proj_idx[node]          # (B, K)
+            coef = tree.proj_coef[node]        # (B, K)
+            return jnp.sum(
+                jnp.take_along_axis(queries, idx, axis=1) * coef, axis=1)
+
+        def primary_step(node, _):
+            y = project(node)
+            internal = tree.child_base[node] >= 0
+            margin = jnp.where(internal, jnp.abs(y - tree.thresh[node]),
+                               jnp.inf)
+            child = tree.child_base[node] \
+                + (y >= tree.thresh[node]).astype(jnp.int32)
+            return jnp.where(internal, child, node), margin
+
+        node0 = jnp.zeros((b,), jnp.int32)
+        leaf, margins = jax.lax.scan(primary_step, node0, None,
+                                     length=max_depth)
+        # margins: (max_depth, B); +inf rows mark depths past the leaf
+        probes = [leaf[:, None]]
+        if n_alt:
+            # the n_alt smallest margins along the path, ascending (ties ->
+            # shallower depth, matching the kernel's iterative argmin)
+            neg, flip_depth = jax.lax.top_k(-margins.T, n_alt)  # (B, n_alt)
+            valid = jnp.isfinite(neg)
+
+            def alt_descend(depth_sel):
+                def step(t, node):
+                    y = project(node)
+                    internal = tree.child_base[node] >= 0
+                    go_right = y >= tree.thresh[node]
+                    go_right = jnp.where(t == depth_sel, ~go_right, go_right)
+                    child = tree.child_base[node] + go_right.astype(jnp.int32)
+                    return jnp.where(internal, child, node)
+
+                return jax.lax.fori_loop(0, max_depth, step, node0)
+
+            alts = jax.vmap(alt_descend, in_axes=1, out_axes=1)(flip_depth)
+            probes.append(jnp.where(valid, alts, -1))
+        out = jnp.concatenate(probes, axis=1)               # (B, <=n_probes)
+        if out.shape[1] < n_probes:                          # max_depth-bound
+            out = jnp.pad(out, ((0, 0), (0, n_probes - out.shape[1])),
+                          constant_values=-1)
+        return out
+
+    return jax.vmap(one_tree)(forest)
+
+
+@functools.partial(jax.jit, static_argnames=("pad",))
+def gather_candidates_multi(forest: Forest, leaves: jax.Array, pad: int
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Candidate retrieval for the multi-probe leaf set.
+
+    leaves: (L, B, P) leaf ids with -1 marking absent probes ->
+    (B, L*P*pad) candidate ids, (B, L*P*pad) bool mask.  The probe axis
+    folds into the candidate axis of the existing padded id/mask contract,
+    so the fused rerank, int8 shortlist, tombstone validity and the sharded
+    merge all compose without a kernel change (DESIGN.md §9).  For P=1 the
+    output is identical to :func:`gather_candidates`.
+    """
+    L, B, P = leaves.shape
+    flat = leaves.reshape(L, B * P)
+    slot = jnp.arange(pad, dtype=jnp.int32)
+
+    def one_tree(tree: Forest, leaf: jax.Array):
+        ok = leaf >= 0
+        safe = jnp.maximum(leaf, 0)
+        off = tree.leaf_offset[safe]            # (B*P,)
+        cnt = jnp.where(ok, tree.leaf_count[safe], 0)
+        pos = off[:, None] + slot[None, :]      # (B*P, pad)
+        mask = slot[None, :] < cnt[:, None]
+        n = tree.perm.shape[0]
+        ids = tree.perm[jnp.clip(pos, 0, n - 1)]
+        return jnp.where(mask, ids, 0), mask
+
+    ids, mask = jax.vmap(one_tree)(forest, flat)             # (L, B*P, pad)
+    ids = ids.reshape(L, B, P * pad)
+    mask = mask.reshape(L, B, P * pad)
+    ids = jnp.transpose(ids, (1, 0, 2)).reshape(B, L * P * pad)
+    mask = jnp.transpose(mask, (1, 0, 2)).reshape(B, L * P * pad)
+    return ids, mask
 
 
 @functools.partial(jax.jit, static_argnames=("pad",))

@@ -32,7 +32,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.forest import Forest, ForestConfig, gather_candidates, traverse
+from repro.core.forest import (Forest, ForestConfig, gather_candidates,
+                               gather_candidates_multi, traverse,
+                               traverse_multiprobe)
 from repro.core.quantized import QuantizedDB
 from repro.core.search import mask_duplicates, merge_topk_pairs, rerank_topk
 from repro.kernels import ops
@@ -215,16 +217,33 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
                         bq=bq, bm=bm)
 
 
+def _candidates(forest: Forest, queries: jax.Array, max_depth: int,
+                leaf_pad: int, n_probes: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Traverse + candidate slice, single- or multi-probe.
+
+    ``n_probes == 1`` traces the exact pre-multi-probe graph
+    (:func:`traverse` + :func:`gather_candidates`), keeping the bitwise
+    guarantee trivially; wider probes fold into the candidate axis of the
+    same padded (B, M) id/mask contract, so nothing downstream changes.
+    """
+    if n_probes <= 1:
+        leaves = traverse(forest, queries, max_depth)
+        return gather_candidates(forest, leaves, leaf_pad)
+    leaves = traverse_multiprobe(forest, queries, max_depth, n_probes)
+    return gather_candidates_multi(forest, leaves, leaf_pad)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "max_depth", "leaf_pad",
                                              "metric", "mode", "dedup",
-                                             "chunk", "bq", "bm"))
+                                             "chunk", "bq", "bm", "n_probes"))
 def _fused_query_jit(forest: Forest, queries: jax.Array, db: jax.Array,
                      k: int, max_depth: int, leaf_pad: int, metric: str,
                      mode: str, dedup: bool, chunk: int, bq: int, bm: int,
-                     valid: jax.Array | None
+                     n_probes: int, valid: jax.Array | None
                      ) -> tuple[jax.Array, jax.Array]:
-    leaves = traverse(forest, queries, max_depth)
-    cand_ids, mask = gather_candidates(forest, leaves, leaf_pad)
+    cand_ids, mask = _candidates(forest, queries, max_depth, leaf_pad,
+                                 n_probes)
     return rerank_fused(queries, cand_ids, mask, db, k, metric=metric,
                         mode=mode, dedup=dedup, chunk=chunk, bq=bq, bm=bm,
                         valid=valid)
@@ -232,15 +251,17 @@ def _fused_query_jit(forest: Forest, queries: jax.Array, db: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("k", "max_depth", "leaf_pad",
                                              "metric", "mode", "dedup",
-                                             "chunk", "bq", "bm", "expand"))
+                                             "chunk", "bq", "bm", "expand",
+                                             "n_probes"))
 def _fused_query_quantized_jit(forest: Forest, queries: jax.Array,
                                qdb: QuantizedDB, k: int, max_depth: int,
                                leaf_pad: int, metric: str, mode: str,
                                dedup: bool, chunk: int, bq: int, bm: int,
-                               expand: int, valid: jax.Array | None
+                               expand: int, n_probes: int,
+                               valid: jax.Array | None
                                ) -> tuple[jax.Array, jax.Array]:
-    leaves = traverse(forest, queries, max_depth)
-    cand_ids, mask = gather_candidates(forest, leaves, leaf_pad)
+    cand_ids, mask = _candidates(forest, queries, max_depth, leaf_pad,
+                                 n_probes)
     return rerank_fused_quantized(queries, cand_ids, mask, qdb, k,
                                   expand=expand, metric=metric, mode=mode,
                                   dedup=dedup, chunk=chunk, bq=bq, bm=bm,
@@ -251,7 +272,7 @@ def fused_query(forest: Forest, queries: jax.Array,
                 db: jax.Array | QuantizedDB, k: int, cfg: ForestConfig,
                 metric: str = "l2", dedup: bool = True, mode: str = "auto",
                 chunk: int = 0, bq: int = 8, bm: int = 32, expand: int = 4,
-                valid: jax.Array | None = None
+                n_probes: int = 1, valid: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """End-to-end single-jit forest query (the production hot path).
 
@@ -259,6 +280,9 @@ def fused_query(forest: Forest, queries: jax.Array,
     candidate exactly through the fused kernel; a ``QuantizedDB`` runs the
     int8 coarse shortlist (k' = ``expand``*k) first and reranks only the
     shortlist in fp32 — same fused pipeline, pluggable rerank source.
+    ``n_probes`` > 1 descends to that many most-marginal leaves per tree
+    (DESIGN.md §9) — the wider candidate set rides the same (B, M) id/mask
+    path, so it composes with every rerank source and with ``valid``.
     ``valid`` optionally masks dead DB rows (segment tombstones).
 
     Returns (dists (B, k), ids (B, k)); invalid slots: dist +inf, id -1.
@@ -268,11 +292,11 @@ def fused_query(forest: Forest, queries: jax.Array,
         return _fused_query_quantized_jit(forest, queries, db, k,
                                           cfg.max_depth, cfg.leaf_pad, metric,
                                           mode, dedup, chunk, bq, bm, expand,
-                                          valid)
+                                          n_probes, valid)
     cfg = cfg.resolved(db.shape[0])
     return _fused_query_jit(forest, queries, db, k, cfg.max_depth,
                             cfg.leaf_pad, metric, mode, dedup, chunk, bq, bm,
-                            valid)
+                            n_probes, valid)
 
 
 def staged_query(forest: Forest, queries: jax.Array, db: jax.Array, k: int,

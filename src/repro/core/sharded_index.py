@@ -28,7 +28,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.forest import (Forest, ForestConfig, build_forest,
-                               gather_candidates, traverse)
+                               gather_candidates, gather_candidates_multi,
+                               traverse, traverse_multiprobe)
 from repro.core.search import merge_topk_pairs  # noqa: F401  (re-export)
 
 
@@ -93,11 +94,15 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
 
     ``params`` (a ``repro.index.SearchParams``) is the unified-API spelling
     of the query knobs; when given it overrides the k/metric/dedup/
-    kernel_mode arguments and supplies the candidate-chunk width.  Only the
-    per-cell rerank knobs apply here (k, metric, dedup, mode, chunk) — the
-    sharded path has no int8/adaptive/lsh composition, so a params carrying
-    ``adaptive_wave`` or ``min_candidates`` is rejected rather than
-    silently ignored.
+    kernel_mode arguments and supplies the candidate-chunk width and the
+    multi-probe width (``n_probes`` — each cell descends its local trees to
+    that many most-marginal leaves; the wider per-cell candidate set rides
+    the same fused id/mask path and the same tiny (B, k) all-gather merge).
+    Only the per-cell knobs apply here (k, metric, dedup, mode, chunk,
+    n_probes) — the sharded path has no int8/adaptive/lsh composition and
+    trees are a build-time shard property, so a params carrying
+    ``adaptive_wave``, ``min_candidates`` or a search-time ``n_trees``
+    restriction is rejected rather than silently ignored.
 
     ``with_validity=True`` grows the step signature to
     ``(index, queries, db, live)`` where ``live`` is an (N,) bool row
@@ -107,17 +112,19 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
     top-k — serving a mutating snapshot needs no index rebuild, only a
     refreshed bitmap.
     """
-    chunk = 0
+    chunk, n_probes = 0, 1
     if params is not None:
-        if params.adaptive_wave or params.min_candidates != 1:
+        if params.adaptive_wave or params.min_candidates != 1 \
+                or params.n_trees:
             raise ValueError(
-                "sharded queries support only the rerank knobs of "
-                "SearchParams (k/metric/dedup/mode/chunk); got "
+                "sharded queries support only the per-cell knobs of "
+                "SearchParams (k/metric/dedup/mode/chunk/n_probes); got "
                 f"adaptive_wave={params.adaptive_wave}, "
-                f"min_candidates={params.min_candidates}")
+                f"min_candidates={params.min_candidates}, "
+                f"n_trees={params.n_trees}")
         k, metric = params.k, params.metric
         dedup, kernel_mode = params.dedup, params.mode
-        chunk = params.chunk
+        chunk, n_probes = params.chunk, params.n_probes
     cfg = index_cfg.resolved(n_local)
     all_axes = tuple(db_axes) + (tree_axis,)
 
@@ -128,9 +135,17 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
         db_local = db_local.reshape(n_local, -1)
         if live_local is not None:
             live_local = live_local.reshape(n_local)
-        # 1) descend the local trees (paper: one gather + compare per level)
-        leaves = traverse(forest_cell, queries, cfg.max_depth)
-        cand_ids, mask = gather_candidates(forest_cell, leaves, cfg.leaf_pad)
+        # 1) descend the local trees (paper: one gather + compare per level;
+        #    n_probes > 1 widens to the multi-probe leaf set, DESIGN.md §9)
+        if n_probes > 1:
+            leaves = traverse_multiprobe(forest_cell, queries, cfg.max_depth,
+                                         n_probes)
+            cand_ids, mask = gather_candidates_multi(forest_cell, leaves,
+                                                     cfg.leaf_pad)
+        else:
+            leaves = traverse(forest_cell, queries, cfg.max_depth)
+            cand_ids, mask = gather_candidates(forest_cell, leaves,
+                                               cfg.leaf_pad)
         # 2) fused exact rerank against local DB rows — dedup + tile-streamed
         #    gather + running top-k, no (B, M, d) intermediate per cell;
         #    tombstoned rows fold into the same id/mask path

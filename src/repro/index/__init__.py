@@ -1,17 +1,27 @@
 """Unified Index / SearchParams API — the single public search surface.
 
-    from repro.index import IndexSpec, SearchParams, build_index
+    from repro.index import IndexSpec, SearchParams, build_index, tune
 
     index = build_index(jax.random.key(0), db,
                         IndexSpec(backend="rpf+int8",
                                   forest=ForestConfig(n_trees=80)))
-    dists, ids = index.search(queries, SearchParams(k=10, adaptive_wave=20))
+    dists, ids = index.search(queries, SearchParams(k=10, n_probes=4))
+    params = tune(index, sample_queries, target_recall=0.95)
+    dists, ids = index.search(queries)    # tuned params now the default
     index.save("/tmp/idx");  index2 = load_index("/tmp/idx")
 
 Backends (``available_backends()``): rpf, rpf+int8, lsh-cascade, bruteforce.
-Every knob in SearchParams composes with every backend; all candidate-based
-backends rerank through the fused single-pass pipeline (DESIGN.md §4/§5).
-Backend modules import lazily on first ``build_index``/``get_backend`` call.
+Every knob in ``SearchParams`` composes with every backend (knobs that do
+not apply to a backend are inert); all candidate-based backends rerank
+through the fused single-pass pipeline (DESIGN.md §4/§5).  Backend modules
+import lazily on first ``build_index``/``get_backend`` call.
+
+Recall/cost operating point (DESIGN.md §9): ``SearchParams.n_probes``
+(leaves per tree) and ``SearchParams.n_trees`` (forest prefix queried) span
+the probes-vs-trees frontier; :func:`tune` walks it against a brute-force
+oracle and persists the cheapest params meeting a recall target on the
+index (manifest format 3), so a loaded index remembers its tuned operating
+point.  See docs/TUNING.md for the cookbook.
 
 Mutation lifecycle (DESIGN.md §8): ``index.add(x)`` / ``index.delete(ids)``
 / ``index.upsert(id, x)`` mutate through an LSM-style segment model —
@@ -25,9 +35,10 @@ from repro.index.api import (Index, available_backends, build_index,
                              get_backend, load_index, register_backend)
 from repro.index.params import IndexSpec, SearchParams
 from repro.index.segments import IndexView, SealedSegment
+from repro.index.tune import tune, tune_report
 
 __all__ = [
     "Index", "IndexSpec", "IndexView", "SealedSegment", "SearchParams",
     "available_backends", "build_index", "get_backend", "load_index",
-    "register_backend",
+    "register_backend", "tune", "tune_report",
 ]

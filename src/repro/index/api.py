@@ -23,9 +23,14 @@ Lifecycle (DESIGN.md §8 — segmented, LSM-style):
     fresh segment.  The rebuild runs OFF the writer lock (readers and
     writers proceed concurrently) and the segment list is swapped in
     atomically, folding in any deletes that raced the rebuild,
+  * ``index.tuned_params``          — the recall-targeted operating point
+    found by ``repro.index.tune`` (DESIGN.md §9); when set it becomes the
+    default for ``search()`` calls that pass no params, and it rides the
+    manifest so a loaded index remembers how it was tuned,
   * ``index.save(path)`` / ``load_index(path)`` — versioned multi-segment
-    manifest (format 2) via the elastic checkpointer; format-1 checkpoints
-    written by older code load through a read shim.
+    manifest (format 3: format 2's segment state + the tuned operating
+    point) via the elastic checkpointer; format-2 and format-1 checkpoints
+    written by older code load through read shims.
 
 Thread safety: mutations serialize on a per-index lock and publish a fresh
 immutable view; searches read the latest view with a single attribute load
@@ -147,6 +152,7 @@ class Index:
     def _init_runtime(self, segments: list[SealedSegment], next_gid: int,
                       next_sid: int) -> None:
         """Shared tail of __init__ and the checkpoint loaders."""
+        self._tuned_params: SearchParams | None = None
         self._segments = list(segments)
         self._delta = DeltaBuffer(self._d)
         self._next_gid = int(next_gid)
@@ -229,14 +235,37 @@ class Index:
         return {}
 
     # --------------------------------------------------------------- search
+    @property
+    def tuned_params(self) -> SearchParams | None:
+        """The tuned operating point (``repro.index.tune``), or None.
+
+        When set, a bare ``search(queries)`` — no params, no kwargs — uses
+        it instead of ``SearchParams()``; explicit params always win.
+        Persisted in the manifest (format 3), so it survives save/load.
+        """
+        return self._tuned_params
+
+    @tuned_params.setter
+    def tuned_params(self, params: SearchParams | None) -> None:
+        if params is not None and not isinstance(params, SearchParams):
+            raise TypeError(f"tuned_params must be SearchParams or None, "
+                            f"got {type(params).__name__}")
+        self._tuned_params = params
+
     def search(self, queries: np.ndarray, params: SearchParams | None = None,
                **params_kw) -> tuple[jax.Array, jax.Array]:
         """queries (B, d) or (d,) -> (dists (B, k), ids (B, k)).
+
+        ``params`` (or loose ``**params_kw``, e.g. ``search(q, k=5)``)
+        selects the operating point; with neither, the index's persisted
+        ``tuned_params`` apply when present, else ``SearchParams()``.
 
         Invalid slots: dist +inf, id -1.  Fans out over the sealed segments
         and the incremental-add delta, with tombstones masked inside the
         fused rerank; reads the published view — never the writer lock.
         """
+        if params is None and not params_kw and self._tuned_params is not None:
+            params = self._tuned_params
         return self._view.search(queries, params, **params_kw)
 
     # ------------------------------------------------------------ mutations
@@ -444,13 +473,15 @@ class Index:
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> str:
-        """Checkpoint the index under ``path`` (multi-segment manifest v2).
+        """Checkpoint the index under ``path`` (multi-segment manifest v3).
 
         Pending delta rows are sealed first (cheap — a per-delta engine
         build, NOT a full rebuild), then every segment's engine state,
         global-id column and tombstone bitmap land through the elastic
-        checkpointer.  A save→load roundtrip is bitwise: the restored
-        index answers every query identically to the saved one.
+        checkpointer, along with the tuned operating point
+        (``tuned_params``) when one is set.  A save→load roundtrip is
+        bitwise: the restored index answers every query identically to
+        the saved one, with the same default params.
         """
         with self._lock:
             self._seal_delta_locked()
@@ -469,11 +500,15 @@ class Index:
             return ckpt.save(0, tree,
                              extra={"spec": self.spec.to_dict(),
                                     "backend": self.backend,
-                                    "format": 2,
+                                    "format": 3,
                                     "dim": self._d,
                                     "segments": seg_meta,
                                     "next_gid": self._next_gid,
-                                    "next_sid": self._next_sid})
+                                    "next_sid": self._next_sid,
+                                    "tuned_params": (
+                                        self._tuned_params.to_dict()
+                                        if self._tuned_params is not None
+                                        else None)})
 
     @classmethod
     def load(cls, path: str) -> "Index":
@@ -506,6 +541,12 @@ class Index:
 
     @classmethod
     def _load_v2(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
+        """Loader for segmented manifests (formats 2 and 3).
+
+        Format 3 adds only the ``tuned_params`` extra on top of format 2's
+        segment state, so the format-2 read shim is this same path with
+        the tuned operating point absent (``tuned_params = None``).
+        """
         extra = manifest["extra"]
         n_seg = len(extra["segments"])
         skeleton = {"key_data": 0,
@@ -529,6 +570,9 @@ class Index:
                 live=np.asarray(st["live"], bool)))
         obj._init_runtime(segments, next_gid=extra["next_gid"],
                           next_sid=extra["next_sid"])
+        tuned = extra.get("tuned_params")
+        if tuned is not None:
+            obj._tuned_params = SearchParams.from_dict(tuned)
         return obj
 
     @classmethod

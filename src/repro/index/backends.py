@@ -11,7 +11,11 @@ materializes on any of them:
                backend: what the others are measured against)
 
 ``SearchParams.adaptive_wave`` composes with both rpf backends (early-exit
-wave scheduling, core/adaptive.py); ``expand`` tunes the int8 shortlist.
+wave scheduling, core/adaptive.py); ``expand`` tunes the int8 shortlist;
+``n_probes``/``n_trees`` walk the probes-vs-trees frontier (DESIGN.md §9).
+Knobs that do not apply to a backend are inert (lsh-cascade and bruteforce
+ignore the forest-only knobs), so one tuned ``SearchParams`` can be carried
+across backends safely.
 
 Since the segmented-lifecycle redesign each backend is split in two:
 
@@ -32,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adaptive import adaptive_query
-from repro.core.forest import Forest, build_forest
+from repro.core.forest import Forest, ForestConfig, build_forest
 from repro.core.lsh import CascadedLSH
 from repro.core.pipeline import fused_query, rerank_fused
 from repro.core.quantized import QuantizedDB, quantize_db
@@ -50,7 +54,15 @@ _FOREST_SKELETON = Forest(proj_idx=0, proj_coef=0, thresh=0, child_base=0,
 
 
 class RPFEngine:
-    """The paper's random-partition-forest core, fused fp32 rerank."""
+    """The paper's random-partition-forest core, fused fp32 rerank.
+
+    Honors the full probes-vs-trees search surface (DESIGN.md §9):
+    ``params.n_probes`` widens the per-tree descent to the most-marginal
+    leaves, ``params.n_trees`` restricts the query to a prefix of the
+    built forest (trees are independent, so any prefix is a valid smaller
+    forest — the prefix sub-pytree is cached per width), and
+    ``params.adaptive_wave`` composes with both.
+    """
 
     def __init__(self, spec: IndexSpec, key: jax.Array, rows: np.ndarray):
         self.spec = spec
@@ -59,28 +71,42 @@ class RPFEngine:
         self.forest = build_forest(key, self.db_dev, spec.forest,
                                    tree_chunk=spec.tree_chunk)
         self.last_trees_used = spec.forest.n_trees
+        self._prefix_cache: dict[int, Forest] = {}
 
     def _rerank_source(self) -> jax.Array | QuantizedDB:
         return self.db_dev
+
+    def _forest_prefix(self, n_trees: int) -> tuple[Forest, ForestConfig]:
+        """(forest, cfg) restricted to the first ``n_trees`` trees (0=all)."""
+        cfg = self.spec.forest
+        total = cfg.n_trees
+        if n_trees <= 0 or n_trees >= total:
+            return self.forest, cfg
+        if n_trees not in self._prefix_cache:
+            self._prefix_cache[n_trees] = jax.tree.map(
+                lambda a: a[:n_trees], self.forest)
+        return self._prefix_cache[n_trees], cfg._replace(n_trees=n_trees)
 
     def search(self, q: jax.Array, params: SearchParams,
                valid: jax.Array | None = None
                ) -> tuple[jax.Array, jax.Array]:
         src = self._rerank_source()
-        cfg = self.spec.forest
+        forest, cfg = self._forest_prefix(params.n_trees)
         if params.adaptive_wave > 0:
             d, i, used = adaptive_query(
-                self.forest, q, src, params.k, cfg,
+                forest, q, src, params.k, cfg,
                 wave=params.adaptive_wave, tol=params.tol,
                 metric=params.metric, mode=params.mode, chunk=params.chunk,
-                expand=params.expand, dedup=params.dedup, valid=valid)
+                expand=params.expand, dedup=params.dedup,
+                n_probes=params.n_probes, valid=valid)
             self.last_trees_used = used
             return d, i
         self.last_trees_used = cfg.n_trees
-        return fused_query(self.forest, q, src, params.k, cfg,
+        return fused_query(forest, q, src, params.k, cfg,
                            metric=params.metric, dedup=params.dedup,
                            mode=params.mode, chunk=params.chunk,
-                           expand=params.expand, valid=valid)
+                           expand=params.expand, n_probes=params.n_probes,
+                           valid=valid)
 
     # ------------------------------------------------------------- save/load
     def state_tree(self) -> dict:
@@ -100,6 +126,7 @@ class RPFEngine:
         obj.db_dev = jnp.asarray(obj.db)
         obj.forest = state["forest"]
         obj.last_trees_used = spec.forest.n_trees
+        obj._prefix_cache = {}
         return obj
 
 

@@ -30,6 +30,21 @@ class SearchParams:
                    improves by less than this relative fraction per wave
     chunk          candidate-axis streaming width (0 = budget-derived)
     min_candidates lsh-cascade: probe radii until this many candidates
+    n_probes       rpf backends: leaves visited per tree (DESIGN.md §9) —
+                   1 is the paper's single descent (bitwise-identical to
+                   the pre-multi-probe path); >1 adds the smallest-margin
+                   alternate branches, trading one tree's memory for many
+                   trees' recall
+    n_trees        rpf backends: query only the first ``n_trees`` trees of
+                   the built forest (0 = all).  Any prefix of the forest
+                   is itself a valid smaller forest (the trees are
+                   independent), so this is the search-time half of the
+                   probes-vs-trees tradeoff the tuner walks
+
+    Typically hand-written for exploration and produced by
+    ``repro.index.tune`` for operation: the tuner returns the cheapest
+    SearchParams meeting a recall target and persists it in the index
+    manifest, so a loaded index remembers its tuned operating point.
     """
 
     k: int = 10
@@ -41,12 +56,29 @@ class SearchParams:
     tol: float = 0.01
     chunk: int = 0
     min_candidates: int = 1
+    n_probes: int = 1
+    n_trees: int = 0
 
     def __post_init__(self):
         if self.mode not in ("auto", "pallas", "ref"):
             raise ValueError(f"mode must be auto|pallas|ref, got {self.mode!r}")
         if self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.n_probes < 1:
+            raise ValueError(f"n_probes must be >= 1, got {self.n_probes}")
+        if self.n_trees < 0:
+            raise ValueError(f"n_trees must be >= 0, got {self.n_trees}")
+
+    def to_dict(self) -> dict[str, Any]:
+        """JSON-ready dict (the manifest-v3 ``tuned_params`` payload)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "SearchParams":
+        """Inverse of :meth:`to_dict`; unknown keys are ignored so params
+        saved by a newer writer still load (forward compatibility)."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,230 @@
+"""Recall-targeted auto-tuning: find the cheapest SearchParams for a target.
+
+The paper trades recall for speed only by adding trees (L), so its sole
+recall knob multiplies both build memory and query cost.  With multi-probe
+traversal (DESIGN.md §9) the same recall is reachable along several axes —
+probes per tree, trees queried, early-exit waves, int8 shortlist width —
+and the cheapest combination is workload-dependent.  This module walks that
+surface for the operator:
+
+    from repro.index import build_index, tune
+
+    index = build_index(key, db, spec)
+    params = tune(index, sample_queries, target_recall=0.95)
+    dists, ids = index.search(queries)      # tuned params now the default
+
+``tune`` measures recall@k against a brute-force oracle over the index's
+live rows, evaluates a small backend-specific grid in ascending-cost order,
+and returns the cheapest ``SearchParams`` meeting the target.  The result
+is persisted on the index (``index.tuned_params``) and rides the manifest
+(format 3), so a saved-then-loaded index remembers its tuned operating
+point without retuning.
+
+Determinism: the grid, the oracle and every measured search are pure
+functions of (index state, queries), so the same index key + queries always
+yield the same SearchParams — pinned by ``tests/test_multiprobe.py``.
+
+Cost model: expected fp32 candidate rows touched per query — the quantity
+the fused rerank's HBM traffic is linear in (DESIGN.md §4).  For the rpf
+backends that is ``trees_used * n_probes * leaf_pad`` (int8 backends pay a
+quarter of it at the coarse stage plus ``expand * k`` exact rows); for
+lsh-cascade it is the measured mean candidate count.  Adaptive entries are
+charged for the trees they actually used on the sample.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.knn import exact_knn
+from repro.index.params import SearchParams
+
+__all__ = ["tune", "tune_report"]
+
+
+def _recall(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Order-insensitive recall@k of predicted vs oracle global ids."""
+    hits = (pred_ids[:, :, None] == true_ids[:, None, :]).any(axis=1)
+    return float(hits.mean())
+
+
+def _tree_grid(n_trees: int, tree_fracs: Sequence[float]) -> list[int]:
+    grid = sorted({max(1, int(round(n_trees * f))) for f in tree_fracs
+                   if 0.0 < f <= 1.0} | {n_trees})
+    return [t for t in grid if t <= n_trees]
+
+
+def _candidate_grid(index, k: int, metric: str, mode: str,
+                    probe_grid: Sequence[int], tree_fracs: Sequence[float],
+                    adaptive_waves: Sequence[int],
+                    expand_grid: Sequence[int]) -> list[SearchParams]:
+    """Backend-specific search grid, deterministic order."""
+    backend = getattr(index, "backend", "")
+    base = dict(k=k, metric=metric, mode=mode)
+    if backend == "bruteforce":
+        return [SearchParams(**base)]
+    if backend == "lsh-cascade":
+        return [SearchParams(**base, min_candidates=mc)
+                for mc in sorted({1, k, 4 * k, 16 * k})]
+    # rpf / rpf+int8 (and any forest-shaped custom backend)
+    total = index.spec.forest.n_trees
+    trees = _tree_grid(total, tree_fracs)
+    expands = sorted(set(expand_grid)) if backend == "rpf+int8" else [4]
+    grid = []
+    for t in trees:
+        for p in sorted(set(probe_grid)):
+            for w in sorted(set(adaptive_waves)):
+                if w >= t:          # a wave covering the forest is a no-op
+                    continue
+                for e in expands:
+                    # the full-forest point is spelled n_trees=0 ("all"),
+                    # so a tuned SearchParams that restricts nothing stays
+                    # valid on surfaces without a search-time tree knob
+                    # (the sharded runtime rejects explicit n_trees)
+                    grid.append(SearchParams(
+                        **base, n_trees=0 if t == total else t,
+                        n_probes=p, adaptive_wave=w, expand=e))
+    return grid
+
+
+def _static_cost(index, params: SearchParams, k: int) -> float:
+    """Upper-bound cost (fp32-row-equivalents/query) used for scan order."""
+    backend = getattr(index, "backend", "")
+    if backend == "bruteforce":
+        return float(index.n_rows)
+    if backend == "lsh-cascade":
+        return float(params.min_candidates)
+    cfg = index.spec.forest.resolved(max(index.n_rows, 2))
+    trees = params.n_trees or index.spec.forest.n_trees
+    rows = trees * params.n_probes * cfg.leaf_pad
+    if backend == "rpf+int8":
+        return 0.25 * rows + params.expand * k
+    return float(rows)
+
+
+def _single_segment(index) -> bool:
+    view = index.snapshot()
+    return len(view.segments) == 1 and view.delta is None
+
+
+def _measured_cost(index, params: SearchParams, k: int) -> float:
+    """Like _static_cost but charging adaptive entries for the trees they
+    actually used (``engine.last_trees_used``) on the sample queries.
+
+    The adaptive discount applies only to single-segment indexes:
+    ``last_trees_used`` reflects the primary segment's engine, and on a
+    mutated (multi-segment) index every segment early-exits independently,
+    so the static upper bound is the honest charge there.
+    """
+    backend = getattr(index, "backend", "")
+    if backend == "lsh-cascade":
+        return float(getattr(index, "last_mean_candidates", 0.0)
+                     or params.min_candidates)
+    if backend in ("rpf", "rpf+int8") and params.adaptive_wave \
+            and _single_segment(index):
+        cfg = index.spec.forest.resolved(max(index.n_rows, 2))
+        used = int(getattr(index, "last_trees_used",
+                           params.n_trees or index.spec.forest.n_trees))
+        rows = used * params.n_probes * cfg.leaf_pad
+        if backend == "rpf+int8":
+            return 0.25 * rows + params.expand * k
+        return float(rows)
+    return _static_cost(index, params, k)
+
+
+def tune_report(index, queries, target_recall: float = 0.95, k: int = 10,
+                metric: str = "l2", mode: str = "auto",
+                probe_grid: Iterable[int] = (1, 2, 4, 8),
+                tree_fracs: Iterable[float] = (0.25, 0.5, 1.0),
+                adaptive_waves: Iterable[int] = (0,),
+                expand_grid: Iterable[int] = (2, 4),
+                persist: bool = True
+                ) -> tuple[SearchParams, list[dict]]:
+    """``tune`` returning ``(params, report)`` — one report row per grid
+    point: ``{"params", "recall", "cost", "meets_target"}``, in the
+    evaluated (ascending static-cost) order.  See :func:`tune`.
+    """
+    queries = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+    gids, rows = index.live_points()
+    if rows.shape[0] == 0:
+        raise ValueError("cannot tune an empty index")
+    k_oracle = min(k, rows.shape[0])
+    # held-out brute-force oracle over the live rows, in GLOBAL ids
+    _, pos = exact_knn(queries, jnp.asarray(rows), k=k_oracle, metric=metric)
+    true_ids = np.asarray(gids)[np.asarray(pos)]
+
+    grid = _candidate_grid(index, k, metric, mode, tuple(probe_grid),
+                           tuple(tree_fracs), tuple(adaptive_waves),
+                           tuple(expand_grid))
+    if not grid:
+        raise ValueError(
+            "tuner grid is empty — probe_grid/tree_fracs/adaptive_waves "
+            f"prune every combination for backend "
+            f"{getattr(index, 'backend', '?')!r} "
+            f"(L={getattr(index.spec.forest, 'n_trees', '?')})")
+    grid.sort(key=lambda p: (_static_cost(index, p, k), p.n_probes,
+                             p.n_trees, p.expand, p.adaptive_wave,
+                             p.min_candidates))
+
+    report: list[dict] = []
+    best: tuple[float, SearchParams] | None = None       # (cost, params)
+    fallback: tuple[float, float, SearchParams] | None = None
+    for params in grid:
+        if best is not None and _static_cost(index, params, k) >= best[0] \
+                and not params.adaptive_wave:
+            # static cost is an upper bound on measured cost only for
+            # non-adaptive entries; those can never beat the incumbent
+            continue
+        _, ids = index.search(queries, params)
+        rec = _recall(np.asarray(ids), true_ids)
+        cost = _measured_cost(index, params, k)
+        meets = rec >= target_recall
+        report.append({"params": params, "recall": rec, "cost": cost,
+                       "meets_target": meets})
+        if meets and (best is None or cost < best[0]):
+            best = (cost, params)
+        if fallback is None or (-rec, cost) < (-fallback[0], fallback[1]):
+            fallback = (rec, cost, params)
+    chosen = best[1] if best is not None else fallback[2]
+    if persist:
+        index.tuned_params = chosen
+    return chosen, report
+
+
+def tune(index, queries, target_recall: float = 0.95, k: int = 10,
+         metric: str = "l2", mode: str = "auto",
+         probe_grid: Iterable[int] = (1, 2, 4, 8),
+         tree_fracs: Iterable[float] = (0.25, 0.5, 1.0),
+         adaptive_waves: Iterable[int] = (0,),
+         expand_grid: Iterable[int] = (2, 4),
+         persist: bool = True) -> SearchParams:
+    """Find the cheapest ``SearchParams`` meeting ``target_recall``.
+
+    Measures recall@``k`` of the index against a brute-force oracle over
+    its live rows on ``queries`` (a representative sample, (B, d)), walking
+    a small backend-specific grid in ascending cost order:
+
+    * ``rpf`` / ``rpf+int8`` — ``n_trees`` x ``n_probes`` (the
+      probes-vs-trees frontier of DESIGN.md §9), optionally early-exit
+      waves (``adaptive_waves``, 0 = off) and, for the int8 backend, the
+      shortlist width ``expand_grid``;
+    * ``lsh-cascade`` — the cascade stop threshold ``min_candidates``;
+    * ``bruteforce`` — nothing to tune (always exact).
+
+    Returns the cheapest grid point whose measured recall clears the
+    target; if none does, the highest-recall point (cheapest among ties).
+    With ``persist=True`` (default) the result is stored as
+    ``index.tuned_params`` — the default operating point for bare
+    ``index.search(q)`` calls, persisted through ``save()``/``load_index``
+    (manifest format 3).
+
+    Deterministic: same index key + queries -> same SearchParams.
+    """
+    params, _ = tune_report(index, queries, target_recall=target_recall,
+                            k=k, metric=metric, mode=mode,
+                            probe_grid=probe_grid, tree_fracs=tree_fracs,
+                            adaptive_waves=adaptive_waves,
+                            expand_grid=expand_grid, persist=persist)
+    return params

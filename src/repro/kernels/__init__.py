@@ -7,7 +7,8 @@ Kernels (each <name>.py has the pl.pallas_call; ref.py has the oracle):
   * fused_query    -- DMA row gather + distance + running top-k in one pass
                       (the forest-query hot path; no (B, M, d) intermediate)
   * embedding_bag  -- scalar-prefetch gather + weighted segment-sum
-  * forest_traverse-- batched partition-tree descent
+  * forest_traverse-- batched partition-tree descent; n_probes > 1 adds the
+                      in-tile multi-probe expansion (DESIGN.md §9)
 """
 from repro.kernels import ops, ref
 

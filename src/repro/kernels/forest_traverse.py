@@ -5,6 +5,12 @@ Batched over a query tile, each level is two dynamic gathers:
   (1) node -> (feat, thresh, child_base)   [tree arrays, scalar memory]
   (2) per-row coordinate q[b, feat_b]      [query tile, VMEM]
 
+``n_probes > 1`` adds the bounded multi-probe expansion of DESIGN.md §9 in
+the same tile: the primary descent records per-level projection margins in
+registers, then each alternate re-descends with the smallest-margin routing
+decision flipped — (n_probes - 1) extra fori_loops, no extra HBM traffic
+(the query tile is already resident).
+
 Tree arrays are passed as scalar-prefetch operands (SMEM-resident). This caps
 the supported tree size at the SMEM budget (~64k nodes of 12 B/node ~= 768 KB);
 larger trees use the XLA traversal in core.forest (the production default —
@@ -24,32 +30,71 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(feat_ref, thresh_ref, child_ref, q_ref, out_ref, *,
-            max_depth: int):
+            max_depth: int, n_probes: int):
     q = q_ref[...]                       # (bq, d)
     feat = feat_ref[...]                 # (max_nodes,)
     thresh = thresh_ref[...]
     child = child_ref[...]
+    bq = q.shape[0]
+    node0 = jnp.zeros((bq,), jnp.int32)
 
-    def step(_, node):
+    def descend(node):
+        """One gather+compare step: (node, margin, child-if-internal)."""
         f = jnp.take(feat, node)                        # (bq,)
         t = jnp.take(thresh, node)
         cb = jnp.take(child, node)
         xv = jnp.take_along_axis(q, f[:, None], axis=1)[:, 0]
-        go_right = (xv >= t).astype(jnp.int32)
-        return jnp.where(cb < 0, node, cb + go_right)
+        go_right = xv >= t
+        internal = cb >= 0
+        margin = jnp.where(internal, jnp.abs(xv - t), jnp.inf)
+        return internal, go_right, cb, node, margin
 
-    node0 = jnp.zeros((q.shape[0],), jnp.int32)
-    leaf = jax.lax.fori_loop(0, max_depth, step, node0)
-    out_ref[...] = leaf[:, None]
+    # ---- primary descent, recording per-level margins in registers -------
+    depth_col = jax.lax.broadcasted_iota(jnp.int32, (bq, max_depth), 1)
+
+    def primary_step(t, carry):
+        node, margins = carry
+        internal, go_right, cb, node, margin = descend(node)
+        margins = jnp.where(depth_col == t, margin[:, None], margins)
+        nxt = jnp.where(internal, cb + go_right.astype(jnp.int32), node)
+        return nxt, margins
+
+    margins0 = jnp.full((bq, max_depth), jnp.inf, jnp.float32)
+    leaf, margins = jax.lax.fori_loop(0, max_depth, primary_step,
+                                      (node0, margins0))
+    out_ref[:, 0] = leaf
+
+    # ---- bounded best-first expansion: flip the smallest-margin node -----
+    # n_probes is small and static: an unrolled argmin + re-descent per
+    # alternate (ties -> shallower depth, matching traverse_multiprobe's
+    # lax.top_k ordering)
+    for p in range(1, n_probes):
+        best = jnp.min(margins, axis=1)                              # (bq,)
+        is_best = margins == best[:, None]
+        first = jnp.min(jnp.where(is_best, depth_col, max_depth), axis=1)
+        margins = jnp.where(depth_col == first[:, None], jnp.inf, margins)
+
+        def alt_step(t, node, flip=first):
+            internal, go_right, cb, node, _ = descend(node)
+            go_right = jnp.where(t == flip, ~go_right, go_right)
+            return jnp.where(internal, cb + go_right.astype(jnp.int32), node)
+
+        alt = jax.lax.fori_loop(0, max_depth, alt_step, node0)
+        out_ref[:, p] = jnp.where(jnp.isfinite(best), alt, -1)
 
 
-@functools.partial(jax.jit, static_argnames=("max_depth", "bq", "interpret"))
+@functools.partial(jax.jit, static_argnames=("max_depth", "bq", "interpret",
+                                             "n_probes"))
 def forest_traverse(feat: jax.Array, thresh: jax.Array, child_base: jax.Array,
                     queries: jax.Array, max_depth: int, bq: int = 256,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool = False, n_probes: int = 1) -> jax.Array:
     """Single K=1 tree: feat/thresh/child_base (max_nodes,), queries (B, d).
 
-    Returns leaf node ids (B,) int32.  vmap over trees for the forest.
+    Returns leaf node ids (B,) int32 for ``n_probes == 1`` (the historical
+    contract), else the multi-probe leaf set (B, n_probes) int32 with -1
+    marking absent probes — the same ordering (primary leaf first, then
+    ascending projection margin) as ``core.forest.traverse_multiprobe``.
+    vmap over trees for the forest.
     """
     b, d = queries.shape
     bq = min(bq, b)
@@ -60,12 +105,12 @@ def forest_traverse(feat: jax.Array, thresh: jax.Array, child_base: jax.Array,
         num_scalar_prefetch=3,           # feat, thresh, child_base in SMEM
         grid=((b + b_pad) // bq,),
         in_specs=[pl.BlockSpec((bq, d), lambda i, *_: (i, 0))],
-        out_specs=pl.BlockSpec((bq, 1), lambda i, *_: (i, 0)),
+        out_specs=pl.BlockSpec((bq, n_probes), lambda i, *_: (i, 0)),
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, max_depth=max_depth),
+        functools.partial(_kernel, max_depth=max_depth, n_probes=n_probes),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b + b_pad, 1), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((b + b_pad, n_probes), jnp.int32),
         interpret=interpret,
     )(feat, thresh, child_base, qp)
-    return out[:b, 0]
+    return out[:b, 0] if n_probes == 1 else out[:b]

@@ -84,11 +84,20 @@ def embedding_bag(ids, weights, table, mode: Mode = "auto"):
 
 
 def traverse_tree(feat, thresh, child_base, queries, max_depth: int,
-                  mode: Mode = "auto"):
-    """Single-tree batched descent -> leaf ids (B,)."""
+                  mode: Mode = "auto", n_probes: int = 1):
+    """Single-tree batched descent -> leaf ids.
+
+    (B,) for ``n_probes == 1`` (the historical contract); (B, n_probes)
+    multi-probe leaf ids (primary first, then ascending margin, -1 for
+    absent probes) otherwise.
+    """
     use_pallas, interp = _resolve(mode)
     if use_pallas:
         return _trav.forest_traverse(feat, thresh, child_base, queries,
-                                     max_depth, interpret=interp)
-    return _ref.forest_traverse_ref(feat, thresh, child_base, queries,
-                                    max_depth)
+                                     max_depth, interpret=interp,
+                                     n_probes=n_probes)
+    if n_probes == 1:
+        return _ref.forest_traverse_ref(feat, thresh, child_base, queries,
+                                        max_depth)
+    return _ref.forest_traverse_multiprobe_ref(feat, thresh, child_base,
+                                               queries, max_depth, n_probes)

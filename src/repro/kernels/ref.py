@@ -125,3 +125,54 @@ def forest_traverse_ref(feat: jax.Array, thresh: jax.Array,
 
     node0 = jnp.zeros((queries.shape[0],), jnp.int32)
     return jax.lax.fori_loop(0, max_depth, step, node0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth", "n_probes"))
+def forest_traverse_multiprobe_ref(feat: jax.Array, thresh: jax.Array,
+                                   child_base: jax.Array, queries: jax.Array,
+                                   max_depth: int, n_probes: int) -> jax.Array:
+    """Oracle for the multi-probe traversal kernel (single K=1 tree).
+
+    Same contract as ``forest_traverse(..., n_probes=n)``: (B, n_probes)
+    leaf ids, primary leaf first then alternates by ascending projection
+    margin, -1 for absent probes.  Implemented over the single-tree arrays
+    so kernel parity needs no Forest object; ``core.forest
+    .traverse_multiprobe`` is the forest-level (vmapped, K-general) twin.
+    """
+    b = queries.shape[0]
+    node0 = jnp.zeros((b,), jnp.int32)
+    n_alt = max(0, min(n_probes - 1, max_depth))
+
+    def primary_step(node, _):
+        f = feat[node]
+        xv = jnp.take_along_axis(queries, f[:, None], axis=1)[:, 0]
+        cb = child_base[node]
+        internal = cb >= 0
+        margin = jnp.where(internal, jnp.abs(xv - thresh[node]), jnp.inf)
+        child = cb + (xv >= thresh[node]).astype(jnp.int32)
+        return jnp.where(internal, child, node), margin
+
+    leaf, margins = jax.lax.scan(primary_step, node0, None, length=max_depth)
+    probes = [leaf[:, None]]
+    if n_alt:
+        neg, flip_depth = jax.lax.top_k(-margins.T, n_alt)      # (B, n_alt)
+
+        def alt_descend(depth_sel):
+            def step(t, node):
+                f = feat[node]
+                xv = jnp.take_along_axis(queries, f[:, None], axis=1)[:, 0]
+                cb = child_base[node]
+                go_right = xv >= thresh[node]
+                go_right = jnp.where(t == depth_sel, ~go_right, go_right)
+                return jnp.where(cb >= 0,
+                                 cb + go_right.astype(jnp.int32), node)
+
+            return jax.lax.fori_loop(0, max_depth, step, node0)
+
+        alts = jax.vmap(alt_descend, in_axes=1, out_axes=1)(flip_depth)
+        probes.append(jnp.where(jnp.isfinite(neg), alts, -1))
+    out = jnp.concatenate(probes, axis=1)
+    if out.shape[1] < n_probes:
+        out = jnp.pad(out, ((0, 0), (0, n_probes - out.shape[1])),
+                      constant_values=-1)
+    return out

@@ -86,6 +86,44 @@ def test_sharded_index_validity_mask():
     assert "OK validity" in out
 
 
+def test_sharded_index_multiprobe():
+    """params.n_probes widens every cell's descent (DESIGN.md §9): the
+    n_probes=1 spelling is bitwise the default path, and wider probes only
+    improve recall of the all-gathered global top-k."""
+    out = _run("""
+        from repro.core.sharded_index import build_sharded_index, make_query_fn
+        from repro.core import ForestConfig, exact_knn
+        from repro.data.synthetic import clustered_gaussians
+        from repro.index import SearchParams
+        N, d = 4096, 48
+        db = jnp.asarray(clustered_gaussians(N, d, seed=0))
+        q = db[:48] + 0.02
+        cfg = ForestConfig(n_trees=16, capacity=12)
+        idx = build_sharded_index(jax.random.key(0), db, cfg, mesh)
+        qfn = make_query_fn(idx.cfg, idx.n_local, mesh, k=5)
+        qfn1 = make_query_fn(idx.cfg, idx.n_local, mesh,
+                             params=SearchParams(k=5, n_probes=1))
+        qfn4 = make_query_fn(idx.cfg, idx.n_local, mesh,
+                             params=SearchParams(k=5, n_probes=4))
+        with mesh:
+            d0, i0 = qfn(idx, q, db)
+            d1, i1 = qfn1(idx, q, db)
+            d4, i4 = qfn4(idx, q, db)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d0))
+        _, tids = exact_knn(q, db, k=5)
+        def rec(i):
+            return float((np.asarray(i)[:, :, None]
+                          == np.asarray(tids)[:, None, :]).any(1).mean())
+        r1, r4 = rec(i1), rec(i4)
+        assert r4 >= r1 - 1e-6, (r1, r4)
+        dd = np.asarray(d4)
+        assert (np.diff(dd, axis=1) >= -1e-6).all()
+        print("OK multiprobe", r1, r4)
+    """)
+    assert "OK multiprobe" in out
+
+
 def test_dp_train_step_with_compression():
     out = _run("""
         from repro.configs.base import LMConfig

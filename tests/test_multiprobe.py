@@ -1,0 +1,290 @@
+"""Multi-probe traversal + recall-targeted tuner (DESIGN.md §9).
+
+Pins the three contracts the PR rests on:
+  * n_probes=1 is BITWISE-identical to the pre-multi-probe path, on the
+    raw traversal, through the fused pipeline, and on all four backends;
+  * widening probes only ever adds candidates (superset), so recall@k is
+    non-decreasing in n_probes under the exact rerank;
+  * the tuner is deterministic (same key + queries -> same SearchParams)
+    and its result persists through the manifest (v3, with the v2 shim).
+"""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ForestConfig, build_forest, exact_knn, fused_query,
+                        gather_candidates, gather_candidates_multi,
+                        recall_at_k, traverse, traverse_multiprobe)
+from repro.core.adaptive import adaptive_query
+from repro.core.search import rerank_topk
+from repro.data.synthetic import clustered_gaussians
+from repro.index import (IndexSpec, SearchParams, build_index, load_index,
+                         tune, tune_report)
+from repro.kernels import ops
+
+N, D, L = 2000, 24, 8
+BACKENDS = ["rpf", "rpf+int8", "lsh-cascade", "bruteforce"]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return jnp.asarray(clustered_gaussians(N, D, n_clusters=16, seed=0))
+
+
+@pytest.fixture(scope="module")
+def queries(db):
+    noise = 0.03 * jax.random.normal(jax.random.key(5), (64, D))
+    return db[100:164] + noise
+
+
+@pytest.fixture(scope="module")
+def forest(db):
+    cfg = ForestConfig(n_trees=L, capacity=12, split_ratio=0.3)
+    return build_forest(jax.random.key(0), db, cfg), cfg.resolved(N)
+
+
+# ---------------------------------------------------------------------------
+# traversal-level contracts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_probes", [1, 2, 4, 8])
+def test_primary_probe_bitwise_matches_traverse(forest, queries, n_probes):
+    f, cfg = forest
+    single = np.asarray(traverse(f, queries, cfg.max_depth))
+    multi = np.asarray(traverse_multiprobe(f, queries, cfg.max_depth,
+                                           n_probes))
+    assert multi.shape == (L, queries.shape[0], n_probes)
+    np.testing.assert_array_equal(multi[:, :, 0], single)
+
+
+def test_probes_are_distinct_leaves(forest, queries):
+    f, cfg = forest
+    probes = np.asarray(traverse_multiprobe(f, queries, cfg.max_depth, 6))
+    child = np.asarray(f.child_base)
+    for t in range(L):
+        for b in range(queries.shape[0]):
+            real = probes[t, b][probes[t, b] >= 0]
+            assert real.size >= 1                      # primary always there
+            assert (child[t][real] < 0).all()          # all are leaves
+            assert len(set(real.tolist())) == real.size  # pairwise distinct
+
+
+def test_gather_multi_p1_bitwise_matches_gather(forest, queries):
+    f, cfg = forest
+    leaves = traverse(f, queries, cfg.max_depth)
+    i1, m1 = gather_candidates(f, leaves, cfg.leaf_pad)
+    im, mm = gather_candidates_multi(f, leaves[:, :, None], cfg.leaf_pad)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(im))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(mm))
+
+
+def test_candidate_superset_in_probes(forest, queries):
+    f, cfg = forest
+    sets = []
+    for p in (1, 2, 4):
+        leaves = traverse_multiprobe(f, queries, cfg.max_depth, p)
+        ids, mask = gather_candidates_multi(f, leaves, cfg.leaf_pad)
+        ids, mask = np.asarray(ids), np.asarray(mask)
+        sets.append([set(ids[b][mask[b]].tolist())
+                     for b in range(queries.shape[0])])
+    for prev, cur in zip(sets, sets[1:]):
+        for b in range(queries.shape[0]):
+            assert prev[b] <= cur[b]
+
+
+def test_multiprobe_fused_matches_staged_oracle(forest, queries, db):
+    """The widened candidate set through the fused rerank == the staged
+    gather-everything oracle on the same candidates (ids bitwise)."""
+    f, cfg = forest
+    leaves = traverse_multiprobe(f, queries, cfg.max_depth, 3)
+    ids, mask = gather_candidates_multi(f, leaves, cfg.leaf_pad)
+    od, oi = rerank_topk(queries, ids, mask, db, k=10)
+    fd, fi = fused_query(f, queries, db, 10, cfg, n_probes=3, mode="ref")
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(fi))
+    finite = np.isfinite(np.asarray(od))
+    np.testing.assert_allclose(np.asarray(od)[finite],
+                               np.asarray(fd)[finite], rtol=1e-5, atol=1e-5)
+
+
+def test_monotone_recall_in_probes(forest, queries, db):
+    """More probes -> superset candidates -> recall@k non-decreasing."""
+    f, cfg = forest
+    _, true_ids = exact_knn(queries, db, k=10)
+    recalls = []
+    for p in (1, 2, 4, 8):
+        _, ids = fused_query(f, queries, db, 10, cfg, n_probes=p)
+        recalls.append(float(recall_at_k(ids, true_ids)))
+    for prev, cur in zip(recalls, recalls[1:]):
+        assert cur >= prev - 1e-6, recalls
+    assert recalls[-1] > recalls[0], recalls    # and it actually helps
+
+
+def test_traverse_kernel_multiprobe_parity(forest, queries):
+    """Pallas kernel (interpret) == jnp oracle == forest-level traversal."""
+    f, cfg = forest
+    fl = np.asarray(traverse_multiprobe(f, queries, cfg.max_depth, 4))
+    for t in range(2):
+        args = (f.proj_idx[t, :, 0], f.thresh[t], f.child_base[t], queries,
+                cfg.max_depth)
+        lp = ops.traverse_tree(*args, mode="pallas", n_probes=4)
+        lr = ops.traverse_tree(*args, mode="ref", n_probes=4)
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(lr))
+        np.testing.assert_array_equal(np.asarray(lr), fl[t])
+        # n_probes=1 keeps the historical (B,) contract
+        l1 = ops.traverse_tree(*args, mode="pallas", n_probes=1)
+        np.testing.assert_array_equal(np.asarray(l1), fl[t][:, 0])
+
+
+def test_adaptive_composes_with_probes(forest, queries, db):
+    f, cfg = forest
+    _, true_ids = exact_knn(queries, db, k=10)
+    d1, i1, used1 = adaptive_query(f, queries, db, 10, cfg, wave=2,
+                                   tol=0.0, n_probes=1)
+    d4, i4, used4 = adaptive_query(f, queries, db, 10, cfg, wave=2,
+                                   tol=0.0, n_probes=4)
+    assert used1 <= L and used4 <= L
+    r1 = float(recall_at_k(i1, true_ids))
+    r4 = float(recall_at_k(i4, true_ids))
+    assert r4 >= r1 - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# unified-API contracts: every backend, bitwise at n_probes=1
+# ---------------------------------------------------------------------------
+
+
+def _build(backend, db):
+    return build_index(jax.random.key(0), np.asarray(db),
+                       IndexSpec(backend=backend,
+                                 forest=ForestConfig(n_trees=L, capacity=12)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_nprobes1_bitwise_on_every_backend(backend, db, queries):
+    index = _build(backend, db)
+    d0, i0 = index.search(queries, SearchParams(k=10))
+    d1, i1 = index.search(queries, SearchParams(k=10, n_probes=1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("backend", ["rpf", "rpf+int8"])
+def test_tree_prefix_matches_prefix_forest(backend, db, queries):
+    """search(n_trees=t) == querying a freshly-sliced prefix forest."""
+    index = _build(backend, db)
+    t = L // 2
+    d0, i0 = index.search(queries, SearchParams(k=5, n_trees=t))
+    sub = jax.tree.map(lambda a: a[:t], index.forest)
+    cfg = index.spec.forest._replace(n_trees=t)
+    src = index.qdb if backend == "rpf+int8" else jnp.asarray(index.db)
+    d1, i1 = fused_query(sub, queries, src, 5, cfg)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_multiprobe_respects_tombstones(db, queries):
+    """Deleted rows never surface from the widened candidate set."""
+    index = _build("rpf", db)
+    _, ids = index.search(queries, SearchParams(k=10, n_probes=4))
+    victims = sorted({int(np.asarray(ids)[0, 0]), int(np.asarray(ids)[1, 0])})
+    index.delete(victims)
+    _, ids2 = index.search(queries, SearchParams(k=10, n_probes=4))
+    assert not np.isin(np.asarray(ids2), victims).any()
+
+
+# ---------------------------------------------------------------------------
+# tuner
+# ---------------------------------------------------------------------------
+
+
+def test_tuner_deterministic_and_meets_target(db, queries):
+    index = _build("rpf", db)
+    kw = dict(target_recall=0.9, k=10, probe_grid=(1, 2, 4),
+              tree_fracs=(0.5, 1.0))
+    p1, report = tune_report(index, queries, **kw)
+    p2 = tune(index, queries, **kw)
+    assert p1 == p2                                   # deterministic
+    chosen = [r for r in report if r["params"] == p1]
+    assert chosen and chosen[0]["recall"] >= 0.9
+    # cheapest: nothing that met the target was cheaper
+    assert all(r["cost"] >= chosen[0]["cost"]
+               for r in report if r["meets_target"])
+
+
+def test_tuner_persists_and_roundtrips(tmp_path, db, queries):
+    index = _build("rpf", db)
+    params = tune(index, queries, target_recall=0.85, k=10,
+                  probe_grid=(1, 2, 4), tree_fracs=(0.5, 1.0))
+    assert index.tuned_params == params
+    # bare search uses the tuned operating point
+    d0, i0 = index.search(queries)
+    d1, i1 = index.search(queries, params)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    # explicit params still win
+    _, i5 = index.search(queries, SearchParams(k=5))
+    assert np.asarray(i5).shape[1] == 5
+
+    path = str(tmp_path / "idx")
+    index.save(path)
+    loaded = load_index(path)
+    assert loaded.tuned_params == params              # manifest v3
+    d2, i2 = loaded.search(queries)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i0))
+
+    # v2 read shim: strip the tuned payload, downgrade the format marker
+    man_path = glob.glob(os.path.join(path, "step_*", "manifest.json"))[0]
+    with open(man_path) as fh:
+        man = json.load(fh)
+    man["extra"]["format"] = 2
+    man["extra"].pop("tuned_params")
+    with open(man_path, "w") as fh:
+        json.dump(man, fh)
+    legacy = load_index(path)
+    assert legacy.tuned_params is None
+    _, i3 = legacy.search(queries, params)
+    np.testing.assert_array_equal(np.asarray(i3), np.asarray(i0))
+
+
+@pytest.mark.parametrize("backend", ["bruteforce", "lsh-cascade"])
+def test_tuner_nonforest_backends(backend, db, queries):
+    index = _build(backend, db)
+    params = tune(index, queries, target_recall=0.5, k=5)
+    _, ids = index.search(queries, params)
+    assert np.asarray(ids).shape == (queries.shape[0], 5)
+
+
+def test_tuner_empty_grid_raises(db, queries):
+    index = _build("rpf", db)
+    with pytest.raises(ValueError, match="grid is empty"):
+        tune(index, queries, probe_grid=())
+    with pytest.raises(ValueError, match="grid is empty"):
+        # every wave covers the whole forest -> every combo pruned
+        tune(index, queries, adaptive_waves=(L,))
+
+
+def test_tuner_full_forest_spelled_as_zero(db, queries):
+    """A tuned point that restricts nothing must say n_trees=0 ('all'), so
+    it stays valid on surfaces without a search-time tree knob (sharded)."""
+    from repro import compat
+    from repro.core.sharded_index import make_query_fn
+    index = _build("rpf", db)
+    params = tune(index, queries, target_recall=1.01,   # unreachable ->
+                  probe_grid=(8,), tree_fracs=(1.0,))   # full forest wins
+    assert params.n_trees == 0
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    make_query_fn(ForestConfig(n_trees=4), 128, mesh, params=params)
+
+
+def test_sharded_params_reject_n_trees():
+    from repro import compat
+    from repro.core.sharded_index import make_query_fn
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="n_trees"):
+        make_query_fn(ForestConfig(n_trees=4), 128, mesh,
+                      params=SearchParams(k=5, n_trees=2))

@@ -55,6 +55,31 @@ def test_traversal_deterministic_and_self_finding(n, seed):
 
 
 @settings(**SETTINGS)
+@given(n=st.integers(100, 300), n_probes=st.integers(1, 6),
+       seed=st.integers(0, 2**30))
+def test_multiprobe_invariants(n, n_probes, seed):
+    """For ANY data/probe width: probe 0 is bitwise the single descent,
+    every probe is a leaf, and a tree's probes are pairwise distinct."""
+    from repro.core.forest import traverse_multiprobe
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    cfg = ForestConfig(n_trees=2, capacity=8)
+    rcfg = cfg.resolved(n)
+    f = build_forest(jax.random.key(seed % 1000), x, cfg)
+    q = x[:16]
+    single = np.asarray(traverse(f, q, rcfg.max_depth))
+    multi = np.asarray(traverse_multiprobe(f, q, rcfg.max_depth, n_probes))
+    assert multi.shape == (2, 16, n_probes)
+    assert (multi[:, :, 0] == single).all()
+    child = np.asarray(f.child_base)
+    for t in range(2):
+        for b in range(16):
+            real = multi[t, b][multi[t, b] >= 0]
+            assert (child[t][real] < 0).all()
+            assert len(set(real.tolist())) == real.size
+
+
+@settings(**SETTINGS)
 @given(b=st.integers(1, 8), m=st.integers(2, 50), seed=st.integers(0, 2**30))
 def test_mask_duplicates_idempotent_and_correct(b, m, seed):
     rng = np.random.default_rng(seed)

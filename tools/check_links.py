@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Markdown relative-link checker (stdlib only) — the CI docs gate.
+
+Usage: python tools/check_links.py FILE.md [FILE.md ...]
+
+Checks, for every ``[text](target)`` in the given markdown files:
+  * http(s)/mailto targets are skipped (no network in CI),
+  * a relative path target must exist on disk (resolved against the file),
+  * a ``#fragment`` (same-file or on a .md target) must match a heading in
+    the target file, using GitHub's anchor slug rules (lowercase, spaces ->
+    dashes, punctuation dropped).
+
+Exit code 0 when every link resolves, 1 otherwise (each broken link is
+reported as ``file:line: message``).
+"""
+from __future__ import annotations
+
+import re
+import sys
+import unicodedata
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor id transform (close enough:
+    strip markup, lowercase, drop punctuation, spaces to dashes)."""
+    text = re.sub(r"[`*_]|\[([^\]]*)\]\([^)]*\)", r"\1", heading).strip()
+    text = unicodedata.normalize("NFKD", text)
+    out = []
+    for ch in text.lower():
+        if ch.isalnum() or ch in "-_ ":
+            out.append("-" if ch == " " else ch)
+    return "".join(out)
+
+
+def anchors_of(path: Path) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    for line in path.read_text(encoding="utf-8").splitlines():
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_file(md: Path) -> list[str]:
+    errors: list[str] = []
+    in_code = False
+    for lineno, line in enumerate(
+            md.read_text(encoding="utf-8").splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = md if not path_part else (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md}:{lineno}: broken link target "
+                              f"{target!r} ({dest} does not exist)")
+                continue
+            if fragment and dest.suffix.lower() == ".md":
+                if github_slug(fragment) not in anchors_of(dest):
+                    errors.append(f"{md}:{lineno}: dangling anchor "
+                                  f"#{fragment} in {dest.name}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    errors: list[str] = []
+    for name in argv:
+        md = Path(name)
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(argv)} file(s): "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
