@@ -1,0 +1,129 @@
+"""Forest build-time: the batched cross-tree builder vs its baselines.
+
+Construction used to dominate the tier-1 suite and every ``compact()``:
+the legacy path builds the L trees as L independent level-synchronous
+problems (one lexsort + two searchsorted per tree per level, always to
+the full worst-case depth budget).  The batched builder (DESIGN.md §10)
+advances all L trees together — one segmented sort over composite
+(tree, node) keys per level, the percentile-threshold draw fused into
+the same sorted pass, and an early exit once no leaf anywhere is
+overfull — while staying bitwise-identical in compat seed mode.
+
+Measured on the 784-d benchmark corpus (mnist-statistics, the same
+generator the recall frontier uses):
+
+  * ``legacy_s``     — ``build_forest(impl="legacy")``, the per-tree path
+  * ``batched_s``    — the batched builder, compat seed mode (default)
+  * ``fused_s``      — batched + one-key-split-per-level seed mode
+  * ``incremental_s``— the paper's one-point-at-a-time numpy builder
+                       (forest_incremental.py), timed on a subsample and
+                       scaled per-point: the paper-faithful reference
+  * ``speedup``      — legacy_s / batched_s (CI history-gates this ratio:
+                       same-machine, so runner speed cancels)
+  * ``bitwise_equal``— batched output == legacy output, every array
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.build_time [--smoke]
+
+Writes artifacts/BENCH_build_time.json (uploaded + history-gated by CI
+bench-smoke, see tools/bench_history.py) and merges into
+artifacts/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import record, timer
+from repro.core import ForestConfig, build_forest
+from repro.core.forest_incremental import IncrementalForest
+from repro.data.synthetic import mnist_like
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_build_time.json")
+
+
+def run(n: int, n_trees: int, capacity: int, iters: int,
+        incremental_n: int) -> dict:
+    db, _, _, _ = mnist_like(n=n, n_test=1, seed=0)
+    x = jax.numpy.asarray(db)
+    d = int(x.shape[1])
+    cfg = ForestConfig(n_trees=n_trees, capacity=capacity, split_ratio=0.3)
+    rcfg = cfg.resolved(n)
+    key = jax.random.key(0)
+    print(f"  corpus: mnist-statistics n={n} d={d} L={n_trees} "
+          f"C={capacity} depth_budget={rcfg.max_depth}")
+
+    legacy_s, f_legacy = timer(
+        lambda: build_forest(key, x, cfg, impl="legacy"),
+        iters=iters, reduce="min")
+    batched_s, f_batched = timer(
+        lambda: build_forest(key, x, cfg),
+        iters=iters, reduce="min")
+    fused_s, _ = timer(
+        lambda: build_forest(key, x, cfg, seed_mode="fused"),
+        iters=iters, reduce="min")
+
+    bitwise = all(
+        np.array_equal(np.asarray(getattr(f_legacy, name)),
+                       np.asarray(getattr(f_batched, name)))
+        for name in f_legacy._fields)
+
+    # the paper's incremental insert loop (semantic oracle), subsampled —
+    # it is O(n log n) python/numpy and only here to anchor the comparison
+    sub = db[:incremental_n]
+    t0 = time.perf_counter()
+    IncrementalForest(sub, n_trees=2, capacity=capacity,
+                      split_ratio=0.3, seed=0)
+    inc_sub_s = time.perf_counter() - t0
+    incremental_s = inc_sub_s * (n / incremental_n) * (n_trees / 2)
+
+    out = dict(
+        n=n, d=d, n_trees=n_trees, capacity=capacity,
+        depth_budget=rcfg.max_depth,
+        legacy_s=round(legacy_s, 4),
+        batched_s=round(batched_s, 4),
+        fused_s=round(fused_s, 4),
+        incremental_s=round(incremental_s, 2),
+        incremental_note=(f"paper insert loop, measured on n="
+                          f"{incremental_n} x 2 trees, scaled linearly"),
+        speedup=round(legacy_s / batched_s, 2),
+        fused_speedup=round(legacy_s / fused_s, 2),
+        bitwise_equal=bool(bitwise),
+    )
+    print(f"  legacy {legacy_s:.2f}s | batched {batched_s:.2f}s "
+          f"({out['speedup']}x) | fused-seed {fused_s:.2f}s "
+          f"({out['fused_speedup']}x) | paper-incremental "
+          f"~{incremental_s:.0f}s (scaled) | bitwise={bitwise}")
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    print(f"[build_time] smoke={smoke}")
+    if smoke:
+        out = run(n=8000, n_trees=32, capacity=12, iters=3,
+                  incremental_n=1500)
+    else:
+        out = run(n=60000, n_trees=80, capacity=12, iters=3,
+                  incremental_n=4000)
+    out.update(smoke=smoke, backend=jax.default_backend())
+
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    record({}, "build_time", out)
+    print(f"  -> {os.path.relpath(ARTIFACT)} speedup={out['speedup']}x "
+          f"bitwise={out['bitwise_equal']}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-size run")
+    a = ap.parse_args()
+    main(smoke=a.smoke)

@@ -11,7 +11,7 @@ import argparse
 import sys
 import time
 
-from benchmarks import (fig4_mnist, fig5_iss, fused_vs_staged,
+from benchmarks import (build_time, fig4_mnist, fig5_iss, fused_vs_staged,
                         recall_frontier, retrieval_compare, roofline_table,
                         speedup_table, tree_stats)
 from benchmarks.common import csv_row, record
@@ -23,7 +23,7 @@ def main() -> None:
                    help="full N=60000/250736 runs (slow on CPU)")
     p.add_argument("--only", default="",
                    help="comma list: fig4,fig5,speedup,tree,retrieval,"
-                        "fused,frontier,roof")
+                        "fused,frontier,build,roof")
     args = p.parse_args()
     fast = not args.paper_scale
     only = set(args.only.split(",")) if args.only else None
@@ -92,6 +92,13 @@ def main() -> None:
             f"single_trees={r['single_probe_trees_at_target']}"
             f";multi_trees={r['multi_probe_trees_at_target']}"
             f";saved={r['trees_saved_ratio']}x"))
+    if want("build"):
+        r = build_time.main(smoke=fast)
+        record(results, "build_time", r)
+        rows.append(csv_row(
+            "forest_build", r["batched_s"] * 1e6,
+            f"speedup={r['speedup']}x;fused={r['fused_speedup']}x"
+            f";bitwise={r['bitwise_equal']}"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

@@ -13,14 +13,21 @@ Paper semantics (Zhong 2015, §3):
     ``traverse_multiprobe`` widens the descent to the n_probes most marginal
     leaves per tree (DESIGN.md §9); the paper's query is its n_probes=1 case.
 
-TPU-native re-expression (see DESIGN.md §2):
+TPU-native re-expression (see DESIGN.md §2 and §10):
   * level-synchronous build — all overflowing nodes of a depth split together,
     per-node percentile thresholds computed with one segmented sort per level;
+  * batched cross-tree construction — all L trees advance one level together
+    as a single (L, N) problem: one flat segmented sort over composite
+    (tree, node, projection) keys per level, thresholds read off the same
+    sorted pass, and an early exit once no leaf anywhere is overfull;
   * flat SoA tree storage (compact node ids, child_base pointers);
   * CSR leaf storage (perm + offset/count) for O(1) candidate slicing;
   * batched query traversal: a fori_loop of gather+compare over a query batch.
 
-Everything is jit-able with static shapes; `vmap` over trees gives the forest.
+Everything is jit-able with static shapes.  ``build_forest(impl="legacy")``
+keeps the original per-tree (vmapped) builder as the parity oracle; under the
+default ``seed_mode="compat"`` the batched builder reproduces its Forest
+arrays bitwise (tests/test_forest_batched.py pins this).
 """
 from __future__ import annotations
 
@@ -231,12 +238,13 @@ def _build_one_tree(key: jax.Array, x: jax.Array, cfg: ForestConfig) -> Forest:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "tree_chunk"))
-def build_forest(key: jax.Array, x: jax.Array, cfg: ForestConfig,
-                 tree_chunk: int = 0) -> Forest:
-    """Build the L-tree forest (vmap over trees; they are fully independent).
+def _build_forest_legacy(key: jax.Array, x: jax.Array, cfg: ForestConfig,
+                         tree_chunk: int = 0) -> Forest:
+    """The original per-tree builder (vmap of ``_build_one_tree``).
 
-    ``tree_chunk`` > 0 builds trees in chunks of that size via lax.map to bound
-    peak memory for very large L (the paper sweeps L up to 640).
+    Kept as the parity oracle and benchmark baseline for the batched
+    cross-tree builder (DESIGN.md §10); ``seed_mode="compat"`` of the
+    batched path is pinned bitwise against this.
     """
     cfg = cfg.resolved(x.shape[0])
     keys = jax.random.split(key, cfg.n_trees)
@@ -244,6 +252,360 @@ def build_forest(key: jax.Array, x: jax.Array, cfg: ForestConfig,
     if tree_chunk and cfg.n_trees > tree_chunk:
         return jax.lax.map(lambda k: build(k), keys, batch_size=tree_chunk)
     return jax.vmap(lambda k: build(k))(keys)
+
+
+# ---------------------------------------------------------------------------
+# batched cross-tree build (DESIGN.md §10): all L trees advance together
+# ---------------------------------------------------------------------------
+
+
+def _batched_level_draws(keys: jax.Array, cfg: ForestConfig, d: int,
+                         seed_mode: str):
+    """Per-level RNG for the batched builder.
+
+    compat: ``keys`` is the (L,) per-tree key array — the same
+      ``split(key, L)`` the legacy builder starts from — and each level
+      reproduces the legacy derivation exactly
+      (split(tree_key, depth) -> split(level_key, 3)), so every draw lands
+      bitwise where the per-tree builder put it.
+    fused:  ``keys`` is one scalar key, split once per level for the whole
+      forest; the three draws come out as single (L, m, ...) calls.
+      Different (valid) stream, cheaper derivation; opt-in via
+      ``build_forest(seed_mode="fused")``.
+    """
+    L, m, kp, depth = cfg.n_trees, cfg.max_nodes, cfg.n_proj, cfg.max_depth
+    if seed_mode == "compat":
+        level_keys = jax.vmap(lambda k: jax.random.split(k, depth),
+                              out_axes=1)(keys)          # (depth, L)
+
+        def draws(level):
+            k3 = jax.vmap(lambda k: jax.random.split(k, 3))(level_keys[level])
+            ci = jax.vmap(lambda k: jax.random.randint(
+                k, (m, kp), 0, d, dtype=jnp.int32))(k3[:, 0])
+            cc = jax.vmap(lambda k: jax.random.uniform(
+                k, (m, kp), jnp.float32))(k3[:, 1])
+            uu = jax.vmap(lambda k: jax.random.uniform(k, (m,)))(k3[:, 2])
+            return ci, cc, uu
+    elif seed_mode == "fused":
+        level_keys = jax.random.split(keys, depth)       # (depth,)
+
+        def draws(level):
+            k_feat, k_coef, k_quant = jax.random.split(level_keys[level], 3)
+            ci = jax.random.randint(k_feat, (L, m, kp), 0, d,
+                                    dtype=jnp.int32)
+            cc = jax.random.uniform(k_coef, (L, m, kp), jnp.float32)
+            uu = jax.random.uniform(k_quant, (L, m))
+            return ci, cc, uu
+    else:
+        raise ValueError(f"seed_mode must be compat|fused, got {seed_mode!r}")
+    return draws
+
+
+def _next_pow2(v: int) -> int:
+    return 1 << max(0, (int(v) - 1).bit_length())
+
+
+# below this many points the staged active-set shrink is pure overhead
+# (extra compiles + host syncs); single full-width stage instead
+_RESTAGE_MIN = 4096
+# floor for the compacted sort width: shapes below this recompile for no
+# measurable win (the sort is already sub-millisecond)
+_STAGE_FLOOR = 256
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "seed_mode", "a_cap", "shrink"))
+def _build_stage(keys: jax.Array, x: jax.Array, state: tuple,
+                 cfg: ForestConfig, seed_mode: str, a_cap: int,
+                 shrink: bool) -> tuple:
+    """Run build levels from ``state`` until done / depth budget / restage.
+
+    One jitted while_loop over levels at a fixed sort width ``a_cap``:
+    the per-level segmented sort (and the occupancy update) covers only
+    the ACTIVE points — points sitting in overfull leaves — compacted
+    into an (L, a_cap) buffer.  Leaves that are not overfull never split
+    again, so the active set only shrinks; when its per-tree maximum
+    falls to half of ``a_cap`` (and ``shrink`` allows), the loop exits so
+    the driver can relaunch at a smaller width.  ``a_cap == n`` skips the
+    compaction scatter entirely (every point is in the sort anyway).
+
+    Bitwise parity with the legacy builder holds because compaction is
+    order-preserving: each overfull node's segment holds exactly its own
+    points in original index order, so the stable (node, projection) sort
+    yields the same per-segment value sequence — and thresholds only ever
+    read values inside overfull segments.
+    """
+    n, d = x.shape
+    L, m, kp = cfg.n_trees, cfg.max_nodes, cfg.n_proj
+    r = cfg.split_ratio
+    compacted = a_cap < n
+    draws = _batched_level_draws(keys, cfg, d, seed_mode)
+    node_ids = jnp.arange(m, dtype=jnp.int32)[None, :]           # (1, m)
+    l_idx = jnp.arange(L, dtype=jnp.int32)[:, None]              # (L, 1)
+    tree_off = l_idx * (m + 1)   # m is the pad bucket of each tree
+
+    def cond(carry):
+        level, go, active_max = carry[0], carry[1], carry[2]
+        keep = go & (level < cfg.max_depth)
+        if shrink:
+            keep &= 2 * active_max > a_cap
+        return keep
+
+    def body(carry):
+        (level, _, _, assign, counts, proj_idx, proj_coef, thresh,
+         child_base, n_nodes) = carry
+
+        is_leaf = child_base < 0
+        alive = node_ids < n_nodes[:, None]
+        overfull = is_leaf & alive & (counts > cfg.capacity)
+
+        # --- candidate random tests for every (tree, slot) (Eq. 1) --------
+        cand_idx, cand_coef, u = draws(level)
+        if kp == 1:
+            cand_coef = jnp.ones_like(cand_coef)  # scale-invariant for K=1
+        test_idx = jnp.where(overfull[..., None], cand_idx, proj_idx)
+        test_coef = jnp.where(overfull[..., None], cand_coef, proj_coef)
+
+        # --- per-point projections under the candidate tests --------------
+        y = jax.vmap(lambda ti, tc, a: _project(x, ti[a], tc[a])
+                     )(test_idx, test_coef, assign)               # (L, N)
+
+        # --- ONE segmented sort over composite (tree, node, y) keys -------
+        # the (tree) key rides the batch axis, (node, projection) are the
+        # two sort keys — the same (int, float) comparator as the legacy
+        # per-tree lexsort, so the per-segment ordering (and thus every
+        # threshold read) matches it bitwise.  Only the sorted projection
+        # VALUES are kept: start offsets fall out of the occupancy cumsum
+        # (no searchsorted), no argsort + gather.
+        if compacted:
+            # scatter the active points into the narrow sort buffer;
+            # cumsum positions preserve index order, so stability carries
+            flag = jnp.take_along_axis(overfull, assign, axis=1)  # (L, N)
+            pos = jnp.cumsum(flag.astype(jnp.int32), axis=1) - 1
+            row = jnp.where(flag, pos, a_cap)        # inactive -> dropped
+            assign_c = jnp.full((L, a_cap), m, jnp.int32
+                                ).at[l_idx, row].set(assign, mode="drop")
+            y_c = jnp.zeros((L, a_cap), y.dtype
+                            ).at[l_idx, row].set(y, mode="drop")
+            seg_sizes = jnp.where(overfull, counts, 0)
+        else:
+            assign_c, y_c = assign, y
+            seg_sizes = counts
+        _, y_sorted = jax.lax.sort((assign_c, y_c), dimension=1, num_keys=2,
+                                   is_stable=True)                # (L, A)
+
+        start = jnp.cumsum(seg_sizes, axis=1) - seg_sizes         # (L, m)
+        last = jnp.clip(start + counts - 1, 0, a_cap - 1)
+
+        def at(pos):  # y_sorted value at per-node position (L, m)
+            return jnp.take_along_axis(y_sorted,
+                                       jnp.clip(pos, 0, a_cap - 1), axis=1)
+
+        lo = at(start)
+        hi = at(last)
+        # ties guard: a constant projection can't split — the node stays
+        # open and redraws a fresh random coordinate at the next level
+        degenerate = ~(hi > lo)
+        splitting = overfull & ~degenerate
+
+        # --- allocate children compactly (per tree) -----------------------
+        n_split = jnp.sum(splitting.astype(jnp.int32), axis=1)    # (L,)
+        rank = jnp.cumsum(splitting.astype(jnp.int32), axis=1) - 1
+        new_child_base = jnp.where(splitting,
+                                   n_nodes[:, None] + 2 * rank, child_base)
+        budget_overflow = (n_nodes + 2 * n_split) > m             # (L,)
+        new_child_base = jnp.where(budget_overflow[:, None], child_base,
+                                   new_child_base)
+        splitting = jnp.where(budget_overflow[:, None],
+                              jnp.zeros_like(splitting), splitting)
+        new_n_nodes = jnp.where(budget_overflow, n_nodes,
+                                n_nodes + 2 * n_split)
+
+        # paper Eq. 1: psi ~ U[y_{r n}, y_{(1-r) n}], values read from the
+        # SAME sorted pass (the fused percentile-threshold draw)
+        last_idx = jnp.maximum(start, start + counts - 1)
+        cnt_f = counts.astype(jnp.float32)
+        pos_a = jnp.clip(start + jnp.floor(r * cnt_f).astype(jnp.int32),
+                         start, last_idx)
+        pos_b = jnp.clip(start + jnp.floor((1.0 - r) * cnt_f
+                                           ).astype(jnp.int32),
+                         start, last_idx)
+        a = at(pos_a)
+        b_ = at(pos_b)
+        cand_thresh = a + u * (b_ - a)
+        # tie escape (see _build_one_tree): collapsed percentile interval
+        # falls back to a uniform value split over the full (lo, hi] range
+        cand_thresh = jnp.where(
+            cand_thresh > lo, cand_thresh,
+            lo + jnp.maximum(u, 0.05) * (hi - lo))
+
+        proj_idx = jnp.where(splitting[..., None], cand_idx, proj_idx)
+        proj_coef = jnp.where(splitting[..., None], cand_coef, proj_coef)
+        thresh = jnp.where(splitting, cand_thresh, thresh)
+
+        # --- reassign points of splitting nodes ---------------------------
+        node_splits = jnp.take_along_axis(splitting, assign, axis=1)
+        go_right = y >= jnp.take_along_axis(thresh, assign, axis=1)
+        new_assign = jnp.where(
+            node_splits,
+            jnp.take_along_axis(new_child_base, assign, axis=1)
+            + go_right.astype(jnp.int32),
+            assign,
+        )
+
+        # --- occupancy update over the active points only -----------------
+        # every point of an overfull node is in the compacted set, so
+        #   counts' = counts*(not overfull) + seg_count(new node of active)
+        # (degenerate nodes re-add their own points; split points land in
+        # their children); pads live in the per-tree bucket m, sliced off
+        if compacted:
+            # new_assign already holds every point's destination node —
+            # reuse the active->buffer map from the sort compaction
+            moved = jnp.full((L, a_cap), m, jnp.int32
+                             ).at[l_idx, row].set(new_assign, mode="drop")
+            seg = jax.ops.segment_sum(
+                jnp.ones((L * a_cap,), jnp.int32),
+                (moved + tree_off).reshape(-1),
+                num_segments=L * (m + 1)).reshape(L, m + 1)
+            new_counts = jnp.where(overfull, 0, counts) + seg[:, :m]
+        else:
+            new_counts = jax.ops.segment_sum(
+                jnp.ones((L * n,), jnp.int32),
+                (new_assign + tree_off).reshape(-1),
+                num_segments=L * (m + 1)).reshape(L, m + 1)[:, :m]
+
+        new_overfull = (new_child_base < 0) \
+            & (node_ids < new_n_nodes[:, None]) \
+            & (new_counts > cfg.capacity)
+        go = jnp.any(new_overfull)
+        active_max = jnp.max(jnp.sum(
+            jnp.where(new_overfull, new_counts, 0), axis=1))
+        return (level + 1, go, active_max, new_assign, new_counts, proj_idx,
+                proj_coef, thresh, new_child_base, new_n_nodes)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def _build_forest_batched(keys: jax.Array, x: jax.Array, cfg: ForestConfig,
+                          seed_mode: str = "compat",
+                          restage_min: int = _RESTAGE_MIN) -> Forest:
+    """All-L-trees-at-once level-synchronous build (DESIGN.md §10).
+
+    ``keys``: the (L,) per-tree key array in compat mode, one scalar key
+    in fused mode (see ``_batched_level_draws``).
+
+    Drives ``_build_stage`` in rounds: the first stage runs at full sort
+    width; as the active point set decays, later stages relaunch with the
+    sort width halved-or-better (power-of-two buckets, so the number of
+    compiled shapes is logarithmic).  The level loop exits as soon as NO
+    leaf anywhere is overfull — the depth budget in ``cfg.max_depth`` is
+    a worst-case bound (heavily tied data) and typical builds finish in a
+    fraction of it; skipped tail levels are bitwise no-ops in the legacy
+    scan, so early exit preserves exact parity.
+    """
+    n, _ = x.shape
+    L, m, kp = cfg.n_trees, cfg.max_nodes, cfg.n_proj
+
+    counts0 = jnp.zeros((L, m), jnp.int32).at[:, 0].set(n)
+    state = (
+        jnp.asarray(0, jnp.int32),                        # level
+        jnp.asarray(n > cfg.capacity),                    # go: root overfull
+        jnp.asarray(n, jnp.int32),                        # active_max
+        jnp.zeros((L, n), jnp.int32),                     # assign: all at root
+        counts0,
+        jnp.zeros((L, m, kp), jnp.int32),                 # proj_idx
+        jnp.ones((L, m, kp), jnp.float32),                # proj_coef
+        jnp.zeros((L, m), jnp.float32),                   # thresh
+        jnp.full((L, m), -1, jnp.int32),                  # child_base
+        jnp.ones((L,), jnp.int32),                        # n_nodes
+    )
+
+    if isinstance(x, jax.core.Tracer) or isinstance(keys, jax.core.Tracer):
+        # traced caller (shard_map per-device builds, user jit/vmap over
+        # the key with a closed-over concrete db, ...): the staged shrink
+        # needs host control flow, so run one full-width in-graph stage —
+        # the early-exit while_loop still applies
+        state = _build_stage(keys, x, state, cfg, seed_mode, n,
+                             shrink=False)
+    else:
+        a_cap = n
+        shrink = n >= restage_min
+        while True:
+            state = _build_stage(keys, x, state, cfg, seed_mode, a_cap,
+                                 shrink)
+            level, go, active_max = (int(state[0]), bool(state[1]),
+                                     int(state[2]))
+            if not go or level >= cfg.max_depth:
+                break
+            nxt = max(_next_pow2(active_max), _STAGE_FLOOR)
+            if nxt >= a_cap:      # no shrink possible: run to completion
+                shrink = False
+                continue
+            a_cap = nxt
+            shrink = a_cap > _STAGE_FLOOR
+
+    (_, _, _, assign, counts, proj_idx, proj_coef, thresh, child_base,
+     n_nodes) = state
+    return _finalize_csr(assign, counts, proj_idx, proj_coef, thresh,
+                         child_base, n_nodes)
+
+
+@jax.jit
+def _finalize_csr(assign, counts, proj_idx, proj_coef, thresh, child_base,
+                  n_nodes) -> Forest:
+    """CSR leaf storage: one batched stable int argsort over (L, N)."""
+    perm = jnp.argsort(assign, axis=1, stable=True).astype(jnp.int32)
+    leaf_offset = (jnp.cumsum(counts, axis=1) - counts).astype(jnp.int32)
+    leaf_count = jnp.where(child_base < 0, counts, 0).astype(jnp.int32)
+    return Forest(
+        proj_idx=proj_idx,
+        proj_coef=proj_coef,
+        thresh=thresh,
+        child_base=child_base,
+        perm=perm,
+        leaf_offset=leaf_offset,
+        leaf_count=leaf_count,
+        n_nodes=n_nodes,
+    )
+
+
+def build_forest(key: jax.Array, x: jax.Array, cfg: ForestConfig,
+                 tree_chunk: int = 0, impl: str = "batched",
+                 seed_mode: str = "compat") -> Forest:
+    """Build the L-tree forest.
+
+    ``impl="batched"`` (default) constructs all L trees at once — one
+    segmented sort over composite (tree, node) keys per level plus an
+    early exit when every leaf fits — and under the default
+    ``seed_mode="compat"`` returns Forest arrays bitwise identical to
+    ``impl="legacy"`` (the original per-tree builder, kept as the parity
+    oracle).  ``seed_mode="fused"`` derives the per-level randomness from
+    one key split per level instead of per tree — a different, equally
+    valid stream (benchmarks/build_time.py measures both).
+
+    ``tree_chunk`` > 0 builds trees in chunks of that size to bound peak
+    memory for very large L (the paper sweeps L up to 640).  In compat
+    mode chunking is exact (per-tree key derivation makes the chunks
+    independent); in fused mode each chunk folds its index into the key.
+    """
+    cfg = cfg.resolved(x.shape[0])
+    if impl == "legacy":
+        return _build_forest_legacy(key, x, cfg, tree_chunk)
+    if impl != "batched":
+        raise ValueError(f"impl must be batched|legacy, got {impl!r}")
+    keys = jax.random.split(key, cfg.n_trees) if seed_mode == "compat" \
+        else key
+    if tree_chunk and cfg.n_trees > tree_chunk:
+        chunks = []
+        for i, lo in enumerate(range(0, cfg.n_trees, tree_chunk)):
+            width = min(tree_chunk, cfg.n_trees - lo)
+            sub_cfg = cfg._replace(n_trees=width)
+            sub_keys = keys[lo:lo + width] if seed_mode == "compat" \
+                else jax.random.fold_in(key, i)
+            chunks.append(_build_forest_batched(sub_keys, x, sub_cfg,
+                                                seed_mode=seed_mode))
+        return jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *chunks)
+    return _build_forest_batched(keys, x, cfg, seed_mode=seed_mode)
 
 
 # ---------------------------------------------------------------------------

@@ -406,6 +406,9 @@ class Index:
         The rebuild uses the index's original key over the live rows in
         canonical (segment) order, so a compacted index answers bitwise
         identically to a fresh ``build_index(key, live_rows, spec)``.
+        The rebuild itself rides the batched cross-tree forest builder
+        (DESIGN.md §10), so compaction cost scales like one fast build,
+        not L tree builds.
         """
         with self._lock:
             if self._compacting:

@@ -56,6 +56,12 @@ _FOREST_SKELETON = Forest(proj_idx=0, proj_coef=0, thresh=0, child_base=0,
 class RPFEngine:
     """The paper's random-partition-forest core, fused fp32 rerank.
 
+    Engine construction IS forest construction: every build — fresh
+    index, delta-buffer seal, ``compact()`` rebuild — funnels through
+    ``build_forest``'s batched cross-tree builder (DESIGN.md §10), whose
+    compat seed mode keeps rebuilds bitwise-reproducible for the
+    compaction-vs-fresh and save/load pins.
+
     Honors the full probes-vs-trees search surface (DESIGN.md §9):
     ``params.n_probes`` widens the per-tree descent to the most-marginal
     leaves, ``params.n_trees`` restricts the query to a prefix of the

@@ -11,7 +11,9 @@ The mutation half of the unified Index API (DESIGN.md §8) is LSM-shaped:
     of freshly added rows, brute-force searched through the same fused
     rerank kernel as every sealed backend.  The stacked device copy is
     cached and re-uploaded only when new rows landed since the last search
-    (never re-stacked per query).
+    (never re-stacked per query).  Sealing a delta builds a fresh engine
+    over its rows — for forest backends that is one batched cross-tree
+    build (DESIGN.md §10), which is what keeps the seal path cheap.
   * ``IndexView`` — an immutable snapshot of (sealed segments, delta
     prefix, tombstones).  ``Index.search`` grabs the current view with a
     single attribute read — readers never take the writer lock — and

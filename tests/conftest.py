@@ -1,3 +1,28 @@
+"""Shared test infrastructure: the build cache + the CI shard splitter.
+
+Two pieces (both motivated by CI wall-clock — see DESIGN.md §10):
+
+* ``shared_builds`` — a session-scoped cache of deterministic, expensive
+  builds (synthetic corpora, forests, whole indexes), keyed by
+  ``(seed, cfg, data descriptor)``.  Builds are pure functions of their
+  key, so tests that used to rebuild identical small forests now share
+  one.  ONLY read-only uses may share: a test that mutates an index
+  (delete/upsert/tune/compact) must build its own fresh instance.
+
+* a pytest-split-style shard splitter — ``--splits N --group K``
+  partitions test FILES into N duration-balanced groups so CI can run
+  tier-1 as a matrix.  File granularity keeps module-scoped fixtures and
+  the build cache effective inside one shard.  Weights come from
+  ``--durations-path`` — the COMMITTED ``tests/.test_durations.json``,
+  never a cache, so the partition is a pure function of the checkout and
+  every matrix job computes the identical split (no test can be silently
+  dropped by cache skew); files missing from it fall back to a
+  size-based estimate.  Fresh timings are written by
+  ``--store-durations`` (optionally to ``--store-durations-path`` — CI
+  shards write per-group fragments, cached via actions/cache, and a
+  drift check nags when the committed weights go stale).
+"""
+import json
 import os
 import sys
 
@@ -5,3 +30,215 @@ import sys
 # and benches must see 1 device; only launch/dryrun.py forces 512, and the
 # multi-device tests spawn subprocesses that set 8.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+_DEFAULT_DURATIONS = os.path.join(os.path.dirname(__file__),
+                                  ".test_durations.json")
+
+
+# ---------------------------------------------------------------------------
+# session-scoped build cache
+# ---------------------------------------------------------------------------
+
+
+class SharedBuilds:
+    """Session cache of deterministic builds, keyed by (seed, cfg, data).
+
+    Everything handed out is shared across tests: treat it as frozen.
+    ``index()`` builds are for read-only searching; mutating tests
+    (delete/upsert/tune/save) build fresh via ``repro.index.build_index``.
+    """
+
+    def __init__(self):
+        self._cache = {}
+
+    def get(self, key, builder):
+        """Generic memo: ``builder()`` runs once per hashable ``key``."""
+        if key not in self._cache:
+            self._cache[key] = builder()
+        return self._cache[key]
+
+    # ---- corpora ---------------------------------------------------------
+    def clustered_db(self, n, d, n_clusters=16, seed=0):
+        """jnp clustered_gaussians corpus (the standard ANN test corpus)."""
+        import jax.numpy as jnp
+        from repro.data.synthetic import clustered_gaussians
+        return self.get(
+            ("db.clustered", n, d, n_clusters, seed),
+            lambda: jnp.asarray(clustered_gaussians(
+                n, d, n_clusters=n_clusters, seed=seed)))
+
+    def normal_db(self, n, d, seed, nonneg=False):
+        """jnp standard-normal corpus (|x| when ``nonneg``, for chi2)."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def build():
+            x = np.random.default_rng(seed).normal(size=(n, d))
+            x = np.abs(x) if nonneg else x
+            return jnp.asarray(x.astype(np.float32))
+
+        return self.get(("db.normal", n, d, seed, nonneg), build)
+
+    # ---- forests ---------------------------------------------------------
+    def forest(self, key_seed, cfg, db):
+        """(Forest, resolved cfg) for ``build_forest(key(key_seed), db)``.
+
+        ``db`` must come from one of the corpus methods above (its cache
+        key rides along via identity lookup).
+        """
+        import jax
+        from repro.core.forest import build_forest
+        db_key = self._desc_of(db)
+        return self.get(
+            ("forest", key_seed, cfg, db_key),
+            lambda: (build_forest(jax.random.key(key_seed), db, cfg),
+                     cfg.resolved(db.shape[0])))
+
+    # ---- whole indexes (READ-ONLY sharing) -------------------------------
+    def index(self, backend, key_seed, db, forest_cfg=None, **spec_kw):
+        """A built ``repro.index`` Index for read-only searching."""
+        import jax
+        import numpy as np
+        from repro.index import IndexSpec, build_index
+        if forest_cfg is not None:
+            spec_kw["forest"] = forest_cfg
+        spec = IndexSpec(backend=backend, **spec_kw)
+        db_key = self._desc_of(db)
+        return self.get(
+            ("index", key_seed, spec, db_key),
+            lambda: build_index(jax.random.key(key_seed), np.asarray(db),
+                                spec))
+
+    def _desc_of(self, db):
+        """Reverse-map a cached corpus array to its descriptor key."""
+        for key, val in self._cache.items():
+            if val is db:
+                return key
+        raise KeyError(
+            "db is not a SharedBuilds corpus; build it via clustered_db()/"
+            "normal_db() so the cache key describes the data")
+
+
+@pytest.fixture(scope="session")
+def shared_builds():
+    return SharedBuilds()
+
+
+# ---------------------------------------------------------------------------
+# duration-balanced file sharding (the tier-1 CI matrix)
+# ---------------------------------------------------------------------------
+
+
+def pytest_addoption(parser):
+    group = parser.getgroup("shard", "duration-balanced test file sharding")
+    group.addoption("--splits", type=int, default=0,
+                    help="partition test files into this many groups")
+    group.addoption("--group", type=int, default=1,
+                    help="1-based group index of this run")
+    group.addoption("--durations-path", default=_DEFAULT_DURATIONS,
+                    help="per-file durations JSON read for balancing (the "
+                         "committed file: the partition must be a pure "
+                         "function of the checkout so every CI shard "
+                         "computes the same split)")
+    group.addoption("--store-durations", action="store_true",
+                    help="write measured per-file durations on session "
+                         "finish (to --store-durations-path)")
+    group.addoption("--store-durations-path", default="",
+                    help="write target for --store-durations; defaults to "
+                         "--durations-path (CI shards write per-group "
+                         "fragments instead to avoid racing the committed "
+                         "weights)")
+
+
+def _load_durations(path):
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        return {k: float(v) for k, v in data.items()}
+    except (OSError, ValueError):
+        return {}
+
+
+def _file_weight(rel_path, durations):
+    if rel_path in durations:
+        return durations[rel_path]
+    # deterministic fallback: bigger files tend to run longer; the exact
+    # scale is irrelevant (only the partition's balance depends on it)
+    try:
+        return os.path.getsize(os.path.join(
+            os.path.dirname(__file__), "..", rel_path)) / 4000.0
+    except OSError:
+        return 1.0
+
+
+def _partition(files, weights, n_groups):
+    """Greedy longest-processing-time bin packing; deterministic."""
+    bins = [(0.0, i, []) for i in range(n_groups)]
+    for f in sorted(files, key=lambda f: (-weights[f], f)):
+        load, idx, members = min(bins)
+        members.append(f)
+        bins[idx] = (load + weights[f], idx, members)
+    return {f: idx + 1 for _, idx, members in bins for f in members}
+
+
+def _rel_file(item):
+    return item.location[0].replace(os.sep, "/")
+
+
+@pytest.hookimpl(trylast=True)
+def pytest_collection_modifyitems(config, items):
+    splits = config.getoption("--splits")
+    if splits <= 1:
+        return
+    group = config.getoption("--group")
+    if not 1 <= group <= splits:
+        raise pytest.UsageError(f"--group must be in 1..{splits}, "
+                                f"got {group}")
+    durations = _load_durations(config.getoption("--durations-path"))
+    files = sorted({_rel_file(it) for it in items})
+    weights = {f: _file_weight(f, durations) for f in files}
+    assignment = _partition(files, weights, splits)
+    keep, drop = [], []
+    for it in items:
+        (keep if assignment[_rel_file(it)] == group else drop).append(it)
+    if drop:
+        config.hook.pytest_deselected(items=drop)
+        items[:] = keep
+    load = sum(weights[f] for f, g in assignment.items() if g == group)
+    sys.stderr.write(f"[shard] group {group}/{splits}: {len(keep)} tests in "
+                     f"{sum(1 for g in assignment.values() if g == group)} "
+                     f"files (est {load:.0f}s)\n")
+
+
+def pytest_configure(config):
+    config._shard_file_durations = {}
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_protocol(item, nextitem):
+    import time
+    t0 = time.perf_counter()
+    yield
+    sink = item.config._shard_file_durations
+    f = _rel_file(item)
+    sink[f] = sink.get(f, 0.0) + (time.perf_counter() - t0)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    config = session.config
+    if not config.getoption("--store-durations", default=False):
+        return
+    path = config.getoption("--store-durations-path") \
+        or config.getoption("--durations-path")
+    merged = _load_durations(path)
+    merged.update({k: round(v, 2)
+                   for k, v in config._shard_file_durations.items()})
+    if not merged:
+        return
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(dict(sorted(merged.items())), f, indent=1)
+        f.write("\n")

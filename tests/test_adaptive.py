@@ -2,16 +2,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ForestConfig, build_forest, exact_knn, recall_at_k
+from repro.core import ForestConfig, exact_knn, recall_at_k
 from repro.core.adaptive import adaptive_query
-from repro.data.synthetic import clustered_gaussians
 
 
-def test_adaptive_early_exit_keeps_recall():
-    db = jnp.asarray(clustered_gaussians(4000, 32, n_clusters=16, seed=6))
+def test_adaptive_early_exit_keeps_recall(shared_builds):
+    db = shared_builds.clustered_db(4000, 32, n_clusters=16, seed=6)
     q = db[:64] + 0.005   # easy queries: should exit early
     cfg = ForestConfig(n_trees=40, capacity=12)
-    forest = build_forest(jax.random.key(0), db, cfg)
+    forest, _ = shared_builds.forest(0, cfg, db)
     d, ids, used = adaptive_query(forest, q, db, k=3, cfg=cfg, wave=8,
                                   tol=0.02)
     _, true_ids = exact_knn(q, db, k=3)
@@ -20,17 +19,16 @@ def test_adaptive_early_exit_keeps_recall():
     assert used < 40, "easy queries should not need the full forest"
 
 
-def test_adaptive_uses_more_trees_when_hard():
-    db = jnp.asarray(np.random.default_rng(1).normal(
-        size=(3000, 48)).astype(np.float32))   # unclustered = hard
+def test_adaptive_uses_more_trees_when_hard(shared_builds):
+    db = shared_builds.normal_db(3000, 48, seed=1)   # unclustered = hard
     q = jnp.asarray(np.random.default_rng(2).normal(
         size=(32, 48)).astype(np.float32))
     cfg = ForestConfig(n_trees=32, capacity=12)
-    forest = build_forest(jax.random.key(1), db, cfg)
+    forest, _ = shared_builds.forest(1, cfg, db)
     _, _, used_hard = adaptive_query(forest, q, db, k=3, cfg=cfg, wave=8,
                                      tol=0.001)
-    db_easy = jnp.asarray(clustered_gaussians(3000, 48, n_clusters=8, seed=3))
-    forest_e = build_forest(jax.random.key(1), db_easy, cfg)
+    db_easy = shared_builds.clustered_db(3000, 48, n_clusters=8, seed=3)
+    forest_e, _ = shared_builds.forest(1, cfg, db_easy)
     _, _, used_easy = adaptive_query(forest_e, db_easy[:32], db_easy, k=3,
                                      cfg=cfg, wave=8, tol=0.001)
     assert used_hard >= used_easy

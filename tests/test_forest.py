@@ -14,14 +14,14 @@ N, D = 4000, 32
 
 
 @pytest.fixture(scope="module")
-def db():
-    return jnp.asarray(clustered_gaussians(N, D, n_clusters=16, seed=0))
+def db(shared_builds):
+    return shared_builds.clustered_db(N, D, n_clusters=16, seed=0)
 
 
 @pytest.fixture(scope="module")
-def forest(db):
+def forest(shared_builds, db):
     cfg = ForestConfig(n_trees=8, capacity=12, split_ratio=0.3)
-    return build_forest(jax.random.key(0), db, cfg), cfg.resolved(N)
+    return shared_builds.forest(0, cfg, db)
 
 
 def test_partition_complete(forest):
@@ -112,15 +112,17 @@ def test_query_recall(forest, db):
                                atol=5e-5)
 
 
-def test_recall_improves_with_trees(db):
+def test_recall_improves_with_trees(shared_builds, db):
+    # one 16-tree build; smaller forests are prefixes (trees independent)
+    full_cfg = ForestConfig(n_trees=16, capacity=12, split_ratio=0.3)
+    full, _ = shared_builds.forest(1, full_cfg, db)
+    q = db[200:328] + 0.02 * jax.random.normal(jax.random.key(2), (128, D))
+    _, tids = exact_knn(q, db, k=1)
     recalls = []
     for l in [1, 4, 16]:
-        cfg = ForestConfig(n_trees=l, capacity=12, split_ratio=0.3)
-        f = build_forest(jax.random.key(1), db, cfg)
-        q = db[200:328] + 0.02 * jax.random.normal(jax.random.key(2),
-                                                   (128, D))
+        f = jax.tree.map(lambda a: a[:l], full)
+        cfg = full_cfg._replace(n_trees=l)
         _, ids = query_forest(f, q, db, k=1, cfg=cfg)
-        _, tids = exact_knn(q, db, k=1)
         recalls.append(float(recall_at_k(ids, tids)))
     assert recalls[0] <= recalls[1] <= recalls[2] + 0.02
     assert recalls[2] > recalls[0]

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ForestConfig, build_forest
+from repro.core import ForestConfig
 from repro.core.pipeline import fused_query, rerank_fused, staged_query
 from repro.core.search import rerank_topk
 from repro.kernels import ops, ref
@@ -26,6 +26,14 @@ def _corpus(n, d, metric, seed=0):
     if metric == "chi2":
         x = np.abs(x)      # chi2 wants non-negative histogram features
     return jnp.asarray(x)
+
+
+def _shared_forest(shared_builds, n, d, metric, seed, key_seed, cfg):
+    """One cached (db, forest) per distinct (corpus, cfg, key) — the
+    parametrized parity tests below would otherwise rebuild it per case."""
+    db = shared_builds.normal_db(n, d, seed, nonneg=(metric == "chi2"))
+    forest, _ = shared_builds.forest(key_seed, cfg, db)
+    return db, forest
 
 
 def _assert_match(fused, staged):
@@ -47,11 +55,10 @@ def _assert_match(fused, staged):
 @pytest.mark.parametrize("metric", ["l2", "dot", "chi2", "cosine"])
 @pytest.mark.parametrize("dedup", [True, False])
 @pytest.mark.parametrize("mode", ["ref", "pallas"])
-def test_fused_matches_staged(metric, dedup, mode):
-    db = _corpus(1500, 24, metric, seed=1)
-    q = _corpus(13, 24, metric, seed=2)
+def test_fused_matches_staged(metric, dedup, mode, shared_builds):
     cfg = ForestConfig(n_trees=6, capacity=10)
-    forest = build_forest(jax.random.key(0), db, cfg)
+    db, forest = _shared_forest(shared_builds, 1500, 24, metric, 1, 0, cfg)
+    q = _corpus(13, 24, metric, seed=2)
     staged = staged_query(forest, q, db, 5, cfg, metric=metric, dedup=dedup)
     fused = fused_query(forest, q, db, 5, cfg, metric=metric, dedup=dedup,
                         mode=mode)
@@ -59,12 +66,11 @@ def test_fused_matches_staged(metric, dedup, mode):
 
 
 @pytest.mark.parametrize("mode", ["ref", "pallas"])
-def test_fused_chunked_matches_unchunked(mode):
+def test_fused_chunked_matches_unchunked(mode, shared_builds):
     """Result must be invariant to the candidate-chunk width."""
-    db = _corpus(1200, 16, "l2", seed=3)
-    q = _corpus(9, 16, "l2", seed=4)
     cfg = ForestConfig(n_trees=8, capacity=8)
-    forest = build_forest(jax.random.key(1), db, cfg)
+    db, forest = _shared_forest(shared_builds, 1200, 16, "l2", 3, 1, cfg)
+    q = _corpus(9, 16, "l2", seed=4)
     staged = staged_query(forest, q, db, 4, cfg)
     for chunk in (16, 24, 64):     # including non-divisors of M = 8*8
         fused = fused_query(forest, q, db, 4, cfg, mode=mode, chunk=chunk)
@@ -72,12 +78,11 @@ def test_fused_chunked_matches_unchunked(mode):
 
 
 @pytest.mark.parametrize("mode", ["ref", "pallas"])
-def test_fused_b1_edge(mode):
+def test_fused_b1_edge(mode, shared_builds):
     """B=1: the degenerate serving case (single online query)."""
-    db = _corpus(800, 12, "l2", seed=5)
-    q = _corpus(1, 12, "l2", seed=6)
     cfg = ForestConfig(n_trees=4, capacity=12)
-    forest = build_forest(jax.random.key(2), db, cfg)
+    db, forest = _shared_forest(shared_builds, 800, 12, "l2", 5, 2, cfg)
+    q = _corpus(1, 12, "l2", seed=6)
     staged = staged_query(forest, q, db, 3, cfg)
     fused = fused_query(forest, q, db, 3, cfg, mode=mode, chunk=8)
     _assert_match(fused, staged)
@@ -107,12 +112,11 @@ def test_rerank_fused_k_exceeds_chunk(mode):
     _assert_match(got, want)
 
 
-def test_fused_ragged_leaf_sizes():
+def test_fused_ragged_leaf_sizes(shared_builds):
     """Tiny capacity -> heavily ragged leaves -> many invalid padded slots."""
-    db = _corpus(400, 8, "l2", seed=7)
-    q = _corpus(6, 8, "l2", seed=8)
     cfg = ForestConfig(n_trees=5, capacity=4, split_ratio=0.45)
-    forest = build_forest(jax.random.key(3), db, cfg)
+    db, forest = _shared_forest(shared_builds, 400, 8, "l2", 7, 3, cfg)
+    q = _corpus(6, 8, "l2", seed=8)
     staged = staged_query(forest, q, db, 4, cfg)
     for mode in ("ref", "pallas"):
         _assert_match(fused_query(forest, q, db, 4, cfg, mode=mode), staged)

@@ -17,23 +17,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ForestConfig, build_forest, exact_knn, fused_query,
+from repro.core import (ForestConfig, exact_knn, fused_query,
                         gather_candidates, gather_candidates_multi,
                         recall_at_k, traverse, traverse_multiprobe)
 from repro.core.adaptive import adaptive_query
 from repro.core.search import rerank_topk
-from repro.data.synthetic import clustered_gaussians
 from repro.index import (IndexSpec, SearchParams, build_index, load_index,
                          tune, tune_report)
 from repro.kernels import ops
 
 N, D, L = 2000, 24, 8
 BACKENDS = ["rpf", "rpf+int8", "lsh-cascade", "bruteforce"]
+CFG = ForestConfig(n_trees=L, capacity=12)
 
 
 @pytest.fixture(scope="module")
-def db():
-    return jnp.asarray(clustered_gaussians(N, D, n_clusters=16, seed=0))
+def db(shared_builds):
+    return shared_builds.clustered_db(N, D, n_clusters=16, seed=0)
 
 
 @pytest.fixture(scope="module")
@@ -43,9 +43,16 @@ def queries(db):
 
 
 @pytest.fixture(scope="module")
-def forest(db):
-    cfg = ForestConfig(n_trees=L, capacity=12, split_ratio=0.3)
-    return build_forest(jax.random.key(0), db, cfg), cfg.resolved(N)
+def forest(shared_builds, db):
+    """The rpf index's forest, shared instead of rebuilt.
+
+    ``build_index(key(0), db, rpf/CFG)`` builds exactly
+    ``build_forest(key(0), db, CFG)`` inside its engine, so the traversal
+    tests reuse that build rather than duplicating it (the builds are
+    deterministic, and test_forest_batched.py pins the builder bitwise).
+    """
+    index = shared_builds.index("rpf", 0, db, forest_cfg=CFG)
+    return index.forest, CFG.resolved(N)
 
 
 # ---------------------------------------------------------------------------
@@ -160,14 +167,20 @@ def test_adaptive_composes_with_probes(forest, queries, db):
 
 
 def _build(backend, db):
+    """A FRESH index — for tests that mutate (delete / tune / save)."""
     return build_index(jax.random.key(0), np.asarray(db),
-                       IndexSpec(backend=backend,
-                                 forest=ForestConfig(n_trees=L, capacity=12)))
+                       IndexSpec(backend=backend, forest=CFG))
+
+
+def _shared(shared_builds, backend, db):
+    """The session-cached index — read-only searching only."""
+    return shared_builds.index(backend, 0, db, forest_cfg=CFG)
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_nprobes1_bitwise_on_every_backend(backend, db, queries):
-    index = _build(backend, db)
+def test_nprobes1_bitwise_on_every_backend(backend, shared_builds, db,
+                                           queries):
+    index = _shared(shared_builds, backend, db)
     d0, i0 = index.search(queries, SearchParams(k=10))
     d1, i1 = index.search(queries, SearchParams(k=10, n_probes=1))
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
@@ -175,9 +188,10 @@ def test_nprobes1_bitwise_on_every_backend(backend, db, queries):
 
 
 @pytest.mark.parametrize("backend", ["rpf", "rpf+int8"])
-def test_tree_prefix_matches_prefix_forest(backend, db, queries):
+def test_tree_prefix_matches_prefix_forest(backend, shared_builds, db,
+                                           queries):
     """search(n_trees=t) == querying a freshly-sliced prefix forest."""
-    index = _build(backend, db)
+    index = _shared(shared_builds, backend, db)
     t = L // 2
     d0, i0 = index.search(queries, SearchParams(k=5, n_trees=t))
     sub = jax.tree.map(lambda a: a[:t], index.forest)

@@ -38,6 +38,31 @@ def test_forest_invariants(n, d, c, r, seed):
 
 
 @settings(**SETTINGS)
+@given(n=st.integers(60, 300), d=st.integers(2, 20), c=st.integers(3, 16),
+       r=st.floats(0.1, 0.5), tied=st.booleans(), seed=st.integers(0, 2**30))
+def test_batched_builder_bitwise_invariant(n, d, c, r, tied, seed):
+    """For ANY data/config/seed: the batched cross-tree builder places
+    every point in the SAME leaf of the SAME tree as the legacy per-tree
+    builder — full Forest equality, which subsumes the leaf partition
+    (DESIGN.md §10; the deterministic matrix is test_forest_batched.py)."""
+    from repro.core.forest import _build_forest_legacy
+    rng = np.random.default_rng(seed)
+    if tied:   # heavily tied coordinates: tie-escape + redraw paths
+        x = rng.integers(0, 3, size=(n, d)).astype(np.float32)
+    else:
+        x = rng.normal(size=(n, d)).astype(np.float32)
+    x = jnp.asarray(x)
+    cfg = ForestConfig(n_trees=2, capacity=c, split_ratio=r)
+    key = jax.random.key(seed % 9973)
+    want = _build_forest_legacy(key, x, cfg.resolved(n))
+    got = build_forest(key, x, cfg)
+    for name in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, name)), np.asarray(getattr(want, name)),
+            err_msg=f"batched builder diverges on Forest.{name}")
+
+
+@settings(**SETTINGS)
 @given(n=st.integers(100, 300), seed=st.integers(0, 2**30))
 def test_traversal_deterministic_and_self_finding(n, seed):
     rng = np.random.default_rng(seed)

@@ -2,17 +2,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ForestConfig, build_forest, exact_knn, query_forest, \
-    recall_at_k
+from repro.core import ForestConfig, exact_knn, query_forest, recall_at_k
 from repro.core.quantized import quantize_db, query_forest_quantized
 from repro.data.synthetic import clustered_gaussians
 
 
-def test_quantized_recall_matches_fp32():
-    db = jnp.asarray(clustered_gaussians(4000, 32, n_clusters=16, seed=2))
+def test_quantized_recall_matches_fp32(shared_builds):
+    db = shared_builds.clustered_db(4000, 32, n_clusters=16, seed=2)
     q = db[:96] + 0.01
     cfg = ForestConfig(n_trees=16, capacity=12)
-    forest = build_forest(jax.random.key(0), db, cfg)
+    forest, _ = shared_builds.forest(0, cfg, db)
     qdb = quantize_db(db)
 
     d_fp, i_fp = query_forest(forest, q, db, k=5, cfg=cfg)

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Accumulate bench-smoke artifacts across CI runs + the regression gate.
+
+CI's bench-smoke job downloads the previous main-branch run's
+``bench-history`` artifact, then runs
+
+  python tools/bench_history.py --prev artifacts/prev/BENCH_HISTORY.json \
+      --out artifacts/BENCH_HISTORY.json
+
+which appends one point (read from the current run's
+``artifacts/BENCH_*.json``) to the history and FAILS (exit 1) when a
+gated metric regressed more than ``--max-regress`` (default 20%) against
+the BEST of the last 10 prior points (anchoring on the recent best keeps
+a slow sequence of sub-threshold regressions from ratcheting the
+baseline down).
+
+Gated metrics are chosen to be noise-robust on shared runners:
+  * ``build_time.speedup``            — batched/legacy build ratio, both
+    sides timed on the SAME machine, so runner speed cancels out;
+  * ``recall_frontier.trees_saved_ratio`` — a deterministic tree count
+    ratio, no wall-clock in it.
+``build_time.bitwise_equal`` must also hold (hard, not a ratio).
+
+Raw latencies (build seconds, churn p50/p99, fused speedup) ride along
+in each point for trajectory plots but are never gated here.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+# (history key, artifact file, fields copied into the point)
+SOURCES = [
+    ("build_time", "BENCH_build_time.json",
+     ["speedup", "fused_speedup", "bitwise_equal", "legacy_s", "batched_s",
+      "n", "n_trees"]),
+    ("recall_frontier", "BENCH_recall_frontier.json",
+     ["trees_saved_ratio", "single_probe_trees_at_target",
+      "multi_probe_trees_at_target", "frontier_ok"]),
+    ("fused_vs_staged", "BENCH_fused_vs_staged.json",
+     ["min_speedup", "all_ids_match"]),
+    ("mutation_churn", "BENCH_mutation_churn.json", []),
+]
+
+# metric path -> higher is better; regressions beyond --max-regress fail
+GATES = [("build_time", "speedup"), ("recall_frontier", "trees_saved_ratio")]
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def collect_point(artifacts_dir: str) -> dict:
+    point: dict = {
+        "commit": os.environ.get("GITHUB_SHA", ""),
+        "run_id": os.environ.get("GITHUB_RUN_ID", ""),
+    }
+    for key, fname, fields in SOURCES:
+        data = _load(os.path.join(artifacts_dir, fname))
+        if data is None:
+            continue
+        if fields:
+            point[key] = {f: data.get(f) for f in fields if f in data}
+        else:   # mutation churn: keep the flat row the benchmark reports
+            row = data.get("row", {})
+            point[key] = {f: row.get(f) for f in
+                          ("p50_steady_ms", "p99_steady_ms",
+                           "p50_during_compaction_ms")}
+    return point
+
+
+def check_gates(history: list[dict], point: dict, max_regress: float,
+                window: int = 10) -> list[str]:
+    """Gate the new point against the BEST of the last ``window`` points.
+
+    Comparing against only the previous point would let a sustained
+    sub-threshold regression ratchet the baseline down run after run
+    (4.0 -> 3.5 -> 3.1 -> ... each within 20%); anchoring on the recent
+    best means the cumulative drop is what gets measured.
+    """
+    errors = []
+    bt = point.get("build_time", {})
+    if bt and bt.get("bitwise_equal") is False:
+        errors.append("build_time.bitwise_equal is False: the batched "
+                      "builder diverged from the legacy oracle")
+    recent = history[-window:]
+    for section, metric in GATES:
+        new = point.get(section, {}).get(metric)
+        olds = [p.get(section, {}).get(metric) for p in recent]
+        olds = [o for o in olds if o]
+        if new is None or not olds:
+            continue
+        best = max(olds)
+        floor = best * (1.0 - max_regress)
+        if new < floor:
+            errors.append(
+                f"{section}.{metric} regressed: {new} < {floor:.3f} "
+                f"(best of last {len(olds)} point(s) {best}, allowed "
+                f"regression {max_regress:.0%})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", default="",
+                    help="previous BENCH_HISTORY.json (absent on the "
+                         "first run: history starts fresh)")
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_HISTORY.json"))
+    ap.add_argument("--artifacts", default=ART,
+                    help="directory holding this run's BENCH_*.json")
+    ap.add_argument("--max-regress", type=float, default=0.2)
+    ap.add_argument("--max-points", type=int, default=200,
+                    help="history ring size (oldest points dropped)")
+    args = ap.parse_args(argv)
+
+    history = (_load(args.prev) or {}).get("points", []) if args.prev else []
+    point = collect_point(args.artifacts)
+    errors = check_gates(history, point, args.max_regress) if history else []
+
+    history.append(point)
+    history = history[-args.max_points:]
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"points": history}, f, indent=1)
+
+    print(f"bench history: {len(history)} point(s) -> "
+          f"{os.path.relpath(args.out)}")
+    for key in ("build_time", "recall_frontier"):
+        if key in point:
+            print(f"  {key}: {point[key]}")
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
