@@ -12,8 +12,8 @@ import sys
 import time
 
 from benchmarks import (build_time, fig4_mnist, fig5_iss, fused_vs_staged,
-                        recall_frontier, retrieval_compare, roofline_table,
-                        speedup_table, tree_stats)
+                        million_row, recall_frontier, retrieval_compare,
+                        roofline_table, speedup_table, tree_stats)
 from benchmarks.common import csv_row, record
 
 
@@ -23,7 +23,7 @@ def main() -> None:
                    help="full N=60000/250736 runs (slow on CPU)")
     p.add_argument("--only", default="",
                    help="comma list: fig4,fig5,speedup,tree,retrieval,"
-                        "fused,frontier,build,roof")
+                        "fused,frontier,build,roof,million")
     args = p.parse_args()
     fast = not args.paper_scale
     only = set(args.only.split(",")) if args.only else None
@@ -99,6 +99,14 @@ def main() -> None:
             "forest_build", r["batched_s"] * 1e6,
             f"speedup={r['speedup']}x;fused={r['fused_speedup']}x"
             f";bitwise={r['bitwise_equal']}"))
+    if want("million"):
+        r = million_row.main(smoke=fast)
+        record(results, "million_row", r)
+        rows.append(csv_row(
+            "million_row", r["p50_ms"] * 1e3,
+            f"p99_ms={r['p99_ms']};bytes_ratio={r['bytes_ratio']}"
+            f";bitwise={r['bitwise_equal']}"
+            f";fallback_free={r['no_jnp_fallback']}"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

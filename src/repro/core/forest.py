@@ -711,6 +711,34 @@ def traverse_multiprobe(forest: Forest, queries: jax.Array, max_depth: int,
     return jax.vmap(one_tree)(forest)
 
 
+def traverse_forest(forest: Forest, queries: jax.Array, max_depth: int,
+                    n_probes: int = 1, mode: str = "auto") -> jax.Array:
+    """Mode-dispatched forest descent — the pipeline's traversal entry.
+
+    Routes through the Pallas traversal kernels when the mode policy says
+    so (kernels/ops.py: Pallas on TPU or forced) AND the forest uses K = 1
+    projections (the paper default, where ``proj_coef`` is identically 1.0
+    so the kernel's raw-coordinate compare is bitwise the jnp descent).
+    Tree size no longer matters: the HBM-resident kernel (DESIGN.md §11)
+    has no node cap, so ``mode="pallas"`` never leaves Pallas.  K > 1
+    forests and ref mode use the XLA traversal (:func:`traverse` /
+    :func:`traverse_multiprobe`) — on CPU ``"auto"`` resolves there, which
+    keeps the historical bitwise pin of the pre-kernel graph.
+
+    Returns (L, B) for ``n_probes == 1``, else (L, B, n_probes).
+    """
+    from repro.kernels import ops as _ops
+    use_pallas, interp = _ops._resolve(mode)
+    if use_pallas and forest.proj_idx.shape[-1] == 1:
+        from repro.kernels import forest_traverse_hbm as _hbm
+        return _hbm.forest_traverse_hbm(
+            forest.proj_idx[..., 0], forest.thresh, forest.child_base,
+            queries, max_depth, interpret=interp, n_probes=n_probes)
+    if n_probes == 1:
+        return traverse(forest, queries, max_depth)
+    return traverse_multiprobe(forest, queries, max_depth, n_probes)
+
+
 @functools.partial(jax.jit, static_argnames=("pad",))
 def gather_candidates_multi(forest: Forest, leaves: jax.Array, pad: int
                             ) -> tuple[jax.Array, jax.Array]:

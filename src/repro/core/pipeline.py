@@ -20,10 +20,16 @@ Chunk streaming serves two masters: it bounds the kernel's SMEM-resident id
 operand (B * chunk * 4 bytes) and, in ref mode, bounds the per-chunk gather
 to (B, chunk, d).  Chunks are merged with the associative top-k merge, so
 the result is invariant to chunking (ties broken toward earlier chunks,
-matching a single full-width top-k).
+matching a single full-width top-k).  Both rerank sources — fp32 rows and
+the int8 shortlist — derive their chunk width and batch-slab height from
+the SAME helpers (``pick_rerank_chunk`` / ``pick_rows_budget``), so the
+two paths cannot disagree on slab shape.
 
 The staged path stays available as ``staged_query`` — it is the oracle the
-fused path is tested against, never a dispatch target.
+fused path is tested against, never a dispatch target.  Likewise the int8
+coarse stage's jnp dequant-gather now lives only in
+``kernels.ref.fused_gather_topk_int8_ref`` (the oracle); production
+dispatches the fused int8 kernel (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -34,34 +40,100 @@ import jax.numpy as jnp
 
 from repro.core.forest import (Forest, ForestConfig, gather_candidates,
                                gather_candidates_multi, traverse,
-                               traverse_multiprobe)
+                               traverse_forest)
 from repro.core.quantized import QuantizedDB
 from repro.core.search import mask_duplicates, merge_topk_pairs, rerank_topk
 from repro.kernels import ops
 
-# The kernel keeps the (B, chunk) id matrix in SMEM; stay well under the
+# The kernels keep the (B, chunk) id matrix in SMEM; stay well under the
 # ~1 MB scalar-memory budget by default.
 SMEM_ID_BUDGET_BYTES = 512 * 1024
 
-# The int8 coarse stage gathers dequantized candidate blocks with plain jnp
-# (no Pallas kernel reads int8 rows yet); bound that per-chunk gather so the
-# (B, chunk, d) block stays HBM-cache-sized and the full (B, M, d) tensor
-# never exists on this path either.
+# Ref-mode (oracle) reranks gather a (B, chunk, d) block per chunk; bound it
+# so the full (B, M, d) tensor never exists on any path.
 GATHER_BUDGET_BYTES = 1 << 20
 
 
-def _pick_chunk(b: int, m: int, chunk: int, bm: int, k: int) -> int:
-    """Candidate-axis chunk width: explicit > SMEM-budget-derived.
+def pick_rerank_chunk(b: int, m: int, d: int, chunk: int, bm: int, k: int,
+                      mode: str) -> int:
+    """THE candidate-axis chunk policy — shared by the fp32 and the int8
+    rerank paths so they cannot disagree on slab shape (previously each
+    derived its own budget: SMEM-only vs gather-only, and the int8 path
+    ignored the SMEM bound entirely because it had no kernel).
 
-    Never below k (rounded up to a bm multiple): the per-chunk top-k needs
-    k columns to select from, matching the staged oracle for any k <= M.
+    Width = explicit ``chunk`` if given, else the tighter of
+      * the SMEM ids bound: B * chunk * 4 B (the kernels' scalar-prefetch
+        operand) — always applies;
+      * the gather bound: B * chunk * d * 4 B — applies when ``mode``
+        resolves to the jnp oracle, which materializes that block per chunk.
+    Never below k rounded up to a bm multiple: the per-chunk top-k needs k
+    columns to select from, matching the staged oracle for any k <= M.
     """
     floor = -(-k // bm) * bm
     if chunk > 0:
         return min(max(chunk, floor), m)
     by_budget = SMEM_ID_BUDGET_BYTES // (4 * max(b, 1))
+    use_pallas, _ = ops._resolve(mode)
+    if not use_pallas:
+        by_budget = min(by_budget,
+                        GATHER_BUDGET_BYTES // (4 * max(b, 1) * max(d, 1)))
     by_budget = max(bm, (by_budget // bm) * bm)
     return min(m, max(by_budget, floor))
+
+
+def pick_rows_budget(bq: int, bm: int) -> int:
+    """Batch-axis slab height: keeps the SMEM ids operand (rows * chunk *
+    4 B) within budget even at minimum chunk width, for any B.  Shared by
+    both rerank sources (the other half of the slab-shape contract)."""
+    return max(bq, SMEM_ID_BUDGET_BYTES // (4 * bm))
+
+
+def _stream_rerank(queries, ids, k, fold_chunk, *, d: int, chunk: int,
+                   bq: int, bm: int, rows_budget: int, mode: str):
+    """Chunk- and slab-stream ``fold_chunk`` over the candidate matrix.
+
+    ``fold_chunk(q_rows, id_rows) -> (dists, ids)`` scores one (rows, c)
+    id block (the fused kernel or its oracle); chunks merge through the
+    associative top-k, batch slabs ride ``lax.map``.  One streamer for both
+    rerank sources = one slab shape.
+    """
+    b, m = ids.shape
+
+    def stream(q_rows, id_rows):
+        rows = q_rows.shape[0]
+        c = pick_rerank_chunk(rows, m, d, chunk, bm, k, mode)
+        if c >= m:
+            return fold_chunk(q_rows, id_rows)
+        m_pad = -m % c
+        idp = jnp.pad(id_rows, ((0, 0), (0, m_pad)), constant_values=-1)
+        n_chunks = (m + m_pad) // c
+
+        def body(carry, blk):
+            acc_d, acc_i = carry
+            ids_blk = jax.lax.dynamic_slice_in_dim(idp, blk * c, c, axis=1)
+            dd, ii = fold_chunk(q_rows, ids_blk)
+            cat_d = jnp.concatenate([acc_d, dd], axis=1)
+            cat_i = jnp.concatenate([acc_i, ii], axis=1)
+            return merge_topk_pairs(cat_d, cat_i, k), None
+
+        init = (jnp.full((rows, k), jnp.inf, jnp.float32),
+                jnp.full((rows, k), -1, jnp.int32))
+        (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+        return best_d, jnp.where(jnp.isinf(best_d), -1, best_i)
+
+    if rows_budget <= 0:
+        rows_budget = pick_rows_budget(bq, bm)
+    if b <= rows_budget:
+        return stream(queries, ids)
+    b_pad = -b % rows_budget
+    qp = jnp.pad(queries, ((0, b_pad), (0, 0)))
+    idp = jnp.pad(ids, ((0, b_pad), (0, 0)), constant_values=-1)
+    n_slab = (b + b_pad) // rows_budget
+    dd, ii = jax.lax.map(
+        lambda s: stream(s[0], s[1]),
+        (qp.reshape(n_slab, rows_budget, -1),
+         idp.reshape(n_slab, rows_budget, m)))
+    return dd.reshape(-1, k)[:b], ii.reshape(-1, k)[:b]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "mode", "dedup",
@@ -89,64 +161,13 @@ def rerank_fused(queries: jax.Array, cand_ids: jax.Array, mask: jax.Array,
     if dedup:
         mask = mask_duplicates(cand_ids, mask)
     ids = jnp.where(mask, cand_ids, -1)
-    b, m = ids.shape
 
-    def stream(q_rows, id_rows):
-        """Chunk-streamed fused rerank over one slab of query rows."""
-        rows = q_rows.shape[0]
-        c = _pick_chunk(rows, m, chunk, bm, k)
-        if c >= m:
-            return ops.fused_rerank(q_rows, id_rows, db, k, metric=metric,
-                                    mode=mode, bq=bq, bm=bm)
-        m_pad = -m % c
-        idp = jnp.pad(id_rows, ((0, 0), (0, m_pad)), constant_values=-1)
-        n_chunks = (m + m_pad) // c
-
-        def body(carry, blk):
-            acc_d, acc_i = carry
-            ids_blk = jax.lax.dynamic_slice_in_dim(idp, blk * c, c, axis=1)
-            d, i = ops.fused_rerank(q_rows, ids_blk, db, k, metric=metric,
-                                    mode=mode, bq=bq, bm=bm)
-            cat_d = jnp.concatenate([acc_d, d], axis=1)
-            cat_i = jnp.concatenate([acc_i, i], axis=1)
-            return merge_topk_pairs(cat_d, cat_i, k), None
-
-        init = (jnp.full((rows, k), jnp.inf, jnp.float32),
-                jnp.full((rows, k), -1, jnp.int32))
-        (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
-        return best_d, jnp.where(jnp.isinf(best_d), -1, best_i)
-
-    # slab the batch axis so the kernel's SMEM ids operand (rows*chunk*4 B)
-    # respects the budget even at minimum chunk width for any B
-    if rows_budget <= 0:
-        rows_budget = max(bq, SMEM_ID_BUDGET_BYTES // (4 * bm))
-    if b <= rows_budget:
-        return stream(queries, ids)
-    b_pad = -b % rows_budget
-    qp = jnp.pad(queries, ((0, b_pad), (0, 0)))
-    idp = jnp.pad(ids, ((0, b_pad), (0, 0)), constant_values=-1)
-    n_slab = (b + b_pad) // rows_budget
-    d, i = jax.lax.map(
-        lambda s: stream(s[0], s[1]),
-        (qp.reshape(n_slab, rows_budget, -1),
-         idp.reshape(n_slab, rows_budget, m)))
-    return d.reshape(-1, k)[:b], i.reshape(-1, k)[:b]
-
-
-def _pick_gather_chunk(b: int, m: int, d: int, chunk: int, bm: int, k: int
-                       ) -> int:
-    """Coarse-stage chunk width: explicit > gather-budget-derived.
-
-    Bounds the dequantized (B, chunk, d) f32 block at GATHER_BUDGET_BYTES;
-    never below k rounded up to a bm multiple (the per-chunk top-k needs k
-    columns to select from).
-    """
-    floor = -(-k // bm) * bm
-    if chunk > 0:
-        return min(max(chunk, floor), m)
-    by_budget = GATHER_BUDGET_BYTES // (4 * max(b, 1) * max(d, 1))
-    by_budget = max(bm, (by_budget // bm) * bm)
-    return min(m, max(by_budget, floor))
+    return _stream_rerank(
+        queries, ids, k,
+        lambda q_rows, id_rows: ops.fused_rerank(
+            q_rows, id_rows, db, k, metric=metric, mode=mode, bq=bq, bm=bm),
+        d=queries.shape[1], chunk=chunk, bq=bq, bm=bm,
+        rows_budget=rows_budget, mode=mode)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "expand", "metric", "mode",
@@ -160,11 +181,17 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
                            ) -> tuple[jax.Array, jax.Array]:
     """int8-shortlist-then-fp32 rerank source for the fused pipeline.
 
-    Stage 1 streams candidate chunks over the int8 rows (4x fewer HBM bytes
-    than fp32) and keeps a running coarse top-k' (k' = expand*k, always L2 —
-    the quantization scheme is L2-calibrated).  Stage 2 reranks only the
-    (B, k') shortlist exactly against the fp32 rows through the fused
-    gather+distance+top-k kernel.  Neither stage materializes (B, M, d).
+    Stage 1 streams candidate chunks through the fused int8 kernel
+    (``ops.fused_rerank_int8``): d + 4 bytes DMA'd per candidate — ~4x
+    fewer HBM bytes than fp32 rows — dequantized in VMEM registers, kept
+    as a running coarse top-k' (k' = expand*k, always L2 — the
+    quantization scheme is L2-calibrated).  The jnp dequant-gather this
+    stage used to run is now the ref-mode oracle only
+    (``kernels.ref.fused_gather_topk_int8_ref``).  Stage 2 reranks only
+    the (B, k') shortlist exactly against the fp32 rows through the fused
+    gather+distance+top-k kernel.  Neither stage materializes (B, M, d),
+    and both derive chunk/slab shape from the same shared helpers as the
+    fp32 path.
 
     ``valid`` (optional (N,) bool tombstone mask) is applied at the coarse
     stage, so dead rows never occupy shortlist slots.
@@ -177,40 +204,14 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
     if dedup:
         mask = mask_duplicates(cand_ids, mask)
     ids = jnp.where(mask, cand_ids, -1)
-    b, m = ids.shape
-    kp = min(expand * k, m)
+    kp = min(expand * k, ids.shape[1])
 
-    def coarse(ids_blk: jax.Array) -> jax.Array:
-        """Coarse L2 on dequantized int8 rows for one (B, c) id block."""
-        valid = ids_blk >= 0
-        safe = jnp.where(valid, ids_blk, 0)
-        deq = qdb.q[safe].astype(jnp.float32) * qdb.scale[safe][:, :, None]
-        d = jnp.sum((queries[:, None, :] - deq) ** 2, axis=-1)
-        return jnp.where(valid, d, jnp.inf)
-
-    c = _pick_gather_chunk(b, m, queries.shape[1], chunk, bm, kp)
-    if c >= m:
-        d = coarse(ids)
-        neg, pos = jax.lax.top_k(-d, kp)
-        short_d = -neg
-        short_i = jnp.take_along_axis(ids, pos, axis=1)
-    else:
-        m_pad = -m % c
-        idp = jnp.pad(ids, ((0, 0), (0, m_pad)), constant_values=-1)
-        n_chunks = (m + m_pad) // c
-
-        def body(carry, blk):
-            acc_d, acc_i = carry
-            ids_blk = jax.lax.dynamic_slice_in_dim(idp, blk * c, c, axis=1)
-            d = coarse(ids_blk)
-            cat_d = jnp.concatenate([acc_d, d], axis=1)
-            cat_i = jnp.concatenate([acc_i, ids_blk], axis=1)
-            return merge_topk_pairs(cat_d, cat_i, kp), None
-
-        init = (jnp.full((b, kp), jnp.inf, jnp.float32),
-                jnp.full((b, kp), -1, jnp.int32))
-        (short_d, short_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
-    short_i = jnp.where(jnp.isinf(short_d), -1, short_i)
+    short_d, short_i = _stream_rerank(
+        queries, ids, kp,
+        lambda q_rows, id_rows: ops.fused_rerank_int8(
+            q_rows, id_rows, qdb.q, qdb.scale, kp, mode=mode, bq=bq, bm=bm),
+        d=queries.shape[1], chunk=chunk, bq=bq, bm=bm, rows_budget=0,
+        mode=mode)
     # exact fp32 rerank of the shortlist only (already deduped)
     return rerank_fused(queries, short_i, short_i >= 0, qdb.fp, k,
                         metric=metric, mode=mode, dedup=False, chunk=chunk,
@@ -218,19 +219,23 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
 
 
 def _candidates(forest: Forest, queries: jax.Array, max_depth: int,
-                leaf_pad: int, n_probes: int
+                leaf_pad: int, n_probes: int, mode: str = "auto"
                 ) -> tuple[jax.Array, jax.Array]:
     """Traverse + candidate slice, single- or multi-probe.
 
-    ``n_probes == 1`` traces the exact pre-multi-probe graph
-    (:func:`traverse` + :func:`gather_candidates`), keeping the bitwise
-    guarantee trivially; wider probes fold into the candidate axis of the
-    same padded (B, M) id/mask contract, so nothing downstream changes.
+    Traversal dispatches through :func:`repro.core.forest.traverse_forest`:
+    the Pallas descent kernels when the mode policy says so (SMEM kernel
+    below the node cap, HBM-resident kernel above — both bitwise-identical
+    to the jnp descent for K = 1), the XLA traversal otherwise.  On CPU
+    ``"auto"`` resolves to the jnp path, so ``n_probes == 1`` still traces
+    the exact pre-multi-probe graph there (the historical bitwise pin);
+    wider probes fold into the candidate axis of the same padded (B, M)
+    id/mask contract, so nothing downstream changes.
     """
     if n_probes <= 1:
-        leaves = traverse(forest, queries, max_depth)
+        leaves = traverse_forest(forest, queries, max_depth, 1, mode)
         return gather_candidates(forest, leaves, leaf_pad)
-    leaves = traverse_multiprobe(forest, queries, max_depth, n_probes)
+    leaves = traverse_forest(forest, queries, max_depth, n_probes, mode)
     return gather_candidates_multi(forest, leaves, leaf_pad)
 
 
@@ -243,7 +248,7 @@ def _fused_query_jit(forest: Forest, queries: jax.Array, db: jax.Array,
                      n_probes: int, valid: jax.Array | None
                      ) -> tuple[jax.Array, jax.Array]:
     cand_ids, mask = _candidates(forest, queries, max_depth, leaf_pad,
-                                 n_probes)
+                                 n_probes, mode)
     return rerank_fused(queries, cand_ids, mask, db, k, metric=metric,
                         mode=mode, dedup=dedup, chunk=chunk, bq=bq, bm=bm,
                         valid=valid)
@@ -261,7 +266,7 @@ def _fused_query_quantized_jit(forest: Forest, queries: jax.Array,
                                valid: jax.Array | None
                                ) -> tuple[jax.Array, jax.Array]:
     cand_ids, mask = _candidates(forest, queries, max_depth, leaf_pad,
-                                 n_probes)
+                                 n_probes, mode)
     return rerank_fused_quantized(queries, cand_ids, mask, qdb, k,
                                   expand=expand, metric=metric, mode=mode,
                                   dedup=dedup, chunk=chunk, bq=bq, bm=bm,

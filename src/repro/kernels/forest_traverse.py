@@ -12,9 +12,12 @@ decision flipped — (n_probes - 1) extra fori_loops, no extra HBM traffic
 (the query tile is already resident).
 
 Tree arrays are passed as scalar-prefetch operands (SMEM-resident). This caps
-the supported tree size at the SMEM budget (~64k nodes of 12 B/node ~= 768 KB);
-larger trees use the XLA traversal in core.forest (the production default —
-traversal is <2% of query cost at paper-scale L*C, see EXPERIMENTS.md §Perf).
+the supported tree size at the SMEM budget (~64k nodes of 12 B/node ~= 768 KB,
+``SMEM_NODE_CAP``); above the cap ``ops.traverse_tree`` dispatches to the
+HBM-resident kernel (kernels/forest_traverse_hbm.py, DESIGN.md §11), which
+fetches node records per descent level with double-buffered DMA — so the
+Pallas path now covers every tree size.  Below the cap this kernel stays the
+fast path (the whole tree is on-chip: zero per-level DMA).
 
 Grid = (B/bq,); the depth loop is a fori_loop inside the kernel so the query
 tile is read once from HBM for the whole descent.
@@ -27,6 +30,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# Largest tree (allocated max_nodes) this kernel accepts: three 4-byte
+# arrays per node must fit the ~1 MB scalar memory with headroom for the
+# grid machinery.  kernels/ops.py dispatches to the HBM kernel above this.
+SMEM_NODE_CAP = 64 * 1024
 
 
 def _kernel(feat_ref, thresh_ref, child_ref, q_ref, out_ref, *,

@@ -1,0 +1,198 @@
+"""Pallas HBM-resident forest traversal: no SMEM node cap (DESIGN.md §11).
+
+The SMEM kernel (kernels/forest_traverse.py) passes the tree arrays as
+scalar-prefetch operands, which caps the tree at the scalar-memory budget
+(~64k nodes).  Paper-scale trees (1M rows at C=12 allocate ~1.1M nodes per
+tree) need the arrays to stay in HBM; this kernel fetches exactly the node
+records a descent touches.
+
+Dataflow per (tree, query-tile) grid step:
+  * ``feat``/``thresh``/``child_base`` are ``memory_space=ANY`` operands —
+    they never leave HBM; the query tile is the only fat VMEM block.
+  * The descent is level-synchronous over the tile: at level ``t`` the bq
+    per-row node records already sit in VMEM slot ``t % 2`` (three (2, bq)
+    scratch buffers, one per tree array).  The kernel compares level ``t``,
+    computes the per-row child, bounces the child ids VMEM -> SMEM (DMA;
+    the copy engine needs scalar indices and scalars live in SMEM), and
+    immediately starts the per-row record DMAs for level ``t + 1`` into
+    slot ``(t + 1) % 2``.  The multi-probe margin bookkeeping then runs
+    while those copies are in flight — fetch of level ``i + 1`` overlaps
+    compare of level ``i`` (double buffering), so the per-level DMA
+    latency hides behind compute instead of serializing the descent.
+  * Node traffic is 12 B per (row, level) — at paper scale that is <1% of
+    the candidate-row bytes the rerank stage moves (docs/TUNING.md).
+
+Multi-probe: identical register-resident margin tracking to the SMEM
+kernel — the primary descent records per-level margins, each alternate
+re-descends with the smallest-margin decision flipped (ties -> shallower
+depth).  Alternates re-fetch their node path from HBM (another
+``max_depth`` rounds of 12 B records), unlike the SMEM kernel whose whole
+tree is already resident — the price of removing the cap.
+
+Bitwise contract: the float compare chain (coordinate gather, ``xv >=
+thresh``, ``|xv - thresh|`` margins) is operation-for-operation the SMEM
+kernel's, so leaf ids match it (and ``ref.forest_traverse_multiprobe_ref``)
+bitwise at any tree size; tests/test_traverse_hbm.py pins this.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+
+
+def _kernel(feat_hbm, thresh_hbm, child_hbm, q_ref, out_ref,
+            rec_f, rec_t, rec_c, nxt_v, nxt_s, sem_rec, sem_nxt, *,
+            max_depth: int, n_probes: int, bq: int):
+    l = pl.program_id(0)
+    q = q_ref[...]                                   # (bq, d)
+
+    def _record_copies(slot, b):
+        """The three 4-byte record DMAs for row ``b`` into ``slot``."""
+        rid = nxt_s[b]
+        return (
+            pltpu.make_async_copy(feat_hbm.at[l, pl.ds(rid, 1)],
+                                  rec_f.at[slot, pl.ds(b, 1)], sem_rec),
+            pltpu.make_async_copy(thresh_hbm.at[l, pl.ds(rid, 1)],
+                                  rec_t.at[slot, pl.ds(b, 1)], sem_rec),
+            pltpu.make_async_copy(child_hbm.at[l, pl.ds(rid, 1)],
+                                  rec_c.at[slot, pl.ds(b, 1)], sem_rec),
+        )
+
+    def start_fetch(slot):
+        def body(b, _):
+            for cp in _record_copies(slot, b):
+                cp.start()
+            return 0
+        jax.lax.fori_loop(0, bq, body, 0)
+
+    def wait_fetch(slot):
+        def body(b, _):
+            for cp in _record_copies(slot, b):
+                cp.wait()
+            return 0
+        jax.lax.fori_loop(0, bq, body, 0)
+
+    def hand_to_dma(node_vec):
+        """Bounce per-row node ids into SMEM so DMA can index with them."""
+        nxt_v[0, :] = node_vec
+        cp = pltpu.make_async_copy(nxt_v.at[0], nxt_s, sem_nxt)
+        cp.start()
+        cp.wait()
+
+    depth_col = jax.lax.broadcasted_iota(jnp.int32, (bq, max_depth), 1)
+    node0 = jnp.zeros((bq,), jnp.int32)
+
+    def descend(flip):
+        """Full double-buffered descent; ``flip`` (bq,) is the depth whose
+        routing decision is inverted (-1: none — the primary descent)."""
+        hand_to_dma(node0)                 # level 0: every row at the root
+        start_fetch(0)
+
+        def step(t, carry):
+            node, margins = carry
+            slot = jax.lax.rem(t, 2)
+            wait_fetch(slot)
+            f = rec_f[slot]                              # (bq,) int32
+            th = rec_t[slot]                             # (bq,) f32
+            cb = rec_c[slot]                             # (bq,) int32
+            xv = jnp.take_along_axis(q, f[:, None], axis=1)[:, 0]
+            go_right = xv >= th
+            go_right = jnp.where(t == flip, ~go_right, go_right)
+            internal = cb >= 0
+            nxt = jnp.where(internal, cb + go_right.astype(jnp.int32), node)
+            # issue level t+1 fetches first; the margin bookkeeping below
+            # executes while they fly (the double-buffer overlap)
+            hand_to_dma(nxt)
+            start_fetch(1 - slot)
+            margin = jnp.where(internal, jnp.abs(xv - th), jnp.inf)
+            margins = jnp.where(depth_col == t, margin[:, None], margins)
+            return nxt, margins
+
+        margins0 = jnp.full((bq, max_depth), jnp.inf, jnp.float32)
+        leaf, margins = jax.lax.fori_loop(0, max_depth, step,
+                                          (node0, margins0))
+        wait_fetch(jax.lax.rem(max_depth, 2))   # drain the trailing prefetch
+        return leaf, margins
+
+    leaf, margins = descend(jnp.full((bq,), -1, jnp.int32))
+    out_ref[0, :, 0] = leaf
+
+    # bounded best-first expansion, identical to the SMEM kernel: flip the
+    # smallest-margin decision per alternate (ties -> shallower depth)
+    for p in range(1, n_probes):
+        best = jnp.min(margins, axis=1)                              # (bq,)
+        is_best = margins == best[:, None]
+        first = jnp.min(jnp.where(is_best, depth_col, max_depth), axis=1)
+        margins = jnp.where(depth_col == first[:, None], jnp.inf, margins)
+        alt, _ = descend(first)
+        out_ref[0, :, p] = jnp.where(jnp.isfinite(best), alt, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth", "bq", "interpret",
+                                             "n_probes"))
+def forest_traverse_hbm(feat: jax.Array, thresh: jax.Array,
+                        child_base: jax.Array, queries: jax.Array,
+                        max_depth: int, bq: int = 256,
+                        interpret: bool = False, n_probes: int = 1
+                        ) -> jax.Array:
+    """Whole-forest descent with HBM-resident trees (no node-count cap).
+
+    feat/thresh/child_base (L, max_nodes), queries (B, d).  Returns leaf
+    ids (L, B) int32 for ``n_probes == 1``, else (L, B, n_probes) with -1
+    marking absent probes — the same ordering as the SMEM kernel and
+    ``core.forest.traverse_multiprobe``.  The tree axis rides the grid, so
+    one pallas_call serves the forest.
+    """
+    n_trees = feat.shape[0]
+    b, d = queries.shape
+    bq = min(bq, b)
+    b_pad = -b % bq
+    qp = jnp.pad(queries, ((0, b_pad), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, max_depth=max_depth, n_probes=n_probes,
+                          bq=bq),
+        grid=(n_trees, (b + b_pad) // bq),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),      # feat stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),      # thresh
+            pl.BlockSpec(memory_space=pltpu.ANY),      # child_base
+            pl.BlockSpec((bq, d), lambda t, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, n_probes), lambda t, i: (t, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_trees, b + b_pad, n_probes),
+                                       jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((2, bq), jnp.int32),    # rec_f: double-buffered feat
+            pltpu.VMEM((2, bq), jnp.float32),  # rec_t: thresh
+            pltpu.VMEM((2, bq), jnp.int32),    # rec_c: child_base
+            pltpu.VMEM((1, bq), jnp.int32),    # nxt_v: node-id bounce (VMEM)
+            pltpu.SMEM((bq,), jnp.int32),      # nxt_s: node ids for DMA
+            pltpu.SemaphoreType.DMA,           # record fetches
+            pltpu.SemaphoreType.DMA,           # VMEM->SMEM bounce
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(feat, thresh, child_base, qp)
+    out = out[:, :b]
+    return out[..., 0] if n_probes == 1 else out
+
+
+def forest_traverse_hbm_tree(feat: jax.Array, thresh: jax.Array,
+                             child_base: jax.Array, queries: jax.Array,
+                             max_depth: int, bq: int = 256,
+                             interpret: bool = False, n_probes: int = 1
+                             ) -> jax.Array:
+    """Single K=1 tree, matching ``forest_traverse``'s contract exactly:
+    (B,) leaf ids for ``n_probes == 1``, else (B, n_probes)."""
+    out = forest_traverse_hbm(feat[None], thresh[None], child_base[None],
+                              queries, max_depth, bq=bq, interpret=interpret,
+                              n_probes=n_probes)
+    return out[0]

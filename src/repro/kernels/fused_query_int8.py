@@ -1,0 +1,147 @@
+"""Fused int8-row gather + dequantize + coarse L2 + running top-k.
+
+The int8 shortlist stage of ``core.pipeline.rerank_fused_quantized`` used to
+dequantize candidate blocks with a plain jnp gather — the (B, chunk, d) f32
+block materialized in HBM, so the modeled 4x byte saving of int8 storage was
+never realized on the wire.  This kernel is ``kernels/fused_query.py`` with
+an int8 rerank source: candidate ids arrive as a scalar-prefetch operand
+(SMEM), the quantized rows (N, d) int8 and per-row scales (N,) f32 stay in
+HBM, and the kernel DMAs exactly the rows + scales a tile needs — d + 4
+bytes per candidate instead of 4d — dequantizing in VMEM registers
+(``rows * scale``) right before the distance math.  The dequantized tensor
+never exists anywhere; the shortlist's HBM traffic drops ~4x for real
+(gated at 1M rows by benchmarks/million_row.py).
+
+Contract (mirrored by ``kernels.ref.fused_gather_topk_int8_ref``):
+  q (B, d) f32, ids (B, M) int32 with -1 marking invalid slots,
+  q8 (N, d) int8, scale (N,) f32  ->  (dists (B, k) f32, ids (B, k) int32);
+  invalid slots: +inf / -1.  Metric is L2 only — the symmetric per-row
+  quantization is L2-calibrated (DESIGN.md §11); the exact metric of record
+  is applied by the fp32 rerank of the shortlist, not here.
+
+The -1-id masking vocabulary is identical to fused_query.py, so segment
+tombstones compose unchanged: a dead row's slot is -1 before the kernel,
+issues no DMA, scores +inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.kernels.common import POS_INF, merge_topk, select_topk_block
+
+
+def _kernel(ids_smem, q_ref, ids_ref, q8_ref, scale_ref, out_d_ref, out_i_ref,
+            rows, srow, sem, *, bq: int, bm: int, k: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, POS_INF)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    # ---- tile-by-tile HBM gather: int8 row + 4-byte scale per candidate ---
+    def _copies(t):
+        b, jj = t // bm, t % bm
+        rid = ids_smem[i * bq + b, j * bm + jj]
+        safe = jnp.maximum(rid, 0)
+        return rid, (
+            pltpu.make_async_copy(q8_ref.at[safe], rows.at[b, jj], sem),
+            pltpu.make_async_copy(scale_ref.at[pl.ds(safe, 1)],
+                                  srow.at[b, pl.ds(jj, 1)], sem),
+        )
+
+    def _start(t, _):
+        rid, cps = _copies(t)
+
+        @pl.when(rid >= 0)
+        def _():
+            for cp in cps:
+                cp.start()
+        return 0
+
+    def _wait(t, _):
+        rid, cps = _copies(t)
+
+        @pl.when(rid >= 0)
+        def _():
+            for cp in cps:
+                cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, bq * bm, _start, 0)
+    jax.lax.fori_loop(0, bq * bm, _wait, 0)
+
+    # ---- dequantize in registers and score (always L2) --------------------
+    q = q_ref[...].astype(jnp.float32)[:, None, :]          # (bq, 1, d)
+    deq = rows[...].astype(jnp.float32) * srow[...][:, :, None]
+    diff = q - deq
+    scores = jnp.sum(diff * diff, axis=-1)                  # (bq, bm)
+    ids_vec = ids_ref[...]
+    scores = jnp.where(ids_vec >= 0, scores, POS_INF)
+
+    # ---- fold into the running (bq, k) top-k ------------------------------
+    bd, bi = select_topk_block(scores, ids_vec, k)
+    md, mi = merge_topk(out_d_ref[...], out_i_ref[...], bd, bi, k)
+    out_d_ref[...] = md
+    out_i_ref[...] = mi
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bm", "interpret"))
+def fused_gather_topk_int8(q: jax.Array, ids: jax.Array, q8: jax.Array,
+                           scale: jax.Array, k: int, bq: int = 8,
+                           bm: int = 32, interpret: bool = False
+                           ) -> tuple[jax.Array, jax.Array]:
+    """q (B, d), ids (B, M) int32 (-1 = invalid), q8 (N, d) int8,
+    scale (N,) f32 -> coarse-L2 top-k (B, k).
+
+    Never materializes the gathered or dequantized (B, M, d) tensor: int8
+    rows + scales are DMA'd HBM -> VMEM tile-by-tile inside the kernel.
+    """
+    b, d = q.shape
+    m = ids.shape[1]
+    bq = min(bq, max(1, b))
+    bm = min(bm, m)
+    b_pad = -b % bq
+    m_pad = -m % bm
+    qp = jnp.pad(q, ((0, b_pad), (0, 0)))
+    idsp = jnp.pad(ids, ((0, b_pad), (0, m_pad)), constant_values=-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                     # ids -> SMEM
+        grid=((b + b_pad) // bq, (m + m_pad) // bm),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec((bq, bm), lambda i, j, *_: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # q8 stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # scale stays in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j, *_: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, bm, d), q8.dtype),     # int8 candidate tile
+            pltpu.VMEM((bq, bm), jnp.float32),     # per-row scales
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bm=bm, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b + b_pad, k), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(idsp, qp, idsp, q8, scale)
+    out_d, out_i = out_d[:b], out_i[:b]
+    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)

@@ -18,9 +18,12 @@ from repro.kernels import chi2_topk as _chi2
 from repro.kernels import distance_topk as _dist
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import forest_traverse as _trav
+from repro.kernels import forest_traverse_hbm as _trav_hbm
 from repro.kernels import fused_query as _fused
+from repro.kernels import fused_query_int8 as _fused_i8
 from repro.kernels import matmul_topk as _mm
 from repro.kernels import ref as _ref
+from repro.kernels.forest_traverse import SMEM_NODE_CAP
 
 Mode = Literal["auto", "pallas", "ref"]
 
@@ -75,6 +78,22 @@ def fused_rerank(q, ids, db, k: int, metric: str = "l2", mode: Mode = "auto",
     return _ref.fused_gather_topk_ref(q, ids, db, k, metric=metric)
 
 
+def fused_rerank_int8(q, ids, q8, scale, k: int, mode: Mode = "auto",
+                      bq: int = 8, bm: int = 32):
+    """Fused int8-row gather + dequantize + coarse-L2 top-k over one chunk.
+
+    ids (B, M) int32 with -1 marking invalid slots; q8 (N, d) int8 rows with
+    per-row f32 scales.  The Pallas kernel DMAs d + 4 bytes per candidate
+    (kernels/fused_query_int8.py); the ref branch is the retired jnp
+    dequant-gather, kept as the oracle.
+    """
+    use_pallas, interp = _resolve(mode)
+    if use_pallas:
+        return _fused_i8.fused_gather_topk_int8(q, ids, q8, scale, k, bq=bq,
+                                                bm=bm, interpret=interp)
+    return _ref.fused_gather_topk_int8_ref(q, ids, q8, scale, k)
+
+
 def embedding_bag(ids, weights, table, mode: Mode = "auto"):
     """Weighted multi-hot embedding-bag (B, H) x (V, D) -> (B, D)."""
     use_pallas, interp = _resolve(mode)
@@ -84,15 +103,29 @@ def embedding_bag(ids, weights, table, mode: Mode = "auto"):
 
 
 def traverse_tree(feat, thresh, child_base, queries, max_depth: int,
-                  mode: Mode = "auto", n_probes: int = 1):
+                  mode: Mode = "auto", n_probes: int = 1,
+                  kernel: str = "auto"):
     """Single-tree batched descent -> leaf ids.
 
     (B,) for ``n_probes == 1`` (the historical contract); (B, n_probes)
     multi-probe leaf ids (primary first, then ascending margin, -1 for
     absent probes) otherwise.
+
+    ``kernel`` selects the Pallas variant: "smem" keeps the tree arrays in
+    scalar memory (fast, capped at ``SMEM_NODE_CAP`` allocated nodes),
+    "hbm" streams node records from HBM with double-buffered DMA (no cap,
+    DESIGN.md §11); "auto" picks by tree size — so the Pallas path never
+    falls back to jnp on large trees.  Both variants are bitwise-identical
+    to each other and to the refs.
     """
     use_pallas, interp = _resolve(mode)
     if use_pallas:
+        if kernel == "auto":
+            kernel = "smem" if feat.shape[0] <= SMEM_NODE_CAP else "hbm"
+        if kernel == "hbm":
+            return _trav_hbm.forest_traverse_hbm_tree(
+                feat, thresh, child_base, queries, max_depth,
+                interpret=interp, n_probes=n_probes)
         return _trav.forest_traverse(feat, thresh, child_base, queries,
                                      max_depth, interpret=interp,
                                      n_probes=n_probes)

@@ -105,6 +105,28 @@ def fused_gather_topk_ref(q: jax.Array, ids: jax.Array, db: jax.Array, k: int,
     return d, jnp.where(jnp.isinf(d), -1, i)
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def fused_gather_topk_int8_ref(q: jax.Array, ids: jax.Array, q8: jax.Array,
+                               scale: jax.Array, k: int
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.fused_query_int8.fused_gather_topk_int8.
+
+    This is the retired jnp dequant-gather the int8 coarse stage used to run
+    in production (``core.pipeline`` pre-§11): an XLA gather materializes the
+    dequantized (B, M, d) f32 block for the chunk, scored with coarse L2.
+    The caller streams chunks, so M here is one chunk's width.
+    """
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    deq = q8[safe].astype(jnp.float32) * scale[safe][:, :, None]
+    d = jnp.sum((q.astype(jnp.float32)[:, None, :] - deq) ** 2, axis=-1)
+    d = jnp.where(valid, d, POS_INF)
+    neg_d, pos = jax.lax.top_k(-d, k)
+    out_d = -neg_d
+    out_i = jnp.take_along_axis(ids, pos, axis=-1)
+    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)
+
+
 @jax.jit
 def embedding_bag_ref(ids: jax.Array, weights: jax.Array, table: jax.Array
                       ) -> jax.Array:

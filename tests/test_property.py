@@ -104,6 +104,36 @@ def test_multiprobe_invariants(n, n_probes, seed):
             assert len(set(real.tolist())) == real.size
 
 
+@settings(max_examples=6, deadline=None)
+@given(delta=st.sampled_from([-512, -64, 64, 512]),
+       n=st.integers(80, 200), n_probes=st.sampled_from([1, 3]),
+       seed=st.integers(0, 2**30))
+def test_traversal_kernels_agree_across_smem_cap(delta, n, n_probes, seed):
+    """For tree allocations straddling the old 64k SMEM node cap: the
+    HBM-resident kernel, the SMEM kernel (legal in interpret mode at any
+    size) and the jnp ref produce bitwise-identical leaves — the cap is a
+    dispatch boundary, never a semantics boundary (DESIGN.md §11)."""
+    from repro.kernels.forest_traverse import SMEM_NODE_CAP, forest_traverse
+    from repro.kernels.forest_traverse_hbm import forest_traverse_hbm_tree
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    cfg = ForestConfig(n_trees=1, capacity=8,
+                       max_nodes=SMEM_NODE_CAP + delta)
+    rcfg = cfg.resolved(n)
+    f = build_forest(jax.random.key(seed % 1000), x, cfg)
+    q = x[:12]
+    args = (f.proj_idx[0, :, 0], f.thresh[0], f.child_base[0], q,
+            rcfg.max_depth)
+    hbm = forest_traverse_hbm_tree(*args, interpret=True, n_probes=n_probes)
+    smem = forest_traverse(*args, interpret=True, n_probes=n_probes)
+    if n_probes == 1:
+        want = ref.forest_traverse_ref(*args)
+    else:
+        want = ref.forest_traverse_multiprobe_ref(*args, n_probes)
+    np.testing.assert_array_equal(np.asarray(hbm), np.asarray(smem))
+    np.testing.assert_array_equal(np.asarray(hbm), np.asarray(want))
+
+
 @settings(**SETTINGS)
 @given(b=st.integers(1, 8), m=st.integers(2, 50), seed=st.integers(0, 2**30))
 def test_mask_duplicates_idempotent_and_correct(b, m, seed):

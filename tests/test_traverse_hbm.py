@@ -1,0 +1,156 @@
+"""HBM-resident traversal kernel parity (DESIGN.md §11).
+
+Three-way bitwise agreement at every tree size: the HBM kernel (node records
+double-buffer-DMA'd per descent level) must equal the SMEM kernel (whole
+tree scalar-prefetched; only legal below ``SMEM_NODE_CAP``) and the jnp
+refs, for single- and multi-probe descents.  Leaf ids are integers and the
+float compare chain is operation-identical across the three, so every
+comparison here is exact (== / array_equal), not toleranced.
+
+The cap-straddling hypothesis sweep lives in test_property.py; this file is
+the deterministic matrix.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ForestConfig, build_forest
+from repro.core.forest import traverse, traverse_forest, traverse_multiprobe
+from repro.kernels import ops, ref
+from repro.kernels.forest_traverse import SMEM_NODE_CAP, forest_traverse
+from repro.kernels.forest_traverse_hbm import (forest_traverse_hbm,
+                                               forest_traverse_hbm_tree)
+
+
+def _forest(n=700, d=20, n_trees=2, seed=0, **cfg_kw):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    cfg = ForestConfig(n_trees=n_trees, **cfg_kw)
+    f = build_forest(jax.random.key(seed), x, cfg)
+    return f, cfg.resolved(n), x
+
+
+# ---------------------------------------------------------------------------
+# kernel-level three-way parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_probes", [1, 2, 5])
+@pytest.mark.parametrize("b", [1, 33, 64])
+def test_hbm_matches_smem_and_ref(n_probes, b):
+    f, rcfg, x = _forest()
+    q = x[:b]
+    hbm = forest_traverse_hbm(f.proj_idx[:, :, 0], f.thresh, f.child_base,
+                              q, rcfg.max_depth, interpret=True,
+                              n_probes=n_probes)
+    for t in range(f.n_trees):
+        args = (f.proj_idx[t, :, 0], f.thresh[t], f.child_base[t], q,
+                rcfg.max_depth)
+        smem = forest_traverse(*args, interpret=True, n_probes=n_probes)
+        if n_probes == 1:
+            r = ref.forest_traverse_ref(*args)
+        else:
+            r = ref.forest_traverse_multiprobe_ref(*args, n_probes)
+        np.testing.assert_array_equal(np.asarray(hbm[t]), np.asarray(smem))
+        np.testing.assert_array_equal(np.asarray(hbm[t]), np.asarray(r))
+
+
+def test_hbm_probe0_is_single_probe():
+    """Probe 0 of the multi-probe output is bitwise the single descent."""
+    f, rcfg, x = _forest(seed=3)
+    q = x[:21]
+    single = forest_traverse_hbm(f.proj_idx[:, :, 0], f.thresh, f.child_base,
+                                 q, rcfg.max_depth, interpret=True)
+    multi = forest_traverse_hbm(f.proj_idx[:, :, 0], f.thresh, f.child_base,
+                                q, rcfg.max_depth, interpret=True, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(multi[:, :, 0]),
+                                  np.asarray(single))
+
+
+def test_hbm_above_cap_parity():
+    """A tree allocated past SMEM_NODE_CAP (dead padding nodes — the cap is
+    about array bytes, not reachable nodes) still matches the refs."""
+    f, rcfg, x = _forest(n=400, d=12, seed=5, max_nodes=SMEM_NODE_CAP + 512)
+    assert f.max_nodes > SMEM_NODE_CAP
+    q = x[:17]
+    hbm = forest_traverse_hbm(f.proj_idx[:, :, 0], f.thresh, f.child_base,
+                              q, rcfg.max_depth, interpret=True, n_probes=3)
+    for t in range(f.n_trees):
+        r = ref.forest_traverse_multiprobe_ref(
+            f.proj_idx[t, :, 0], f.thresh[t], f.child_base[t], q,
+            rcfg.max_depth, 3)
+        np.testing.assert_array_equal(np.asarray(hbm[t]), np.asarray(r))
+
+
+def test_single_tree_wrapper_contract():
+    f, rcfg, x = _forest(seed=7)
+    q = x[:9]
+    one = forest_traverse_hbm_tree(f.proj_idx[0, :, 0], f.thresh[0],
+                                   f.child_base[0], q, rcfg.max_depth,
+                                   interpret=True)
+    assert one.shape == (9,)
+    multi = forest_traverse_hbm_tree(f.proj_idx[0, :, 0], f.thresh[0],
+                                     f.child_base[0], q, rcfg.max_depth,
+                                     interpret=True, n_probes=3)
+    assert multi.shape == (9, 3)
+    np.testing.assert_array_equal(np.asarray(multi[:, 0]), np.asarray(one))
+
+
+# ---------------------------------------------------------------------------
+# dispatch: ops.traverse_tree kernel selection + forest-level routing
+# ---------------------------------------------------------------------------
+
+
+def test_ops_dispatch_picks_hbm_above_cap():
+    """mode="pallas" must serve any tree size: SMEM kernel below the cap,
+    HBM kernel above — and both agree with ref."""
+    small, rs, xs = _forest(n=300, d=10, seed=11)
+    big, rb, xb = _forest(n=300, d=10, seed=11,
+                          max_nodes=SMEM_NODE_CAP + 256)
+    assert small.max_nodes <= SMEM_NODE_CAP < big.max_nodes
+    for f, rcfg, x in ((small, rs, xs), (big, rb, xb)):
+        q = x[:13]
+        got = ops.traverse_tree(f.proj_idx[0, :, 0], f.thresh[0],
+                                f.child_base[0], q, rcfg.max_depth,
+                                mode="pallas")
+        want = ops.traverse_tree(f.proj_idx[0, :, 0], f.thresh[0],
+                                 f.child_base[0], q, rcfg.max_depth,
+                                 mode="ref")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_dispatch_forced_kernels_agree():
+    f, rcfg, x = _forest(seed=13)
+    q = x[:11]
+    args = (f.proj_idx[0, :, 0], f.thresh[0], f.child_base[0], q,
+            rcfg.max_depth)
+    for n_probes in (1, 3):
+        smem = ops.traverse_tree(*args, mode="pallas", n_probes=n_probes,
+                                 kernel="smem")
+        hbm = ops.traverse_tree(*args, mode="pallas", n_probes=n_probes,
+                                kernel="hbm")
+        np.testing.assert_array_equal(np.asarray(smem), np.asarray(hbm))
+
+
+@pytest.mark.parametrize("n_probes", [1, 3])
+def test_traverse_forest_pallas_matches_jnp(n_probes):
+    """The pipeline's traversal entry: Pallas routing is bitwise the XLA
+    descent (K=1 coefficients are identically 1.0)."""
+    f, rcfg, x = _forest(seed=17, n_trees=3)
+    q = x[:19]
+    got = traverse_forest(f, q, rcfg.max_depth, n_probes, mode="pallas")
+    if n_probes == 1:
+        want = traverse(f, q, rcfg.max_depth)
+    else:
+        want = traverse_multiprobe(f, q, rcfg.max_depth, n_probes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_traverse_forest_k2_falls_back():
+    """K > 1 forests (coefficients matter) must use the XLA traversal."""
+    f, rcfg, x = _forest(seed=19, n_proj=2)
+    q = x[:7]
+    got = traverse_forest(f, q, rcfg.max_depth, 1, mode="pallas")
+    want = traverse(f, q, rcfg.max_depth)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

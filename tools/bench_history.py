@@ -18,8 +18,12 @@ Gated metrics are chosen to be noise-robust on shared runners:
   * ``build_time.speedup``            — batched/legacy build ratio, both
     sides timed on the SAME machine, so runner speed cancels out;
   * ``recall_frontier.trees_saved_ratio`` — a deterministic tree count
-    ratio, no wall-clock in it.
-``build_time.bitwise_equal`` must also hold (hard, not a ratio).
+    ratio, no wall-clock in it;
+  * ``million_row.bytes_ratio`` — int8/fp32 candidate HBM bytes at 1M
+    rows, a LOWER-is-better counted ratio (gated both against history and
+    against the 0.30 absolute ceiling from DESIGN.md §11).
+``build_time.bitwise_equal`` and ``million_row.bitwise_equal`` (the HBM
+traversal + int8 kernel parity flags) must also hold (hard, not ratios).
 
 Raw latencies (build seconds, churn p50/p99, fused speedup) ride along
 in each point for trajectory plots but are never gated here.
@@ -44,10 +48,21 @@ SOURCES = [
     ("fused_vs_staged", "BENCH_fused_vs_staged.json",
      ["min_speedup", "all_ids_match"]),
     ("mutation_churn", "BENCH_mutation_churn.json", []),
+    ("million_row", "BENCH_million_row.json",
+     ["bytes_ratio", "bitwise_equal", "traversal_bitwise_equal",
+      "int8_kernel_ids_match", "no_jnp_fallback", "above_smem_cap",
+      "p50_ms", "p99_ms", "build_s", "n", "n_trees"]),
 ]
 
-# metric path -> higher is better; regressions beyond --max-regress fail
-GATES = [("build_time", "speedup"), ("recall_frontier", "trees_saved_ratio")]
+# (section, metric, direction); a move beyond --max-regress against the
+# recent best in the BAD direction fails ("higher" = bigger is better)
+GATES = [("build_time", "speedup", "higher"),
+         ("recall_frontier", "trees_saved_ratio", "higher"),
+         ("million_row", "bytes_ratio", "lower")]
+
+# million_row.bytes_ratio may never exceed this, history or not: the int8
+# shortlist must keep candidate traffic under 0.30x fp32 (DESIGN.md §11)
+BYTES_RATIO_CEILING = 0.30
 
 
 def _load(path: str) -> dict | None:
@@ -91,18 +106,40 @@ def check_gates(history: list[dict], point: dict, max_regress: float,
     if bt and bt.get("bitwise_equal") is False:
         errors.append("build_time.bitwise_equal is False: the batched "
                       "builder diverged from the legacy oracle")
+    mr = point.get("million_row", {})
+    if mr and mr.get("bitwise_equal") is False:
+        errors.append(
+            "million_row.bitwise_equal is False: a query kernel diverged "
+            f"(traversal={mr.get('traversal_bitwise_equal')}, "
+            f"int8={mr.get('int8_kernel_ids_match')}) — the HBM descent "
+            "must bitwise-match the refs (and the SMEM kernel below the "
+            "node cap), the int8 kernel its dequant-gather oracle")
+    ratio = mr.get("bytes_ratio")
+    if ratio is not None and ratio > BYTES_RATIO_CEILING:
+        errors.append(
+            f"million_row.bytes_ratio {ratio} exceeds the "
+            f"{BYTES_RATIO_CEILING} ceiling: int8 candidate bytes must "
+            "stay under 0.30x the fp32 path")
     recent = history[-window:]
-    for section, metric in GATES:
+    for section, metric, direction in GATES:
         new = point.get(section, {}).get(metric)
         olds = [p.get(section, {}).get(metric) for p in recent]
         olds = [o for o in olds if o]
         if new is None or not olds:
             continue
-        best = max(olds)
-        floor = best * (1.0 - max_regress)
-        if new < floor:
+        if direction == "higher":
+            best = max(olds)
+            floor = best * (1.0 - max_regress)
+            bad = new < floor
+            bound_desc = f"{new} < {floor:.3f}"
+        else:
+            best = min(olds)
+            ceil = best * (1.0 + max_regress)
+            bad = new > ceil
+            bound_desc = f"{new} > {ceil:.3f}"
+        if bad:
             errors.append(
-                f"{section}.{metric} regressed: {new} < {floor:.3f} "
+                f"{section}.{metric} regressed: {bound_desc} "
                 f"(best of last {len(olds)} point(s) {best}, allowed "
                 f"regression {max_regress:.0%})")
     return errors
@@ -123,7 +160,9 @@ def main(argv: list[str]) -> int:
 
     history = (_load(args.prev) or {}).get("points", []) if args.prev else []
     point = collect_point(args.artifacts)
-    errors = check_gates(history, point, args.max_regress) if history else []
+    # hard gates (parity flags, the bytes ceiling) apply from the very
+    # first point; the history-relative gates skip themselves when empty
+    errors = check_gates(history, point, args.max_regress)
 
     history.append(point)
     history = history[-args.max_points:]
@@ -133,7 +172,7 @@ def main(argv: list[str]) -> int:
 
     print(f"bench history: {len(history)} point(s) -> "
           f"{os.path.relpath(args.out)}")
-    for key in ("build_time", "recall_frontier"):
+    for key in ("build_time", "recall_frontier", "million_row"):
         if key in point:
             print(f"  {key}: {point[key]}")
     for e in errors:
