@@ -13,7 +13,8 @@ import time
 
 from benchmarks import (build_time, fig4_mnist, fig5_iss, fused_vs_staged,
                         million_row, recall_frontier, retrieval_compare,
-                        roofline_table, speedup_table, tree_stats)
+                        roofline_table, serving_slo, speedup_table,
+                        tree_stats)
 from benchmarks.common import csv_row, record
 
 
@@ -23,7 +24,7 @@ def main() -> None:
                    help="full N=60000/250736 runs (slow on CPU)")
     p.add_argument("--only", default="",
                    help="comma list: fig4,fig5,speedup,tree,retrieval,"
-                        "fused,frontier,build,roof,million")
+                        "fused,frontier,build,roof,million,serving")
     args = p.parse_args()
     fast = not args.paper_scale
     only = set(args.only.split(",")) if args.only else None
@@ -107,6 +108,15 @@ def main() -> None:
             f"p99_ms={r['p99_ms']};bytes_ratio={r['bytes_ratio']}"
             f";bitwise={r['bitwise_equal']}"
             f";fallback_free={r['no_jnp_fallback']}"))
+    if want("serving"):
+        r = serving_slo.main(smoke=fast)
+        record(results, "serving_slo", r)
+        rows.append(csv_row(
+            "serving_slo", r["p99_ms_at_rated_qps"] * 1e3,
+            f"rated_qps={r['rated_qps']}"
+            f";recall={r['recall_at_rated']:.3f}"
+            f";shed2x={r['overload']['shed_fraction']:.2f}"
+            f";slo_ok={r['slo_ok']};shed_nonzero={r['shed_nonzero']}"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

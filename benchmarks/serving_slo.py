@@ -1,0 +1,200 @@
+"""Serving SLO benchmark: does the planner's rated QPS hold up under fire?
+
+Closes the loop the serving runtime promises (DESIGN.md §12):
+
+  1. build + tune an index to a recall target,
+  2. calibrate the traffic model and ask the planner for the rated QPS at
+     a p99 SLO derived from the measured service time (so the gate is
+     runner-speed-relative, not an absolute ms that shared CI can't hold),
+  3. drive OPEN-LOOP Poisson traffic at the rated QPS — p99 must meet the
+     SLO and recall-vs-oracle must meet the tuned target,
+  4. drive 2x the rated QPS — past saturation by construction — and the
+     degradation ladder must keep p999 bounded (every request completes;
+     no unbounded queue growth) with a NONZERO shed fraction, measured
+     against a ladder-disabled control run at the same load.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.serving_slo [--smoke]
+
+Writes artifacts/BENCH_serving_slo.json (uploaded + gated by CI:
+``p99_ms_at_rated_qps`` is history-gated in tools/bench_history.py, the
+recall/SLO/shed flags are hard gates).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ForestConfig
+from repro.index import IndexSpec, build_index, tune
+from repro.serve import loadgen, planner
+from repro.serve.runtime import ServingRuntime
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_serving_slo.json")
+
+# rated = utilization * (1 - t/budget) * capacity; with budget >= 5*t the
+# factor is >= 0.56 > 0.5, so 2x rated ALWAYS exceeds the true saturation
+# rate — the overload leg is past the knee by construction, not by luck
+SLO_SERVICE_MULT = 5.0
+UTILIZATION = 0.7
+MAX_RATED_QPS = 2500.0   # host dispatcher ceiling: beyond this the Python
+#                          submit loop's sleep granularity, not the server,
+#                          dominates the open-loop schedule
+
+
+def run_slo(n_db: int, dim: int, n_trees: int, capacity: int,
+            target_recall: float, k: int, max_batch: int,
+            n_requests: int, seed: int = 0) -> dict:
+    from repro.data.synthetic import clustered_gaussians
+    from repro.core.knn import exact_knn
+
+    db = clustered_gaussians(n_db, dim, n_clusters=max(16, n_db // 256),
+                             seed=seed)
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=n_trees,
+                                         capacity=capacity))
+    t0 = time.perf_counter()
+    index = build_index(jax.random.key(seed), db, spec)
+    build_s = time.perf_counter() - t0
+    queries = db[np.random.default_rng(seed).integers(0, n_db, size=128)] \
+        + 0.003
+    tuned = tune(index, queries[:64], target_recall=target_recall, k=k,
+                 probe_grid=(1, 2, 4, 8))
+    gids, rows = index.live_points()
+    _, pos = exact_knn(queries, rows, k=k)
+    true_ids = np.asarray(gids)[np.asarray(pos)]
+
+    def make_runtime(degrade: bool, slo_ms: float | None):
+        # max_wait sized so batches actually FILL at the rated rate
+        # (~max_batch / rated arrivals); with partial batches the affine
+        # model overestimates capacity and the rated leg runs hot
+        return ServingRuntime(index, slo_p99_ms=slo_ms,
+                              max_batch=max_batch, max_wait_s=0.008,
+                              degrade=degrade)
+
+    # ---- calibrate + plan (SLO derived from the measured service time,
+    # so the whole gate scales with the runner instead of fighting it)
+    runtime = make_runtime(degrade=True, slo_ms=None)
+    model = runtime.calibrate(queries, batch_grid=(1, max_batch // 4,
+                                                   max_batch))
+    slo_p99_ms = (model.max_wait_s
+                  + SLO_SERVICE_MULT * model.service_s(max_batch)) * 1e3
+    rated = planner.rated_qps(model, slo_p99_ms, max_batch,
+                              utilization=UTILIZATION)
+    rated = min(rated, MAX_RATED_QPS)
+    if rated <= 0:
+        raise RuntimeError(f"planner found no in-SLO rate (model "
+                           f"c0={model.c0_s}, c1={model.c1_s})")
+    plan = planner.plan(model, qps=rated, slo_p99_ms=slo_p99_ms,
+                        batch_grid=(max_batch,), utilization=UTILIZATION,
+                        recall_target=target_recall)
+    runtime.stop()
+
+    # ---- leg 1: rated QPS, SLO + recall gate (fresh runtime so leg-1
+    # counters/rung state can't leak into leg 2)
+    runtime = make_runtime(degrade=True, slo_ms=slo_p99_ms)
+    at_rated = loadgen.run_open_loop(runtime, queries, rated,
+                                     n_requests=n_requests, seed=1,
+                                     true_ids=true_ids)
+    runtime.stop()
+
+    # ---- leg 2: 2x rated (past saturation), ladder on vs off
+    over_n = int(n_requests * 1.5)
+    runtime = make_runtime(degrade=True, slo_ms=slo_p99_ms)
+    overload = loadgen.run_open_loop(runtime, queries, 2 * rated,
+                                     n_requests=over_n, seed=2,
+                                     true_ids=true_ids)
+    shed_stats = runtime.stats()
+    runtime.stop()
+    control = make_runtime(degrade=False, slo_ms=slo_p99_ms)
+    overload_ctl = loadgen.run_open_loop(control, queries, 2 * rated,
+                                         n_requests=over_n, seed=2,
+                                         true_ids=true_ids)
+    control.stop()
+
+    return {
+        "n_db": n_db, "dim": dim, "n_trees": n_trees, "k": k,
+        "max_batch": max_batch, "build_s": round(build_s, 2),
+        "tuned_params": tuned.to_dict(),
+        "recall_target": target_recall,
+        "traffic_model": model.to_dict(),
+        "plan": plan.to_dict(),
+        "slo_p99_ms": round(slo_p99_ms, 3),
+        "rated_qps": round(rated, 1),
+        "at_rated": at_rated,
+        "overload": overload,
+        "overload_no_ladder": overload_ctl,
+        "ladder_rungs": len(ServingRuntime(index, warmup=False,
+                                           max_batch=max_batch).ladder),
+        "shed_steps": shed_stats["shed_steps"],
+        "recover_steps": shed_stats["recover_steps"],
+        # the gated headline metrics
+        "p99_ms_at_rated_qps": at_rated["p99_ms"],
+        "recall_at_rated": at_rated.get("recall_vs_oracle", 0.0),
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    print(f"[serving_slo] smoke={smoke}")
+    if smoke:
+        row = run_slo(n_db=20000, dim=64, n_trees=32, capacity=32,
+                      target_recall=0.9, k=10, max_batch=8,
+                      n_requests=1200)
+    else:
+        row = run_slo(n_db=60000, dim=128, n_trees=40, capacity=32,
+                      target_recall=0.95, k=10, max_batch=32,
+                      n_requests=4000)
+    slo = row["slo_p99_ms"]
+    rated, over = row["at_rated"], row["overload"]
+    ctl = row["overload_no_ladder"]
+    # gates — all runner-speed-relative:
+    #   * in-SLO + on-target recall at the planner's rated QPS,
+    #   * at 2x rated: every request answered (bounded queue), p999 within
+    #     10x SLO, nonzero shed, and the ladder not worse than no ladder
+    slo_ok = rated["p99_ms"] <= slo and rated["n_timeout"] == 0
+    recall_ok = row["recall_at_rated"] >= row["recall_target"] - 0.01
+    overload_bounded = (over["n_timeout"] == 0 and over["n_failed"] == 0
+                        and over["p999_ms"] <= 10.0 * slo)
+    shed_nonzero = over["shed_fraction"] > 0.0
+    ladder_no_worse = over["p999_ms"] <= max(ctl["p999_ms"] * 1.25,
+                                             over["p99_ms"] + slo)
+    tm = row["traffic_model"]
+    t_b_ms = (tm["c0_s"] + tm["c1_s"] * row["max_batch"]) * 1e3
+    print(f"  plan: rated {row['rated_qps']} qps @ p99<={slo:.1f}ms "
+          f"(t(B)={t_b_ms:.2f}ms, {row['ladder_rungs']} ladder rungs)")
+    print(f"  at rated:   p50={rated['p50_ms']:.1f} p99={rated['p99_ms']:.1f} "
+          f"p999={rated['p999_ms']:.1f}ms recall={row['recall_at_rated']:.3f} "
+          f"shed={rated['shed_fraction']:.1%} -> slo_ok={slo_ok} "
+          f"recall_ok={recall_ok}")
+    print(f"  at 2x:      p50={over['p50_ms']:.1f} p99={over['p99_ms']:.1f} "
+          f"p999={over['p999_ms']:.1f}ms shed={over['shed_fraction']:.1%} "
+          f"({row['shed_steps']} shed / {row['recover_steps']} recover "
+          f"steps) -> bounded={overload_bounded} shed_nonzero={shed_nonzero}")
+    print(f"  2x no-ladder control: p99={ctl['p99_ms']:.1f} "
+          f"p999={ctl['p999_ms']:.1f}ms -> ladder_no_worse={ladder_no_worse}")
+    out = {**row, "smoke": smoke, "backend": jax.default_backend(),
+           "slo_ok": slo_ok, "recall_ok": recall_ok,
+           "overload_bounded": overload_bounded,
+           "shed_nonzero": shed_nonzero,
+           "ladder_no_worse": ladder_no_worse}
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  -> {os.path.relpath(ARTIFACT)}")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-size corpus + short runs (tens of seconds)")
+    args = p.parse_args()
+    result = main(smoke=args.smoke)
+    from benchmarks.common import record
+    record({}, "serving_slo", result)

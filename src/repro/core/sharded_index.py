@@ -114,14 +114,13 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
     """
     chunk, n_probes = 0, 1
     if params is not None:
-        if params.adaptive_wave or params.min_candidates != 1 \
-                or params.n_trees:
+        violations = params.sharded_violations()
+        if violations:
             raise ValueError(
                 "sharded queries support only the per-cell knobs of "
                 "SearchParams (k/metric/dedup/mode/chunk/n_probes); got "
-                f"adaptive_wave={params.adaptive_wave}, "
-                f"min_candidates={params.min_candidates}, "
-                f"n_trees={params.n_trees}")
+                + ", ".join(violations)
+                + " — project the operating point with params.sharded()")
         k, metric = params.k, params.metric
         dedup, kernel_mode = params.dedup, params.mode
         chunk, n_probes = params.chunk, params.n_probes

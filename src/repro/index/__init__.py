@@ -35,10 +35,10 @@ from repro.index.api import (Index, available_backends, build_index,
                              get_backend, load_index, register_backend)
 from repro.index.params import IndexSpec, SearchParams
 from repro.index.segments import IndexView, SealedSegment
-from repro.index.tune import tune, tune_report
+from repro.index.tune import tune, tune_report, tune_sharded
 
 __all__ = [
     "Index", "IndexSpec", "IndexView", "SealedSegment", "SearchParams",
     "available_backends", "build_index", "get_backend", "load_index",
-    "register_backend", "tune", "tune_report",
+    "register_backend", "tune", "tune_report", "tune_sharded",
 ]

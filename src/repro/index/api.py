@@ -27,10 +27,15 @@ Lifecycle (DESIGN.md §8 — segmented, LSM-style):
     found by ``repro.index.tune`` (DESIGN.md §9); when set it becomes the
     default for ``search()`` calls that pass no params, and it rides the
     manifest so a loaded index remembers how it was tuned,
+  * ``index.shard_params`` / ``index.serving_plan`` — the serving-runtime
+    metadata (DESIGN.md §12): per-shard tuned operating points from
+    ``tune_sharded`` and the capacity planner's traffic model + fleet plan
+    (plain dict here — the index layer never imports the serve layer),
   * ``index.save(path)`` / ``load_index(path)`` — versioned multi-segment
-    manifest (format 3: format 2's segment state + the tuned operating
-    point) via the elastic checkpointer; format-2 and format-1 checkpoints
-    written by older code load through read shims.
+    manifest (format 4: format 3's segment state + tuned operating point,
+    plus the per-shard params and serving plan) via the elastic
+    checkpointer; format-3/2/1 checkpoints written by older code load
+    through read shims.
 
 Thread safety: mutations serialize on a per-index lock and publish a fresh
 immutable view; searches read the latest view with a single attribute load
@@ -153,6 +158,8 @@ class Index:
                       next_sid: int) -> None:
         """Shared tail of __init__ and the checkpoint loaders."""
         self._tuned_params: SearchParams | None = None
+        self._shard_params: tuple[SearchParams, ...] | None = None
+        self._serving_plan: dict | None = None
         self._segments = list(segments)
         self._delta = DeltaBuffer(self._d)
         self._next_gid = int(next_gid)
@@ -251,6 +258,42 @@ class Index:
             raise TypeError(f"tuned_params must be SearchParams or None, "
                             f"got {type(params).__name__}")
         self._tuned_params = params
+
+    @property
+    def shard_params(self) -> tuple[SearchParams, ...] | None:
+        """Per-shard tuned operating points (``tune_sharded``), or None.
+
+        One ``SearchParams`` per DB shard of the mesh partitioning the
+        tuning measured on; the serving runtime projects them onto the
+        sharded query path (``serve.runtime.uniform_shard_params`` for the
+        SPMD hot loop).  Persisted in the manifest (format 4).
+        """
+        return self._shard_params
+
+    @shard_params.setter
+    def shard_params(self, params) -> None:
+        if params is not None:
+            params = tuple(params)
+            if not params or not all(isinstance(p, SearchParams)
+                                     for p in params):
+                raise TypeError("shard_params must be a non-empty sequence "
+                                "of SearchParams, or None")
+        self._shard_params = params
+
+    @property
+    def serving_plan(self) -> dict | None:
+        """Capacity-planner output riding the manifest (format 4): a plain
+        ``{"plan": ..., "traffic_model": ...}`` dict (see
+        ``repro.serve.planner`` for the typed views — the index layer
+        stays below the serve layer and never imports it)."""
+        return self._serving_plan
+
+    @serving_plan.setter
+    def serving_plan(self, plan: dict | None) -> None:
+        if plan is not None and not isinstance(plan, dict):
+            raise TypeError(f"serving_plan must be a JSON-ready dict or "
+                            f"None, got {type(plan).__name__}")
+        self._serving_plan = plan
 
     def search(self, queries: np.ndarray, params: SearchParams | None = None,
                **params_kw) -> tuple[jax.Array, jax.Array]:
@@ -476,15 +519,18 @@ class Index:
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> str:
-        """Checkpoint the index under ``path`` (multi-segment manifest v3).
+        """Checkpoint the index under ``path`` (multi-segment manifest v4).
 
         Pending delta rows are sealed first (cheap — a per-delta engine
         build, NOT a full rebuild), then every segment's engine state,
         global-id column and tombstone bitmap land through the elastic
         checkpointer, along with the tuned operating point
-        (``tuned_params``) when one is set.  A save→load roundtrip is
-        bitwise: the restored index answers every query identically to
-        the saved one, with the same default params.
+        (``tuned_params``), the per-shard operating points
+        (``shard_params``) and the capacity plan (``serving_plan``) when
+        set.  A save→load roundtrip is bitwise: the restored index answers
+        every query identically to the saved one, with the same default
+        params — and a serving runtime stood up on it resolves the same
+        fleet plan.
         """
         with self._lock:
             self._seal_delta_locked()
@@ -503,7 +549,7 @@ class Index:
             return ckpt.save(0, tree,
                              extra={"spec": self.spec.to_dict(),
                                     "backend": self.backend,
-                                    "format": 3,
+                                    "format": 4,
                                     "dim": self._d,
                                     "segments": seg_meta,
                                     "next_gid": self._next_gid,
@@ -511,7 +557,13 @@ class Index:
                                     "tuned_params": (
                                         self._tuned_params.to_dict()
                                         if self._tuned_params is not None
-                                        else None)})
+                                        else None),
+                                    "shard_params": (
+                                        [p.to_dict()
+                                         for p in self._shard_params]
+                                        if self._shard_params is not None
+                                        else None),
+                                    "serving_plan": self._serving_plan})
 
     @classmethod
     def load(cls, path: str) -> "Index":
@@ -544,11 +596,12 @@ class Index:
 
     @classmethod
     def _load_v2(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
-        """Loader for segmented manifests (formats 2 and 3).
+        """Loader for segmented manifests (formats 2, 3 and 4).
 
-        Format 3 adds only the ``tuned_params`` extra on top of format 2's
-        segment state, so the format-2 read shim is this same path with
-        the tuned operating point absent (``tuned_params = None``).
+        Each format only ADDS optional extras on top of format 2's segment
+        state — format 3 the tuned operating point, format 4 the per-shard
+        params and serving plan — so the older-format read shims are this
+        same path with the newer extras absent (None).
         """
         extra = manifest["extra"]
         n_seg = len(extra["segments"])
@@ -576,6 +629,11 @@ class Index:
         tuned = extra.get("tuned_params")
         if tuned is not None:
             obj._tuned_params = SearchParams.from_dict(tuned)
+        shard = extra.get("shard_params")
+        if shard:
+            obj._shard_params = tuple(SearchParams.from_dict(p)
+                                      for p in shard)
+        obj._serving_plan = extra.get("serving_plan") or None
         return obj
 
     @classmethod

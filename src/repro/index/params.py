@@ -69,6 +69,39 @@ class SearchParams:
         if self.n_trees < 0:
             raise ValueError(f"n_trees must be >= 0, got {self.n_trees}")
 
+    def sharded_violations(self) -> list[str]:
+        """Knobs of this params that the sharded query path cannot honor.
+
+        ``core.sharded_index.make_query_fn`` serves only the per-cell knobs
+        (k/metric/dedup/mode/chunk/n_probes): adaptive waves and the lsh
+        cascade don't compose with the cell-local rerank + tiny top-k merge,
+        and trees are a build-time shard property, so a search-time
+        ``n_trees`` restriction is meaningless there.  ``make_query_fn``
+        REJECTS such params; this lists what it would reject (empty = the
+        params are sharded-legal), and :meth:`sharded` strips exactly the
+        same set — one definition, so accept and reject can never drift.
+        """
+        bad = []
+        if self.adaptive_wave:
+            bad.append(f"adaptive_wave={self.adaptive_wave}")
+        if self.min_candidates != 1:
+            bad.append(f"min_candidates={self.min_candidates}")
+        if self.n_trees:
+            bad.append(f"n_trees={self.n_trees}")
+        return bad
+
+    def sharded(self) -> "SearchParams":
+        """This operating point restricted to the sharded-legal knobs.
+
+        Neutralizes exactly the knobs :meth:`sharded_violations` names
+        (``adaptive_wave=0``, ``min_candidates=1``, ``n_trees=0``); the
+        result always passes ``make_query_fn``'s params check.  The serving
+        runtime uses this to project a host-tuned operating point onto the
+        mesh instead of crashing on it — and counts the downgrade.
+        """
+        return dataclasses.replace(self, adaptive_wave=0, min_candidates=1,
+                                   n_trees=0)
+
     def to_dict(self) -> dict[str, Any]:
         """JSON-ready dict (the manifest-v3 ``tuned_params`` payload)."""
         return dataclasses.asdict(self)

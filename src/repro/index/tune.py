@@ -35,13 +35,14 @@ from __future__ import annotations
 
 from typing import Iterable, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.knn import exact_knn
 from repro.index.params import SearchParams
 
-__all__ = ["tune", "tune_report"]
+__all__ = ["tune", "tune_report", "tune_sharded"]
 
 
 def _recall(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:
@@ -228,3 +229,132 @@ def tune(index, queries, target_recall: float = 0.95, k: int = 10,
                             adaptive_waves=adaptive_waves,
                             expand_grid=expand_grid, persist=persist)
     return params
+
+
+# ---------------------------------------------------------------------------
+# distributed tuning: measure on the mesh partitioning, not one host
+# ---------------------------------------------------------------------------
+
+
+def _shard_bounds(n: int, n_shards: int) -> list[tuple[int, int]]:
+    """Row ranges of each DB shard — the same contiguous even split
+    ``shard_map`` applies to a row-sharded array (last shard absorbs the
+    pad remainder when ``n`` doesn't divide; build paths pad instead)."""
+    n_local = n // n_shards
+    return [(s * n_local, (s + 1) * n_local if s < n_shards - 1 else n)
+            for s in range(n_shards)]
+
+
+def tune_sharded(index, queries, n_shards: int, target_recall: float = 0.95,
+                 k: int = 10, metric: str = "l2", mode: str = "auto",
+                 probe_grid: Iterable[int] = (1, 2, 4, 8),
+                 mesh=None, db_axes=("data",), tree_axis: str = "model",
+                 persist: bool = True
+                 ) -> tuple[list[SearchParams], list[dict]]:
+    """Per-shard tuned operating points, measured on the mesh partitioning.
+
+    Host ``tune()`` answers "what does THIS index need"; a sharded fleet
+    asks a different question — each DB shard owns a slice of the corpus
+    and contributes its local top-k to the global merge
+    (``core.sharded_index``), so the budget each shard needs depends on
+    *its* rows, not the global ones.  Global recall decomposes exactly over
+    the partition: a true neighbor is found iff the shard that OWNS it
+    surfaces it locally, so
+
+        recall = sum_s |found_s ∩ owned_s| / |true neighbors|
+
+    and per-shard tuning is well-posed: for shard ``s``, measure the
+    owned-neighbor recall of its local search over the sharded-legal grid
+    (``n_probes`` — see ``SearchParams.sharded_violations``) and keep the
+    cheapest point clearing ``target_recall``.  A shard holding easy,
+    well-clustered rows gets a small probe budget; a shard straddling
+    cluster boundaries pays more — exactly the heterogeneity a one-host
+    tune() cannot see.
+
+    ``mesh`` (optional) additionally validates the merged result end to
+    end: the per-shard points collapse to the uniform SPMD operating point
+    (max over shards — ``serve.runtime.uniform_shard_params``) and the
+    actual ``make_query_fn`` program must clear the target on the mesh;
+    the measured merged recall lands in the report's final row.
+
+    Returns ``(shard_params, report)``; ``persist=True`` stores the list
+    as ``index.shard_params`` (manifest format 4) and, when the index has
+    no host-tuned point yet, the uniform projection as ``tuned_params``.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    queries = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+    gids, rows = index.live_points()
+    if rows.shape[0] < n_shards:
+        raise ValueError(f"cannot split {rows.shape[0]} live rows into "
+                         f"{n_shards} shards")
+    k_oracle = min(k, rows.shape[0])
+    _, pos = exact_knn(queries, jnp.asarray(rows), k=k_oracle, metric=metric)
+    pos = np.asarray(pos)                       # oracle in ROW positions
+    n_true = pos.size
+
+    from repro.index.api import build_index      # deferred: avoids a cycle
+    bounds = _shard_bounds(rows.shape[0], n_shards)
+    grid = sorted({int(p) for p in probe_grid if p >= 1})
+    if not grid:
+        raise ValueError("tuner grid is empty — probe_grid prunes "
+                         "every sharded-legal combination")
+    shard_params: list[SearchParams] = []
+    report: list[dict] = []
+    for s, (lo, hi) in enumerate(bounds):
+        # the shard's own engine over ITS rows — same spec, shard-folded
+        # key (matching build_sharded_index's per-shard stream derivation)
+        sub = build_index(jax.random.fold_in(index.key, s), rows[lo:hi],
+                          index.spec)
+        owned = (pos >= lo) & (pos < hi)
+        n_owned = int(owned.sum())
+        chosen = None
+        for p in grid:
+            params = SearchParams(k=k, metric=metric, mode=mode,
+                                  n_probes=p)
+            _, ids = sub.search(queries, params)
+            ids = np.asarray(ids)
+            # local ids -> global row positions; owned-neighbor hit rate
+            found = (pos[..., None] - lo ==
+                     ids[:, None, :]).any(-1) & owned
+            rec_owned = (float(found.sum()) / n_owned if n_owned
+                         else 1.0)
+            row = {"shard": s, "params": params, "recall_owned": rec_owned,
+                   "n_owned": n_owned, "meets_target": rec_owned
+                   >= target_recall}
+            report.append(row)
+            if row["meets_target"]:
+                chosen = params
+                break
+            chosen = params                     # fallback: best-effort max
+        shard_params.append(chosen)
+
+    # contribution-weighted global recall implied by the per-shard picks
+    implied = sum(r["recall_owned"] * r["n_owned"] / max(1, n_true)
+                  for r in report
+                  if r["params"] is shard_params[r["shard"]])
+    report.append({"shard": -1, "params": None,
+                   "implied_global_recall": round(implied, 4)})
+
+    if mesh is not None:
+        from repro.core.sharded_index import (build_sharded_index,
+                                              make_query_fn)
+        from repro.serve.runtime import uniform_shard_params
+        uni = uniform_shard_params(shard_params)
+        sharded = build_sharded_index(index.key, jnp.asarray(rows),
+                                      index.spec.forest, mesh,
+                                      db_axes=db_axes, tree_axis=tree_axis)
+        qfn = make_query_fn(sharded.cfg, sharded.n_local, mesh, params=uni)
+        with mesh:
+            _, ids = qfn(sharded, queries, jnp.asarray(rows))
+        mesh_rec = _recall(np.asarray(ids), pos)
+        report.append({"shard": -1, "params": uni,
+                       "mesh_recall": round(mesh_rec, 4),
+                       "meets_target": mesh_rec >= target_recall})
+
+    if persist:
+        index.shard_params = tuple(shard_params)
+        if index.tuned_params is None:
+            from repro.serve.runtime import uniform_shard_params
+            index.tuned_params = uniform_shard_params(shard_params)
+    return shard_params, report

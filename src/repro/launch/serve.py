@@ -1,24 +1,41 @@
-"""End-to-end serving driver for the paper's system (the ANN index).
+"""Serving launcher: tuned index -> capacity plan -> open-loop SLO check.
 
+The end-to-end driver for the serving runtime (DESIGN.md §12):
+
+  # build + tune + plan + serve a load test at the plan's rated QPS
   PYTHONPATH=src python -m repro.launch.serve --dataset mnist784 \
-      --n-db 20000 --trees 40 --requests 500
+      --n-db 20000 --target-recall 0.9 --slo-p99-ms 25
 
-Builds the RPF index over the corpus, stands up the dynamic batcher, fires
-concurrent requests, reports recall@1 vs exact NN + latency/throughput.
+  # persist everything (manifest v4), then serve from the manifest later
+  PYTHONPATH=src python -m repro.launch.serve --n-db 20000 --save /ckpt/idx
+  PYTHONPATH=src python -m repro.launch.serve --load /ckpt/idx --qps 500
+
+A LOADED manifest's tuned operating point (and per-shard params / capacity
+plan, when present) is the serving default — the tune() -> serve loop the
+ROADMAP called out as broken.  ``--no-tuned`` is the escape hatch back to
+``SearchParams()`` defaults.  Traffic is open-loop Poisson
+(serve/loadgen.py), so the reported p50/p99/p999 are coordinated-omission
+free; ``--sweep`` walks a QPS ladder past saturation to locate the knee
+and exercise the overload-degradation ladder.
 """
 from __future__ import annotations
 
 import argparse
-import threading
 import time
 
-import jax.numpy as jnp
+import jax
 import numpy as np
 
 from repro.core.forest import ForestConfig
 from repro.core.knn import exact_knn
-from repro.index import IndexSpec, SearchParams
-from repro.serve.ann_serve import make_ann_server
+from repro.index import IndexSpec, SearchParams, build_index, load_index, tune
+from repro.serve import loadgen, planner
+from repro.serve.runtime import ServingRuntime
+
+
+def _fmt_params(p: SearchParams) -> str:
+    return (f"k={p.k} metric={p.metric} n_probes={p.n_probes} "
+            f"n_trees={p.n_trees or 'all'} adaptive_wave={p.adaptive_wave}")
 
 
 def main() -> None:
@@ -29,57 +46,141 @@ def main() -> None:
     p.add_argument("--n-queries", type=int, default=256)
     p.add_argument("--trees", type=int, default=40)
     p.add_argument("--capacity", type=int, default=12)
-    p.add_argument("--requests", type=int, default=256)
     p.add_argument("--k", type=int, default=5)
+    p.add_argument("--load", default="",
+                   help="serve an existing index manifest instead of "
+                        "building one (tuned params + plan apply)")
+    p.add_argument("--save", default="",
+                   help="persist the index (+ tuned params, traffic model, "
+                        "capacity plan) as a manifest v4 checkpoint")
+    p.add_argument("--no-tuned", action="store_true",
+                   help="ignore the manifest's tuned operating point and "
+                        "serve SearchParams() defaults")
+    p.add_argument("--target-recall", type=float, default=0.9,
+                   help="tune() target when building (skipped with --load)")
+    p.add_argument("--slo-p99-ms", type=float, default=25.0)
+    p.add_argument("--qps", type=float, default=0.0,
+                   help="offered load for the load test (0 = the planner's "
+                        "rated QPS)")
+    p.add_argument("--requests", type=int, default=1000)
+    p.add_argument("--max-batch", type=int, default=64)
+    p.add_argument("--sweep", default="",
+                   help="comma QPS list to sweep past saturation instead "
+                        "of the single-rate run (e.g. 250,500,1000,2000)")
+    p.add_argument("--no-degrade", action="store_true",
+                   help="disable the overload degradation ladder (serve "
+                        "rung 0 only — for A/B-ing the ladder)")
     args = p.parse_args()
 
     from repro.data.synthetic import iss_like, mnist_like
     if args.dataset == "mnist784":
-        db, _, queries, _ = mnist_like(n=args.n_db, n_test=args.n_queries)
+        _, _, queries, _ = mnist_like(n=2, n_test=args.n_queries)
         metric = "l2"
     else:
-        db, _, queries, _ = iss_like(n=args.n_db, n_test=args.n_queries)
+        _, _, queries, _ = iss_like(n=2, n_test=args.n_queries)
         metric = "chi2"
 
-    spec = IndexSpec(backend="rpf",
-                     forest=ForestConfig(n_trees=args.trees,
-                                         capacity=args.capacity,
-                                         split_ratio=0.3))
-    t0 = time.perf_counter()
-    index, batcher = make_ann_server(db, spec, k=args.k, metric=metric)
-    print(f"[serve] index built over {args.n_db} x {db.shape[1]} "
-          f"in {time.perf_counter()-t0:.1f}s; {index.stats()}")
+    # ----------------------------------------------------------- index
+    if args.load:
+        index = load_index(args.load)
+        print(f"[serve] loaded {args.load}: {index.stats()}")
+        print(f"[serve] manifest tuned_params: "
+              f"{_fmt_params(index.tuned_params) if index.tuned_params else None}"
+              + (f"; {len(index.shard_params)} per-shard points"
+                 if index.shard_params else ""))
+    else:
+        if args.dataset == "mnist784":
+            db, _, queries, _ = mnist_like(n=args.n_db,
+                                           n_test=args.n_queries)
+        else:
+            db, _, queries, _ = iss_like(n=args.n_db, n_test=args.n_queries)
+        spec = IndexSpec(backend="rpf",
+                         forest=ForestConfig(n_trees=args.trees,
+                                             capacity=args.capacity,
+                                             split_ratio=0.3))
+        t0 = time.perf_counter()
+        index = build_index(jax.random.key(spec.seed), db, spec)
+        print(f"[serve] built over {args.n_db} x {db.shape[1]} in "
+              f"{time.perf_counter() - t0:.1f}s; {index.stats()}")
+        t0 = time.perf_counter()
+        tuned = tune(index, queries[:64], target_recall=args.target_recall,
+                     k=args.k, metric=metric)
+        print(f"[serve] tuned to recall>={args.target_recall} in "
+              f"{time.perf_counter() - t0:.1f}s: {_fmt_params(tuned)}")
 
-    # fire concurrent requests through the batcher
-    results = [None] * args.requests
-    def fire(j):
-        results[j] = batcher(queries[j % len(queries)])
+    # ----------------------------------------------------------- runtime
+    runtime = ServingRuntime(index, use_tuned=not args.no_tuned,
+                             slo_p99_ms=args.slo_p99_ms,
+                             max_batch=args.max_batch,
+                             degrade=not args.no_degrade)
+    src = ("explicit-default" if args.no_tuned else
+           "per-shard tuned" if index.shard_params else
+           "tuned" if index.tuned_params is not None else "default")
+    print(f"[serve] operating point ({src}): {_fmt_params(runtime.params)}; "
+          f"ladder of {len(runtime.ladder)} rung(s), "
+          f"shed depth {runtime.shed_depth}")
 
-    t0 = time.perf_counter()
-    threads = [threading.Thread(target=fire, args=(j,))
-               for j in range(args.requests)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    dt = time.perf_counter() - t0
-    print(f"[serve] {args.requests} requests in {dt:.2f}s "
-          f"({args.requests/dt:.0f} qps); batcher stats {batcher.stats}")
+    # ------------------------------------------------------------- plan
+    model = ServingRuntime.manifest_traffic_model(index)
+    if model is None:
+        model = runtime.calibrate(np.asarray(queries[:32]))
+        print(f"[serve] calibrated: t(b) = {model.c0_s * 1e3:.2f}ms + "
+              f"{model.c1_s * 1e3:.4f}ms*b")
+    else:
+        print("[serve] traffic model from manifest")
+    rated = planner.rated_qps(model, args.slo_p99_ms, args.max_batch)
+    qps = args.qps or max(rated, 1.0)
+    plan = planner.plan(model, qps=qps, slo_p99_ms=args.slo_p99_ms,
+                        recall_target=args.target_recall)
+    print(f"[serve] plan for {qps:.0f} qps @ p99<={args.slo_p99_ms}ms: "
+          f"{plan.n_shards} shard(s) x {plan.n_replicas} replica(s), "
+          f"batch {plan.batch}, rated {plan.rated_qps_per_replica:.0f} "
+          f"qps/replica, predicted p99 {plan.predicted_p99_ms:.1f}ms")
 
-    # verify recall vs exact
-    qs = queries[:args.requests % len(queries) or args.requests]
-    got_ids = np.stack([results[j][1] for j in range(len(qs))])
-    _, true_ids = exact_knn(jnp.asarray(qs), jnp.asarray(db), k=1,
-                            metric=metric)
-    rec = float(np.mean(got_ids[:, :1] == np.asarray(true_ids)))
-    print(f"[serve] recall@1 = {rec:.3f}")
+    if args.save:
+        index.serving_plan = {"plan": plan.to_dict(),
+                              "traffic_model": model.to_dict()}
+        path = index.save(args.save)
+        print(f"[serve] manifest v4 -> {path}")
 
-    # the paper's incremental-update path (§5)
-    new_id = index.add(queries[0])
-    d, i = index.search(queries[0][None], SearchParams(k=1, metric=metric))
+    # ------------------------------------------------- open-loop traffic
+    gids, rows = index.live_points()
+    k_oracle = min(args.k, rows.shape[0])
+    _, pos = exact_knn(np.asarray(queries), rows, k=k_oracle, metric=metric)
+    true_ids = np.asarray(gids)[np.asarray(pos)]
+
+    if args.sweep:
+        rates = [float(x) for x in args.sweep.split(",")]
+        rows_out = loadgen.sweep(runtime, np.asarray(queries), rates,
+                                 n_requests=args.requests,
+                                 true_ids=true_ids)
+        for r in rows_out:
+            print(f"[sweep] offered {r['offered_qps']:>8.0f} qps -> "
+                  f"achieved {r['achieved_qps']:>8.0f}; p50 "
+                  f"{r['p50_ms']:.1f}ms p99 {r['p99_ms']:.1f}ms p999 "
+                  f"{r['p999_ms']:.1f}ms; shed {r['shed_fraction']:.1%}; "
+                  f"recall {r.get('recall_vs_oracle', float('nan')):.3f}")
+    else:
+        r = loadgen.run_open_loop(runtime, np.asarray(queries), qps,
+                                  n_requests=args.requests,
+                                  true_ids=true_ids)
+        ok = r["p99_ms"] <= args.slo_p99_ms
+        print(f"[serve] {r['n_ok']}/{r['n_requests']} ok at "
+              f"{r['achieved_qps']:.0f} qps; p50 {r['p50_ms']:.1f}ms "
+              f"p99 {r['p99_ms']:.1f}ms p999 {r['p999_ms']:.1f}ms "
+              f"[{'IN' if ok else 'OUT OF'} SLO]; shed "
+              f"{r['shed_fraction']:.1%}; recall "
+              f"{r.get('recall_vs_oracle', float('nan')):.3f}")
+    stats = {k: v for k, v in runtime.stats().items() if k != "batcher"}
+    print(f"[serve] runtime stats: {stats}")
+
+    # the paper's incremental-update path (§5) stays live under serving
+    new_id = index.add(np.asarray(queries[0]))
+    d, i = index.search(np.asarray(queries[0])[None],
+                        SearchParams(k=1, metric=metric))
     print(f"[serve] inserted id {new_id}; self-query -> id "
           f"{int(np.asarray(i)[0, 0])} dist {float(np.asarray(d)[0, 0]):.2e}")
-    batcher.stop()
+    runtime.stop()
 
 
 if __name__ == "__main__":

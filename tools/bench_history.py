@@ -52,13 +52,21 @@ SOURCES = [
      ["bytes_ratio", "bitwise_equal", "traversal_bitwise_equal",
       "int8_kernel_ids_match", "no_jnp_fallback", "above_smem_cap",
       "p50_ms", "p99_ms", "build_s", "n", "n_trees"]),
+    ("serving_slo", "BENCH_serving_slo.json",
+     ["p99_ms_at_rated_qps", "rated_qps", "slo_p99_ms", "recall_at_rated",
+      "recall_target", "slo_ok", "recall_ok", "overload_bounded",
+      "shed_nonzero", "ladder_no_worse", "shed_steps"]),
 ]
 
 # (section, metric, direction); a move beyond --max-regress against the
 # recent best in the BAD direction fails ("higher" = bigger is better)
 GATES = [("build_time", "speedup", "higher"),
          ("recall_frontier", "trees_saved_ratio", "higher"),
-         ("million_row", "bytes_ratio", "lower")]
+         ("million_row", "bytes_ratio", "lower"),
+         # serving p99 at the planner's RATED qps: the rate scales with the
+         # runner (derived from measured service time), so the p99 it must
+         # hold is runner-relative too — safe to history-gate
+         ("serving_slo", "p99_ms_at_rated_qps", "lower")]
 
 # million_row.bytes_ratio may never exceed this, history or not: the int8
 # shortlist must keep candidate traffic under 0.30x fp32 (DESIGN.md §11)
@@ -120,6 +128,23 @@ def check_gates(history: list[dict], point: dict, max_regress: float,
             f"million_row.bytes_ratio {ratio} exceeds the "
             f"{BYTES_RATIO_CEILING} ceiling: int8 candidate bytes must "
             "stay under 0.30x the fp32 path")
+    sv = point.get("serving_slo", {})
+    if sv:
+        # hard serving gates (DESIGN.md §12): at the planner's rated QPS
+        # the runtime must be in-SLO AND at the tuned recall target; at 2x
+        # rated the degradation ladder must keep the tail bounded while
+        # actually shedding (a zero shed fraction past saturation means
+        # the ladder never engaged)
+        for flag, why in (
+                ("slo_ok", "p99 at the planner's rated QPS blew the SLO"),
+                ("recall_ok", "recall at rated QPS fell below the tuned "
+                              "target"),
+                ("overload_bounded", "p999 at 2x rated was unbounded "
+                                     "(queue growth / timeouts)"),
+                ("shed_nonzero", "no shedding at 2x rated — the "
+                                 "degradation ladder never engaged")):
+            if sv.get(flag) is False:
+                errors.append(f"serving_slo.{flag} is False: {why}")
     recent = history[-window:]
     for section, metric, direction in GATES:
         new = point.get(section, {}).get(metric)
@@ -172,7 +197,8 @@ def main(argv: list[str]) -> int:
 
     print(f"bench history: {len(history)} point(s) -> "
           f"{os.path.relpath(args.out)}")
-    for key in ("build_time", "recall_frontier", "million_row"):
+    for key in ("build_time", "recall_frontier", "million_row",
+                "serving_slo"):
         if key in point:
             print(f"  {key}: {point[key]}")
     for e in errors:
