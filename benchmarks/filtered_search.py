@@ -1,0 +1,182 @@
+"""Filtered + multi-metric search benchmark (DESIGN.md §13).
+
+Measures recall-vs-filtered-oracle and per-query latency across the two
+grids the subsystem promises:
+
+  1. every backend x selectivity {0.5, 0.1, 0.01} under l2 — covers both
+     the selectivity-aware plans (widened index probe at broad filters,
+     exact matching-row scan below the brute-force thresholds), and
+  2. every metric (l2 / cosine / ip / chi2) x selectivity on the
+     rpf+int8 backend — the int8 coarse stage scoring under the metric
+     rides end to end.
+
+The oracle per cell is the exact brute force over the rows MATCHING the
+predicate (recall against the unfiltered oracle would reward returning
+non-matching rows).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.filtered_search [--smoke]
+
+Writes artifacts/BENCH_filtered_search.json (uploaded + gated by CI:
+``recall_001_ok`` — recall@10 >= 0.9 on ALL FOUR backends at selectivity
+0.01 — and ``recall_all_ok`` are hard gates in tools/bench_history.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core import ForestConfig
+from repro.core.distances import PAIRWISE, canonical_metric
+from repro.filter import Range
+from repro.filter.predicate import use_brute_force
+from repro.index import IndexSpec, SearchParams, build_index
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_filtered_search.json")
+
+SELECTIVITIES = (0.5, 0.1, 0.01)
+METRICS = ("l2", "cosine", "ip", "chi2")
+BACKENDS = ("bruteforce", "rpf", "rpf+int8", "lsh-cascade")
+RECALL_FLOOR_001 = 0.9     # the CI acceptance gate at selectivity 0.01
+RECALL_FLOOR_ALL = 0.85    # every cell, both grids
+
+
+def _corpus(n: int, d: int, n_q: int, seed: int):
+    """Non-negative, unit-norm clustered rows (all four metrics compose)
+    + a uniform int 'bucket' column giving exact selectivity slices."""
+    from repro.data.synthetic import clustered_gaussians
+    db = np.abs(clustered_gaussians(n, d, n_clusters=max(16, n // 1024),
+                                    seed=seed))
+    db /= np.linalg.norm(db, axis=1, keepdims=True)
+    rng = np.random.default_rng(seed + 1)
+    q = np.abs(db[rng.integers(0, n, n_q)]
+               + 0.003 * rng.normal(size=(n_q, d)).astype(np.float32))
+    meta = {"bucket": rng.integers(0, 1000, n).astype(np.int64)}
+    return db, q, meta
+
+
+def _predicate(selectivity: float):
+    return Range("bucket", 0, int(round(1000 * selectivity)) - 1)
+
+
+def _oracle_ids(q, db, mask, metric, k):
+    rows = db[mask]
+    gids = np.where(mask)[0]
+    d = np.asarray(PAIRWISE[canonical_metric(metric)](
+        jnp.asarray(q), jnp.asarray(rows)))
+    out = []
+    for row in d:
+        order = np.lexsort((gids, row))
+        out.append(set(gids[order[:k]].tolist()))
+    return out
+
+
+def _base_params(backend: str, k: int) -> SearchParams:
+    if backend in ("rpf", "rpf+int8"):
+        return SearchParams(k=k, n_probes=4)
+    if backend == "lsh-cascade":
+        return SearchParams(k=k, min_candidates=16 * k)
+    return SearchParams(k=k)
+
+
+def _cell(index, db, q, meta, backend: str, metric: str,
+          selectivity: float, k: int) -> dict:
+    import dataclasses
+    pred = _predicate(selectivity)
+    mask = (meta["bucket"] >= 0) & (meta["bucket"] <= pred.hi)
+    n_match = int(mask.sum())
+    params = dataclasses.replace(_base_params(backend, k), metric=metric,
+                                 filter=pred)
+    us, (_, ids) = timer(lambda: index.search(q, params), iters=3)
+    want = _oracle_ids(q, db, mask, metric, k)
+    ids = np.asarray(ids)
+    hit = np.mean([len(set(r[r >= 0].tolist()) & want[i]) / k
+                   for i, r in enumerate(ids)])
+    leaked = int(sum((~mask[r[r >= 0]]).sum() for r in ids))
+    return {
+        "backend": backend, "metric": metric, "selectivity": selectivity,
+        "n_match": n_match,
+        "plan": ("brute" if use_brute_force(n_match / len(db), n_match)
+                 else "widened"),
+        "recall": round(float(hit), 4),
+        "non_matching_returned": leaked,          # must be 0 by contract
+        "us_per_query": round(us * 1e6 / len(q), 1),
+    }
+
+
+def run_filtered(n_db: int, dim: int, n_q: int, k: int, n_trees: int,
+                 capacity: int, seed: int = 0) -> dict:
+    db, q, meta = _corpus(n_db, dim, n_q, seed)
+    spec_kw = dict(forest=ForestConfig(n_trees=n_trees, capacity=capacity),
+                   lsh_radii=(0.5, 1.0, 2.0), lsh_tables=8, lsh_bits=10,
+                   seed=seed)
+    rows = []
+    for backend in BACKENDS:
+        index = build_index(jax.random.key(seed), db,
+                            IndexSpec(backend=backend, **spec_kw),
+                            metadata=meta)
+        for s in SELECTIVITIES:
+            rows.append(_cell(index, db, q, meta, backend, "l2", s, k))
+            print("  " + ", ".join(f"{kk}={vv}"
+                                   for kk, vv in rows[-1].items()))
+        if backend == "rpf+int8":                 # grid 2 on the int8 path
+            for metric in METRICS:
+                if metric == "l2":
+                    continue                      # grid 1 covered it
+                for s in SELECTIVITIES:
+                    rows.append(_cell(index, db, q, meta, backend, metric,
+                                      s, k))
+                    print("  " + ", ".join(f"{kk}={vv}"
+                                           for kk, vv in rows[-1].items()))
+    return {"n_db": n_db, "dim": dim, "n_q": n_q, "k": k,
+            "n_trees": n_trees, "rows": rows}
+
+
+def main(smoke: bool = False) -> dict:
+    print(f"[filtered_search] smoke={smoke}")
+    if smoke:
+        result = run_filtered(n_db=20_000, dim=32, n_q=32, k=10,
+                              n_trees=16, capacity=32)
+    else:
+        result = run_filtered(n_db=60_000, dim=64, n_q=64, k=10,
+                              n_trees=32, capacity=32)
+    rows = result["rows"]
+    cells_001 = [r for r in rows if r["selectivity"] == 0.01]
+    recall_001_ok = (
+        {r["backend"] for r in cells_001 if r["metric"] == "l2"}
+        == set(BACKENDS)
+        and all(r["recall"] >= RECALL_FLOOR_001 for r in cells_001))
+    recall_all_ok = all(r["recall"] >= RECALL_FLOOR_ALL for r in rows)
+    no_leaks = all(r["non_matching_returned"] == 0 for r in rows)
+    worst = min(rows, key=lambda r: r["recall"])
+    print(f"  worst cell: {worst['backend']}/{worst['metric']}"
+          f"@s={worst['selectivity']} recall={worst['recall']}")
+    print(f"  recall_001_ok={recall_001_ok} recall_all_ok={recall_all_ok} "
+          f"no_leaks={no_leaks}")
+    out = {**result, "smoke": smoke, "backend_jax": jax.default_backend(),
+           "worst_recall": worst["recall"],
+           "recall_001_ok": recall_001_ok,
+           "recall_all_ok": recall_all_ok,
+           "no_leaks": no_leaks}
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  -> {os.path.relpath(ARTIFACT)}")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-size corpus (tens of seconds)")
+    args = p.parse_args()
+    result = main(smoke=args.smoke)
+    from benchmarks.common import record
+    record({}, "filtered_search", result)

@@ -11,10 +11,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (build_time, fig4_mnist, fig5_iss, fused_vs_staged,
-                        million_row, recall_frontier, retrieval_compare,
-                        roofline_table, serving_slo, speedup_table,
-                        tree_stats)
+from benchmarks import (build_time, fig4_mnist, fig5_iss, filtered_search,
+                        fused_vs_staged, million_row, recall_frontier,
+                        retrieval_compare, roofline_table, serving_slo,
+                        speedup_table, tree_stats)
 from benchmarks.common import csv_row, record
 
 
@@ -117,6 +117,17 @@ def main() -> None:
             f";recall={r['recall_at_rated']:.3f}"
             f";shed2x={r['overload']['shed_fraction']:.2f}"
             f";slo_ok={r['slo_ok']};shed_nonzero={r['shed_nonzero']}"))
+    if want("filtered"):
+        r = filtered_search.main(smoke=fast)
+        record(results, "filtered_search", r)
+        worst = min(r["rows"], key=lambda c: c["recall"])
+        rows.append(csv_row(
+            "filtered_search", worst["us_per_query"],
+            f"worst={worst['backend']}/{worst['metric']}"
+            f"@s={worst['selectivity']}"
+            f";recall={worst['recall']:.3f}"
+            f";gate001={r['recall_001_ok']};all={r['recall_all_ok']}"
+            f";no_leaks={r['no_leaks']}"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

@@ -5,7 +5,10 @@
 Train a SmolLM-family reduced config on a Markov corpus, memorize (hidden
 state -> next token) pairs into an RPF index via the unified index API
 (repro.index), then interpolate LM logits with the kNN distribution
-(Khandelwal et al. 2020 applied through Zhong's index).
+(Khandelwal et al. 2020 applied through Zhong's index).  Neighbor lookup
+runs under ``metric="cosine"`` (hidden-state direction, not magnitude,
+carries the signal) and the retrieval is recall-ASSERTED against the exact
+cosine brute force, so the example is a checked workload.
 """
 import jax
 import jax.numpy as jnp
@@ -64,7 +67,16 @@ def main():
     q /= np.linalg.norm(q, axis=1, keepdims=True) + 1e-9
 
     k = 8
-    d, ids = index.search(q, SearchParams(k=k))
+    d, ids = index.search(q, SearchParams(k=k, metric="cosine"))
+    # retrieval quality gate: the kNN distribution is only as good as the
+    # neighbor set, so assert recall vs the exact cosine oracle
+    from repro.core import exact_knn
+    _, bf_ids = exact_knn(jnp.asarray(q), jnp.asarray(keys), k=k,
+                          metric="cosine")
+    recall = float((np.asarray(ids)[:, :, None]
+                    == np.asarray(bf_ids)[:, None, :]).any(1).mean())
+    print(f"kNN recall@{k} vs exact cosine: {recall:.3f}")
+    assert recall >= 0.8, f"cosine kNN recall regressed: {recall:.3f} < 0.8"
     knn_next = vals[np.clip(np.asarray(ids), 0, len(vals) - 1)]   # (Q, k)
     w = np.exp(-np.asarray(d) * 10.0) * (np.asarray(ids) >= 0)
     knn_probs = np.zeros((q.shape[0], CFG.padded_vocab), np.float32)

@@ -146,15 +146,22 @@ class Checkpointer:
                 lambda a, s: jax.device_put(a, s), restored, shardings)
         else:
             restored = jax.tree.map(
-                lambda a, t: jax.device_put(a).astype(t.dtype),
+                lambda a, t: a if isinstance(a, np.ndarray)
+                else jax.device_put(a).astype(t.dtype),
                 restored, target_tree)
         return restored, step
 
 
 def jnp_dtype_cast(a: np.ndarray, dtype_str: Optional[str]):
     """Cast a stored array back to its original (possibly non-numpy-native)
-    dtype via jnp (bf16 was stored as lossless f32)."""
+    dtype via jnp (bf16 was stored as lossless f32).  64-bit integer
+    leaves (e.g. metadata timestamp columns) stay host-side numpy: without
+    x64, jnp would silently truncate them to 32 bits."""
     import jax.numpy as jnp
+    if (dtype_str is not None and np.dtype(dtype_str).kind in "iu"
+            and np.dtype(dtype_str).itemsize == 8
+            and not jax.config.jax_enable_x64):
+        return np.asarray(a, np.dtype(dtype_str))
     if dtype_str is None or str(a.dtype) == dtype_str:
         return jnp.asarray(a)
     return jnp.asarray(a).astype(jnp.dtype(dtype_str))

@@ -55,6 +55,30 @@ METRICS: dict[str, Callable[[jax.Array, jax.Array], jax.Array]] = {
     "cosine": cosine_dist,
 }
 
+# user-facing aliases -> the canonical kernel spelling.  "ip" is the public
+# inner-product name (SearchParams.metric accepts it); the kernels and refs
+# keep scoring under "dot", so every dispatch site canonicalizes first.
+METRIC_ALIASES: dict[str, str] = {
+    "ip": "dot",
+    "inner_product": "dot",
+    "euclidean": "l2",
+}
+
+
+def canonical_metric(name: str) -> str:
+    """Alias-resolve + validate a metric name (the one metric registry).
+
+    Every surface that takes a metric string — ``SearchParams``,
+    ``exact_knn``, the tuner — funnels through here, so "ip" and "dot"
+    are the same operating point everywhere and an unknown metric fails
+    loudly at the API boundary instead of as a kernel KeyError.
+    """
+    m = METRIC_ALIASES.get(name, name)
+    if m not in METRICS:
+        known = sorted(set(METRICS) | set(METRIC_ALIASES))
+        raise ValueError(f"unknown metric {name!r} (known: {known})")
+    return m
+
 # ---------------------------------------------------------------------------
 # pairwise (Q, d) x (N, d) -> (Q, N) forms
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ def exact_knn(queries: jax.Array, db: jax.Array, k: int, metric: str = "l2",
     """(B, d) x (N, d) -> exact top-k (dists, ids). Streams DB chunks."""
     b = queries.shape[0]
     n = db.shape[0]
-    pairwise = dist_mod.PAIRWISE[metric]
+    pairwise = dist_mod.PAIRWISE[dist_mod.canonical_metric(metric)]
     if not db_chunk or n <= db_chunk:
         d = pairwise(queries, db)
         neg, ids = jax.lax.top_k(-d, k)

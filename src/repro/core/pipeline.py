@@ -184,8 +184,10 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
     Stage 1 streams candidate chunks through the fused int8 kernel
     (``ops.fused_rerank_int8``): d + 4 bytes DMA'd per candidate — ~4x
     fewer HBM bytes than fp32 rows — dequantized in VMEM registers, kept
-    as a running coarse top-k' (k' = expand*k, always L2 — the
-    quantization scheme is L2-calibrated).  The jnp dequant-gather this
+    as a running coarse top-k' (k' = expand*k) scored under ``metric``,
+    so the shortlist ranks like the fp32 rerank of record (the
+    quantization scheme stays L2-calibrated — DESIGN.md §11/§13).  The
+    jnp dequant-gather this
     stage used to run is now the ref-mode oracle only
     (``kernels.ref.fused_gather_topk_int8_ref``).  Stage 2 reranks only
     the (B, k') shortlist exactly against the fp32 rows through the fused
@@ -209,7 +211,8 @@ def rerank_fused_quantized(queries: jax.Array, cand_ids: jax.Array,
     short_d, short_i = _stream_rerank(
         queries, ids, kp,
         lambda q_rows, id_rows: ops.fused_rerank_int8(
-            q_rows, id_rows, qdb.q, qdb.scale, kp, mode=mode, bq=bq, bm=bm),
+            q_rows, id_rows, qdb.q, qdb.scale, kp, metric=metric, mode=mode,
+            bq=bq, bm=bm),
         d=queries.shape[1], chunk=chunk, bq=bq, bm=bm, rows_budget=0,
         mode=mode)
     # exact fp32 rerank of the shortlist only (already deduped)

@@ -99,10 +99,12 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
     that many most-marginal leaves; the wider per-cell candidate set rides
     the same fused id/mask path and the same tiny (B, k) all-gather merge).
     Only the per-cell knobs apply here (k, metric, dedup, mode, chunk,
-    n_probes) — the sharded path has no int8/adaptive/lsh composition and
-    trees are a build-time shard property, so a params carrying
-    ``adaptive_wave``, ``min_candidates`` or a search-time ``n_trees``
-    restriction is rejected rather than silently ignored.
+    n_probes) — the sharded path has no int8/adaptive/lsh composition,
+    trees are a build-time shard property, and metadata filters need the
+    host-side bitmap compiler — so a params carrying ``adaptive_wave``,
+    ``min_candidates``, a search-time ``n_trees`` restriction or a
+    ``filter`` predicate is rejected rather than silently ignored
+    (``SearchParams.sharded_violations`` is the one list of what rejects).
 
     ``with_validity=True`` grows the step signature to
     ``(index, queries, db, live)`` where ``live`` is an (N,) bool row
@@ -118,8 +120,8 @@ def make_query_fn(index_cfg: ForestConfig, n_local: int, mesh: Mesh,
         if violations:
             raise ValueError(
                 "sharded queries support only the per-cell knobs of "
-                "SearchParams (k/metric/dedup/mode/chunk/n_probes); got "
-                + ", ".join(violations)
+                "SearchParams (k/metric/dedup/mode/chunk/n_probes, no "
+                "filter); got " + ", ".join(violations)
                 + " — project the operating point with params.sharded()")
         k, metric = params.k, params.metric
         dedup, kernel_mode = params.dedup, params.mode

@@ -1,0 +1,19 @@
+"""Filtered search: metadata columns + predicate ASTs on the validity path.
+
+    from repro.filter import Eq, In, Range, And, Or, Not
+
+    index = build_index(key, db, spec, metadata={"tenant": tenants,
+                                                 "ts": timestamps})
+    d, i = index.search(q, SearchParams(k=10, filter=And(
+        Eq("tenant", "acme"), Range("ts", lo=t0))))
+
+See DESIGN.md §13: predicates compile to per-segment bitmaps that ride the
+same fused-kernel mask path as tombstones — no kernel changes, every
+backend, with selectivity-aware candidate widening.
+"""
+from repro.filter.metadata import KINDS, MetaBlock, MetadataStore
+from repro.filter.predicate import (And, Eq, In, Not, Or, Predicate, Range,
+                                    from_dict, widen_params)
+
+__all__ = ["KINDS", "MetaBlock", "MetadataStore", "Predicate", "Eq", "In",
+           "Range", "And", "Or", "Not", "from_dict", "widen_params"]

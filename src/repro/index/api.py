@@ -32,10 +32,15 @@ Lifecycle (DESIGN.md §8 — segmented, LSM-style):
     ``tune_sharded`` and the capacity planner's traffic model + fleet plan
     (plain dict here — the index layer never imports the serve layer),
   * ``index.save(path)`` / ``load_index(path)`` — versioned multi-segment
-    manifest (format 4: format 3's segment state + tuned operating point,
-    plus the per-shard params and serving plan) via the elastic
-    checkpointer; format-3/2/1 checkpoints written by older code load
-    through read shims.
+    manifest (format 5: format 4's segment state + tuned/per-shard
+    operating points + serving plan, plus the per-row metadata columns
+    and their schema/vocab) via the elastic checkpointer; format-4/3/2/1
+    checkpoints written by older code load through read shims,
+  * ``build_index(..., metadata={col: values})`` — columnar per-row
+    attributes (int/categorical/timestamp) enabling
+    ``SearchParams.filter`` predicates (DESIGN.md §13): evaluated into
+    per-segment bitmaps that ride the same fused-kernel validity path as
+    tombstones, with selectivity-aware candidate widening.
 
 Thread safety: mutations serialize on a per-index lock and publish a fresh
 immutable view; searches read the latest view with a single attribute load
@@ -52,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer, _flatten_with_names
+from repro.filter.metadata import MetaBlock, MetadataStore
 from repro.index.params import IndexSpec, SearchParams
 from repro.index.segments import DELTA_SID, DeltaBuffer, IndexView, SealedSegment
 
@@ -93,14 +99,22 @@ def available_backends() -> list[str]:
 
 
 def build_index(key: jax.Array | None, db: np.ndarray,
-                spec: IndexSpec | None = None, **spec_kw) -> "Index":
+                spec: IndexSpec | None = None, metadata: dict | None = None,
+                meta_schema: dict | None = None, **spec_kw) -> "Index":
     """Build an index per ``spec`` (or ``IndexSpec(**spec_kw)``).
 
     ``key`` seeds the randomized builds (rpf forests); None falls back to
     ``jax.random.key(spec.seed)``.
+
+    ``metadata`` (optional) attaches columnar per-row attributes — a dict
+    of column name -> length-N values — enabling ``SearchParams.filter``
+    predicates.  Column kinds (int/categorical/timestamp) are inferred
+    from dtypes or pinned by ``meta_schema`` ({name: kind}); see
+    ``repro.filter``.
     """
     spec = spec if spec is not None else IndexSpec(**spec_kw)
-    return get_backend(spec.backend).build(key, db, spec)
+    return get_backend(spec.backend).build(key, db, spec, metadata=metadata,
+                                           meta_schema=meta_schema)
 
 
 def load_index(path: str) -> "Index":
@@ -141,7 +155,8 @@ class Index:
     engine_cls: type | None = None
 
     def __init__(self, key: jax.Array | None, db: np.ndarray,
-                 spec: IndexSpec):
+                 spec: IndexSpec, metadata: dict | None = None,
+                 meta_schema: dict | None = None):
         self.spec = spec
         self._lock = threading.Lock()
         if key is None:
@@ -149,19 +164,28 @@ class Index:
         self.key = key
         db = np.ascontiguousarray(np.asarray(db, np.float32))
         self._d = int(db.shape[1])
+        meta_block = None
+        meta_store = None
+        if metadata is not None:
+            meta_store, meta_block = MetadataStore.from_arrays(
+                metadata, db.shape[0], schema=meta_schema)
         engine = self.engine_cls(spec, key, db)
         seg = SealedSegment(sid=0, engine=engine,
-                            gids=np.arange(db.shape[0], dtype=np.int32))
-        self._init_runtime([seg], next_gid=db.shape[0], next_sid=1)
+                            gids=np.arange(db.shape[0], dtype=np.int32),
+                            meta=meta_block)
+        self._init_runtime([seg], next_gid=db.shape[0], next_sid=1,
+                           meta_store=meta_store)
 
     def _init_runtime(self, segments: list[SealedSegment], next_gid: int,
-                      next_sid: int) -> None:
+                      next_sid: int, meta_store: MetadataStore | None = None
+                      ) -> None:
         """Shared tail of __init__ and the checkpoint loaders."""
         self._tuned_params: SearchParams | None = None
         self._shard_params: tuple[SearchParams, ...] | None = None
         self._serving_plan: dict | None = None
+        self._meta_store = meta_store
         self._segments = list(segments)
-        self._delta = DeltaBuffer(self._d)
+        self._delta = DeltaBuffer(self._d, meta_store=meta_store)
         self._next_gid = int(next_gid)
         self._next_sid = int(next_sid)
         self._compacting = False
@@ -178,13 +202,15 @@ class Index:
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
-    def build(cls, key: jax.Array | None, db: np.ndarray,
-              spec: IndexSpec) -> "Index":
-        return cls(key, db, spec)
+    def build(cls, key: jax.Array | None, db: np.ndarray, spec: IndexSpec,
+              metadata: dict | None = None,
+              meta_schema: dict | None = None) -> "Index":
+        return cls(key, db, spec, metadata=metadata, meta_schema=meta_schema)
 
     def _publish_locked(self) -> None:
         """Swap in a fresh immutable view (caller holds the writer lock)."""
-        self._view = IndexView(tuple(self._segments), self._delta.view())
+        self._view = IndexView(tuple(self._segments), self._delta.view(),
+                               store=self._meta_store)
 
     def snapshot(self) -> IndexView:
         """The current immutable view: searchable, frozen, lock-free."""
@@ -215,6 +241,11 @@ class Index:
     def _primary_engine(self):
         return self._view.segments[0].engine
 
+    @property
+    def meta_store(self) -> MetadataStore | None:
+        """The metadata schema + categorical vocab (None = no metadata)."""
+        return self._meta_store
+
     def stats(self) -> dict:
         """Consistent counter snapshot (taken under the writer lock)."""
         with self._lock:
@@ -235,6 +266,8 @@ class Index:
                 "n_seals": self._n_seals,
                 "n_compactions": self._n_compactions,
                 "compaction_in_progress": self._compacting,
+                "metadata_columns": (sorted(self._meta_store.columns)
+                                     if self._meta_store is not None else []),
                 **self._extra_stats(),
             }
 
@@ -312,19 +345,35 @@ class Index:
         return self._view.search(queries, params, **params_kw)
 
     # ------------------------------------------------------------ mutations
-    def add(self, x: np.ndarray) -> int:
+    def _encode_meta_locked(self, metadata: dict | None) -> dict | None:
+        """Point metadata -> column codes (the add/upsert front door).
+
+        Metadata-carrying indexes require every column on every add (the
+        predicates are total); metadata on a metadata-less index is an
+        error rather than a silent drop."""
+        if self._meta_store is None:
+            if metadata:
+                raise ValueError("this index carries no metadata — build "
+                                 "with build_index(..., metadata=...) first")
+            return None
+        return self._meta_store.encode_point(metadata)
+
+    def add(self, x: np.ndarray, metadata: dict | None = None) -> int:
         """Paper §5 incremental update. Returns the new point's id.
 
         The point lands in the delta buffer (immediately queryable); once
         the delta outgrows the seal threshold it is sealed into an
         immutable segment with its own engine — no full rebuild (that is
         ``compact()``'s job, explicitly or in the background).
+        ``metadata`` must cover the index's metadata schema exactly when
+        one exists ({column: value}).
         """
         x = np.asarray(x, np.float32).reshape(-1)
         with self._lock:
+            codes = self._encode_meta_locked(metadata)
             gid = self._next_gid
             self._next_gid += 1
-            row = self._delta.append(x, gid)
+            row = self._delta.append(x, gid, meta=codes)
             self._loc[gid] = (DELTA_SID, row)
             self._maybe_seal_locked()
             self._publish_locked()
@@ -363,20 +412,24 @@ class Index:
             self._publish_locked()
         return len(id_list)
 
-    def upsert(self, gid: int, x: np.ndarray) -> int:
+    def upsert(self, gid: int, x: np.ndarray,
+               metadata: dict | None = None) -> int:
         """Insert-or-replace the vector for ``gid`` (id is preserved).
 
         The old row (if any) is tombstoned and the new vector appended to
         the delta under the same global id — searches see exactly one live
-        row per id at all times.
+        row per id at all times.  On a metadata-carrying index the new
+        row's ``metadata`` replaces the old row's (all columns required,
+        like :meth:`add` — rows are immutable, attributes ride the row).
         """
         gid = int(gid)
         x = np.asarray(x, np.float32).reshape(-1)
         with self._lock:
+            codes = self._encode_meta_locked(metadata)
             old = self._loc.get(gid)
             if old is not None:
                 self._kill_locked(old)
-            row = self._delta.append(x, gid)
+            row = self._delta.append(x, gid, meta=codes)
             self._loc[gid] = (DELTA_SID, row)
             if gid >= self._next_gid:
                 self._next_gid = gid + 1
@@ -412,9 +465,9 @@ class Index:
 
     def _seal_delta_locked(self) -> None:
         """Freeze the delta's live rows into a new immutable segment."""
-        rows, gids = self._delta.live_rows()
+        rows, gids, meta_cols = self._delta.live_rows()
         if rows.shape[0] == 0:
-            self._delta = DeltaBuffer(self._d)
+            self._delta = DeltaBuffer(self._d, meta_store=self._meta_store)
             return
         sid = self._next_sid
         # build the engine BEFORE retiring the delta: a failed build (OOM,
@@ -422,9 +475,10 @@ class Index:
         engine = self.engine_cls(self.spec, jax.random.fold_in(self.key, sid),
                                  rows)
         self._next_sid += 1
-        self._delta = DeltaBuffer(self._d)
+        self._delta = DeltaBuffer(self._d, meta_store=self._meta_store)
+        meta = MetaBlock(meta_cols) if meta_cols is not None else None
         self._segments.append(SealedSegment(sid=sid, engine=engine,
-                                            gids=gids))
+                                            gids=gids, meta=meta))
         self._loc.update(zip(gids.tolist(),
                              ((sid, j) for j in range(gids.shape[0]))))
         self._n_seals += 1
@@ -464,7 +518,9 @@ class Index:
                 for seg in snap:
                     live_idx = np.flatnonzero(seg.live)
                     parts.append((seg.sid, live_idx, seg.rows[live_idx],
-                                  seg.gids[live_idx]))
+                                  seg.gids[live_idx],
+                                  seg.meta.take(live_idx)
+                                  if seg.meta is not None else None))
                 self._publish_locked()
             except BaseException:
                 self._compacting = False
@@ -472,12 +528,14 @@ class Index:
 
         def _rebuild() -> dict:
             try:
-                sources = [(sid, int(r)) for sid, live_idx, _, _ in parts
+                sources = [(sid, int(r)) for sid, live_idx, _, _, _ in parts
                            for r in live_idx]
                 gids = (np.concatenate([p[3] for p in parts])
                         if parts else np.zeros(0, np.int32))
                 rows = (np.concatenate([p[2] for p in parts])
                         if parts else np.zeros((0, self._d), np.float32))
+                meta = (MetaBlock.concat([p[4] for p in parts])
+                        if self._meta_store is not None else None)
                 engine = (self.engine_cls(self.spec, self.key, rows)
                           if rows.shape[0] else None)
                 with self._lock:
@@ -495,7 +553,7 @@ class Index:
                         sid = self._next_sid
                         self._next_sid += 1
                         seg = SealedSegment(sid=sid, engine=engine,
-                                            gids=gids, live=live)
+                                            gids=gids, live=live, meta=meta)
                         for j, (g, alive) in enumerate(zip(gids.tolist(),
                                                            live)):
                             if alive:
@@ -519,18 +577,19 @@ class Index:
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> str:
-        """Checkpoint the index under ``path`` (multi-segment manifest v4).
+        """Checkpoint the index under ``path`` (multi-segment manifest v5).
 
         Pending delta rows are sealed first (cheap — a per-delta engine
         build, NOT a full rebuild), then every segment's engine state,
-        global-id column and tombstone bitmap land through the elastic
-        checkpointer, along with the tuned operating point
-        (``tuned_params``), the per-shard operating points
-        (``shard_params``) and the capacity plan (``serving_plan``) when
-        set.  A save→load roundtrip is bitwise: the restored index answers
-        every query identically to the saved one, with the same default
-        params — and a serving runtime stood up on it resolves the same
-        fleet plan.
+        global-id column, tombstone bitmap and metadata columns land
+        through the elastic checkpointer, along with the tuned operating
+        point (``tuned_params``), the per-shard operating points
+        (``shard_params``), the capacity plan (``serving_plan``) and the
+        metadata schema + categorical vocab (``meta_schema``) when set.
+        A save→load roundtrip is bitwise: the restored index answers
+        every query — filtered or not — identically to the saved one,
+        with the same default params — and a serving runtime stood up on
+        it resolves the same fleet plan.
         """
         with self._lock:
             self._seal_delta_locked()
@@ -539,17 +598,20 @@ class Index:
                           "segments": {}}
             seg_meta = []
             for i, seg in enumerate(self._segments):
-                tree["segments"][f"{i:03d}"] = {
+                seg_tree = {
                     "engine": seg.engine.state_tree(),
                     "gids": seg.gids,
                     "live": seg.live,
                 }
+                if self._meta_store is not None:
+                    seg_tree["meta"] = dict(seg.meta.cols)
+                tree["segments"][f"{i:03d}"] = seg_tree
                 seg_meta.append({"sid": seg.sid, "n_rows": seg.n_rows})
             ckpt = Checkpointer(path, keep=1)
             return ckpt.save(0, tree,
                              extra={"spec": self.spec.to_dict(),
                                     "backend": self.backend,
-                                    "format": 4,
+                                    "format": 5,
                                     "dim": self._d,
                                     "segments": seg_meta,
                                     "next_gid": self._next_gid,
@@ -563,7 +625,11 @@ class Index:
                                          for p in self._shard_params]
                                         if self._shard_params is not None
                                         else None),
-                                    "serving_plan": self._serving_plan})
+                                    "serving_plan": self._serving_plan,
+                                    "meta_schema": (
+                                        self._meta_store.to_json()
+                                        if self._meta_store is not None
+                                        else None)})
 
     @classmethod
     def load(cls, path: str) -> "Index":
@@ -596,19 +662,31 @@ class Index:
 
     @classmethod
     def _load_v2(cls, path: str, spec: IndexSpec, manifest: dict) -> "Index":
-        """Loader for segmented manifests (formats 2, 3 and 4).
+        """Loader for segmented manifests (formats 2 through 5).
 
         Each format only ADDS optional extras on top of format 2's segment
         state — format 3 the tuned operating point, format 4 the per-shard
-        params and serving plan — so the older-format read shims are this
-        same path with the newer extras absent (None).
+        params and serving plan, format 5 the metadata schema + per-segment
+        metadata columns — so the older-format read shims are this same
+        path with the newer extras absent (None).
         """
         extra = manifest["extra"]
         n_seg = len(extra["segments"])
+        meta_schema = extra.get("meta_schema")
+        store = (MetadataStore.from_json(meta_schema)
+                 if meta_schema is not None else None)
+        # meta leaves exist on disk only when the writer carried a store;
+        # keying the skeleton off meta_schema (not the leaf list) means a
+        # v4-and-earlier manifest — or a v5 one with the schema stripped —
+        # skips them, and surplus on-disk leaves are simply ignored.
+        meta_cols = sorted(store.columns) if store is not None else []
         skeleton = {"key_data": 0,
                     "segments": {f"{i:03d}": {
                         "engine": cls.engine_cls.state_skeleton(spec),
-                        "gids": 0, "live": 0} for i in range(n_seg)}}
+                        "gids": 0, "live": 0,
+                        **({"meta": {c: 0 for c in meta_cols}}
+                           if store is not None else {})}
+                        for i in range(n_seg)}}
         state = cls._restore_tree(path, manifest, skeleton)
         obj = cls.__new__(cls)
         obj.spec = spec
@@ -619,13 +697,19 @@ class Index:
         segments = []
         for i, meta in enumerate(extra["segments"]):
             st = state["segments"][f"{i:03d}"]
+            seg_meta = None
+            if store is not None:
+                seg_meta = MetaBlock({c: np.asarray(st["meta"][c],
+                                                    store.dtype(c))
+                                      for c in meta_cols})
             segments.append(SealedSegment(
                 sid=int(meta["sid"]),
                 engine=cls.engine_cls.from_state(spec, st["engine"]),
                 gids=np.asarray(st["gids"], np.int32),
-                live=np.asarray(st["live"], bool)))
+                live=np.asarray(st["live"], bool),
+                meta=seg_meta))
         obj._init_runtime(segments, next_gid=extra["next_gid"],
-                          next_sid=extra["next_sid"])
+                          next_sid=extra["next_sid"], meta_store=store)
         tuned = extra.get("tuned_params")
         if tuned is not None:
             obj._tuned_params = SearchParams.from_dict(tuned)

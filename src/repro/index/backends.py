@@ -139,10 +139,12 @@ class RPFEngine:
 class RPFInt8Engine(RPFEngine):
     """Same forest; int8 coarse shortlist -> exact fp32 fused rerank.
 
-    ``SearchParams.expand`` sets the shortlist width k' = expand*k; the
-    coarse stage is always L2 (the per-row int8 calibration is L2-shaped),
-    the exact stage honors ``params.metric``.  The tombstone mask is
-    applied at the coarse stage, so dead rows never occupy shortlist slots.
+    ``SearchParams.expand`` sets the shortlist width k' = expand*k; both
+    stages honor ``params.metric`` — the coarse stage scores the
+    DEQUANTIZED rows under it (DESIGN.md §13), so the shortlist ranks
+    like the exact fp32 stage (the per-row int8 calibration stays
+    L2-shaped, §11).  The tombstone mask is applied at the coarse stage,
+    so dead rows never occupy shortlist slots.
     """
 
     def __init__(self, spec: IndexSpec, key: jax.Array, rows: np.ndarray):

@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+from repro.core.distances import METRIC_ALIASES, METRICS
 from repro.core.forest import ForestConfig
 
 
@@ -19,7 +20,11 @@ class SearchParams:
     """Every query-time knob, composable with every backend.
 
     k              neighbors returned
-    metric         l2 | dot | chi2 | cosine (exact-rerank metric)
+    metric         l2 | chi2 | cosine | ip (alias of dot) — the scoring
+                   metric, threaded through every backend's coarse and
+                   exact stage (DESIGN.md §13); aliases canonicalize at
+                   construction, unknown names are reported by
+                   :meth:`violations` (checked on every search path)
     mode           kernel dispatch: auto (Pallas on TPU) | pallas | ref
     dedup          mask duplicate candidate ids before rerank
     expand         int8 shortlist width multiplier (quantized backends):
@@ -40,6 +45,11 @@ class SearchParams:
                    is itself a valid smaller forest (the trees are
                    independent), so this is the search-time half of the
                    probes-vs-trees tradeoff the tuner walks
+    filter         optional ``repro.filter`` predicate AST: only rows
+                   matching it can surface, enforced through the same
+                   validity-bitmap path as tombstones (DESIGN.md §13).
+                   Requires a metadata-carrying index; rejected on the
+                   sharded path (``sharded_violations``)
 
     Typically hand-written for exploration and produced by
     ``repro.index.tune`` for operation: the tuner returns the cheapest
@@ -58,6 +68,7 @@ class SearchParams:
     min_candidates: int = 1
     n_probes: int = 1
     n_trees: int = 0
+    filter: Any = None
 
     def __post_init__(self):
         if self.mode not in ("auto", "pallas", "ref"):
@@ -68,50 +79,90 @@ class SearchParams:
             raise ValueError(f"n_probes must be >= 1, got {self.n_probes}")
         if self.n_trees < 0:
             raise ValueError(f"n_trees must be >= 0, got {self.n_trees}")
+        # alias-resolve the metric ("ip" -> "dot"); unknown names survive
+        # construction and are reported by violations() — every search
+        # path checks it, so they fail with a capability message, not a
+        # kernel KeyError
+        object.__setattr__(self, "metric",
+                           METRIC_ALIASES.get(self.metric, self.metric))
+
+    def violations(self) -> list[str]:
+        """Capability violations of this operating point (empty = servable).
+
+        THE one definition of "can this params be served": ``Index.search``
+        / ``IndexView.search``, the sharded path (via
+        :meth:`sharded_violations`) and ``ServingRuntime`` all consult it,
+        so accept and reject can never drift between surfaces
+        (previously each path had its own ad-hoc checks or none).
+        """
+        bad = []
+        if self.metric not in METRICS:
+            known = sorted(set(METRICS) | set(METRIC_ALIASES))
+            bad.append(f"metric={self.metric!r} (known: {known})")
+        if self.filter is not None:
+            from repro.filter.predicate import Predicate
+            if not isinstance(self.filter, Predicate):
+                bad.append(f"filter must be a repro.filter Predicate, got "
+                           f"{type(self.filter).__name__}")
+        return bad
 
     def sharded_violations(self) -> list[str]:
-        """Knobs of this params that the sharded query path cannot honor.
+        """Knobs of this params that the sharded query path cannot honor
+        (a superset of :meth:`violations` — sharded serving adds limits).
 
         ``core.sharded_index.make_query_fn`` serves only the per-cell knobs
         (k/metric/dedup/mode/chunk/n_probes): adaptive waves and the lsh
         cascade don't compose with the cell-local rerank + tiny top-k merge,
-        and trees are a build-time shard property, so a search-time
-        ``n_trees`` restriction is meaningless there.  ``make_query_fn``
-        REJECTS such params; this lists what it would reject (empty = the
-        params are sharded-legal), and :meth:`sharded` strips exactly the
-        same set — one definition, so accept and reject can never drift.
+        trees are a build-time shard property (a search-time ``n_trees``
+        restriction is meaningless there), and metadata filters need the
+        host-side bitmap compiler, which the SPMD hot loop has no seam for.
+        ``make_query_fn`` REJECTS such params; this lists what it would
+        reject (empty = the params are sharded-legal), and :meth:`sharded`
+        strips exactly the same set — one definition, so accept and reject
+        can never drift.
         """
-        bad = []
+        bad = self.violations()
         if self.adaptive_wave:
             bad.append(f"adaptive_wave={self.adaptive_wave}")
         if self.min_candidates != 1:
             bad.append(f"min_candidates={self.min_candidates}")
         if self.n_trees:
             bad.append(f"n_trees={self.n_trees}")
+        if self.filter is not None:
+            bad.append("filter=<predicate> (filtered search is host-local)")
         return bad
 
     def sharded(self) -> "SearchParams":
         """This operating point restricted to the sharded-legal knobs.
 
         Neutralizes exactly the knobs :meth:`sharded_violations` names
-        (``adaptive_wave=0``, ``min_candidates=1``, ``n_trees=0``); the
-        result always passes ``make_query_fn``'s params check.  The serving
-        runtime uses this to project a host-tuned operating point onto the
-        mesh instead of crashing on it — and counts the downgrade.
+        (``adaptive_wave=0``, ``min_candidates=1``, ``n_trees=0``,
+        ``filter=None``); the result always passes ``make_query_fn``'s
+        params check.  The serving runtime uses this to project a
+        host-tuned operating point onto the mesh instead of crashing on
+        it — and counts the downgrade.
         """
         return dataclasses.replace(self, adaptive_wave=0, min_candidates=1,
-                                   n_trees=0)
+                                   n_trees=0, filter=None)
 
     def to_dict(self) -> dict[str, Any]:
-        """JSON-ready dict (the manifest-v3 ``tuned_params`` payload)."""
-        return dataclasses.asdict(self)
+        """JSON-ready dict (the manifest-v3 ``tuned_params`` payload);
+        a predicate filter serializes through its tagged AST form."""
+        d = dataclasses.asdict(self)
+        if self.filter is not None:
+            d["filter"] = self.filter.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "SearchParams":
         """Inverse of :meth:`to_dict`; unknown keys are ignored so params
         saved by a newer writer still load (forward compatibility)."""
         known = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in known})
+        d = {k: v for k, v in d.items() if k in known}
+        if d.get("filter") is not None:
+            from repro.filter.predicate import from_dict as pred_from_dict
+            d["filter"] = pred_from_dict(d["filter"])
+        return cls(**d)
 
 
 @dataclasses.dataclass(frozen=True)

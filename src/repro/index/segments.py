@@ -25,6 +25,16 @@ Engines are duck-typed (see ``index/backends.py``): anything exposing
 funnels through ``core.pipeline.rerank_fused``'s fused gather+distance+
 top-k path, so a row's distance is bitwise-identical no matter which
 segment it currently lives in (the property the mutation tests pin).
+
+Filtered search (DESIGN.md §13) rides the same machinery: a sealed
+segment optionally carries an immutable ``MetaBlock`` of per-row metadata
+columns; ``SearchParams.filter`` predicates compile per segment into a
+match bitmap (cached on the block), AND with ``live``, and replace the
+tombstone mask on the engine's ``valid=`` path — the kernels never learn
+about predicates.  ``IndexView.search`` estimates the filter's
+selectivity from those bitmaps and either widens the candidate budget
+(``repro.filter.predicate.widen_params``) or, below the brute-force
+threshold, exact-scans only the matching rows.
 """
 from __future__ import annotations
 
@@ -89,11 +99,12 @@ class SealedSegment:
     """
 
     __slots__ = ("sid", "engine", "gids", "live", "n_dead", "identity_gids",
-                 "_gids_dev_cell", "_live_dev")
+                 "meta", "_gids_dev_cell", "_live_dev", "_filter_dev")
 
     def __init__(self, sid: int, engine, gids: np.ndarray,
                  live: np.ndarray | None = None,
                  identity_gids: bool | None = None,
+                 meta=None,
                  _gids_dev_cell: list | None = None):
         self.sid = sid
         self.engine = engine
@@ -106,10 +117,17 @@ class SealedSegment:
             identity_gids = bool(np.array_equal(
                 self.gids, np.arange(self.gids.shape[0], dtype=np.int32)))
         self.identity_gids = identity_gids
+        # immutable per-row metadata columns (repro.filter.MetaBlock);
+        # SHARED across with_tombstones copies — metadata never changes
+        # after seal, so its predicate-bitmap cache warms once per segment
+        self.meta = meta
         # one-element cell shared across with_tombstones copies
         self._gids_dev_cell = (_gids_dev_cell if _gids_dev_cell is not None
                                else [None])
         self._live_dev = None
+        # per-OBJECT cache: predicate -> (n_match_live, device valid mask);
+        # not shared across copies because it folds in THIS object's live
+        self._filter_dev: dict = {}
 
     @property
     def n_rows(self) -> int:
@@ -141,12 +159,37 @@ class SealedSegment:
         live[rows] = False
         return SealedSegment(self.sid, self.engine, self.gids, live=live,
                              identity_gids=self.identity_gids,
+                             meta=self.meta,
                              _gids_dev_cell=self._gids_dev_cell)
 
-    def search(self, q: jax.Array, params: SearchParams
+    def filter_valid(self, predicate, store) -> tuple[int, jax.Array | None]:
+        """(live match count, device validity mask) for ``predicate``.
+
+        The mask is ``match & live`` — the filter and the tombstones fused
+        into ONE bitmap for the kernels' existing ``valid=`` path.  The
+        host match bitmap caches on the (shared) MetaBlock; the combined
+        device mask caches per segment object, so repeated filtered
+        queries on an unmutated view upload nothing.
+        """
+        cached = self._filter_dev.get(predicate)
+        if cached is None:
+            combined = self.meta.match(predicate, store) & self.live
+            n = int(np.count_nonzero(combined))
+            cached = (n, jnp.asarray(combined) if n else None)
+            self._filter_dev[predicate] = cached
+        return cached
+
+    def search(self, q: jax.Array, params: SearchParams,
+               valid: jax.Array | None = None
                ) -> tuple[jax.Array, jax.Array]:
-        """(dists, GLOBAL ids) over this segment's live rows."""
-        valid = self.live_dev if self.n_dead else None
+        """(dists, GLOBAL ids) over this segment's live rows.
+
+        ``valid`` optionally overrides the validity mask (the filtered
+        path passes its combined filter+tombstone bitmap); by default the
+        tombstone bitmap applies when any row is dead.
+        """
+        if valid is None:
+            valid = self.live_dev if self.n_dead else None
         d, li = self.engine.search(q, params, valid=valid)
         return d, _remap_gids(li, self.gids_dev)
 
@@ -162,18 +205,26 @@ class DeltaBuffer:
     buffer is invalidated by append/seal, not rebuilt per query.
     """
 
-    def __init__(self, dim: int):
+    def __init__(self, dim: int, meta_store=None):
         self.dim = dim
         cap = _DELTA_MIN_CAP
         self._rows = np.zeros((cap, dim), np.float32)
         self._gids = np.full(cap, -1, np.int32)
         self._live = np.zeros(cap, bool)
+        # metadata columns grow in lockstep with the rows (codes, not raw
+        # values — the Index encodes through its MetadataStore on add)
+        self.meta_store = meta_store
+        self._meta: dict[str, np.ndarray] | None = None
+        if meta_store is not None:
+            self._meta = {name: np.zeros(cap, meta_store.dtype(name))
+                          for name in meta_store.columns}
         self.count = 0
         self.n_live = 0
         self._dev_lock = threading.Lock()
         self._dev_cache: tuple | None = None   # (buf_obj, count, rows, gids)
 
-    def append(self, x: np.ndarray, gid: int) -> int:
+    def append(self, x: np.ndarray, gid: int,
+               meta: dict[str, int] | None = None) -> int:
         if self.count == self._rows.shape[0]:
             self._rows = np.concatenate([self._rows,
                                          np.zeros_like(self._rows)])
@@ -181,9 +232,16 @@ class DeltaBuffer:
                                          np.full(self.count, -1, np.int32)])
             self._live = np.concatenate([self._live,
                                          np.zeros(self.count, bool)])
+            if self._meta is not None:
+                self._meta = {name: np.concatenate([col,
+                                                    np.zeros_like(col)])
+                              for name, col in self._meta.items()}
         row = self.count
         self._rows[row] = x
         self._gids[row] = gid
+        if self._meta is not None:
+            for name, col in self._meta.items():
+                col[row] = meta[name]
         self._live[row] = True
         self.count = row + 1
         self.n_live += 1
@@ -194,11 +252,16 @@ class DeltaBuffer:
             self._live[row] = False
             self.n_live -= 1
 
-    def live_rows(self) -> tuple[np.ndarray, np.ndarray]:
-        """(rows (m, d), gids (m,)) of the live prefix — the seal payload."""
+    def live_rows(self) -> tuple[np.ndarray, np.ndarray,
+                                 dict[str, np.ndarray] | None]:
+        """(rows (m, d), gids (m,), meta columns) of the live prefix —
+        the seal payload (meta is None on metadata-less indexes)."""
         idx = np.flatnonzero(self._live[:self.count])
+        meta = (None if self._meta is None
+                else {name: col[idx].copy()
+                      for name, col in self._meta.items()})
         return (np.ascontiguousarray(self._rows[idx]),
-                self._gids[idx].copy())
+                self._gids[idx].copy(), meta)
 
     def view(self) -> "DeltaView | None":
         """Immutable snapshot of the current live prefix (None if empty)."""
@@ -223,13 +286,14 @@ class DeltaBuffer:
 class DeltaView:
     """Frozen (buffer, count, liveness) triple — one snapshot of the delta."""
 
-    __slots__ = ("_buffer", "count", "live", "_arrays")
+    __slots__ = ("_buffer", "count", "live", "_arrays", "_filter_cache")
 
     def __init__(self, buffer: DeltaBuffer, count: int, live: np.ndarray):
         self._buffer = buffer
         self.count = count
         self.live = live
         self._arrays = None
+        self._filter_cache: dict = {}
 
     @property
     def n_live(self) -> int:
@@ -243,11 +307,43 @@ class DeltaView:
             self._arrays = (rows_dev, gids_dev, jnp.asarray(valid))
         return self._arrays
 
-    def search(self, q: jax.Array, params: SearchParams
+    def filter_valid(self, predicate, store) -> tuple[int, jax.Array | None]:
+        """(live match count, device validity mask over the buffer rows).
+
+        Delta rows are few and freshly written, so the predicate is
+        evaluated directly over the buffer's column prefixes (per-view
+        cached — a view is immutable; the next mutation publishes a new
+        one).  The mask covers the buffer's full capacity like the default
+        liveness mask, with the same brute-force scan consuming it.
+        """
+        cached = self._filter_cache.get(predicate)
+        if cached is not None:
+            return cached
+        from repro.filter.metadata import MetaBlock
+        buf = self._buffer
+        block = MetaBlock({name: col[:self.count]
+                           for name, col in buf._meta.items()})
+        combined = block.match(predicate, store) & self.live
+        n = int(np.count_nonzero(combined))
+        dev = None
+        if n:
+            rows_dev, _ = buf.device_rows(self.count)
+            valid = np.zeros(rows_dev.shape[0], bool)
+            valid[:self.count] = combined
+            dev = jnp.asarray(valid)
+        self._filter_cache[predicate] = (n, dev)
+        return n, dev
+
+    def search(self, q: jax.Array, params: SearchParams,
+               valid: jax.Array | None = None
                ) -> tuple[jax.Array, jax.Array]:
-        """(dists, GLOBAL ids) over the live delta rows (brute force)."""
-        rows_dev, gids_dev, valid = self._device_arrays()
-        d, li = brute_force_topk(q, rows_dev, params, valid=valid)
+        """(dists, GLOBAL ids) over the live delta rows (brute force).
+
+        ``valid`` optionally overrides the liveness mask (the filtered
+        path passes its combined filter+liveness bitmap)."""
+        rows_dev, gids_dev, live_valid = self._device_arrays()
+        d, li = brute_force_topk(q, rows_dev, params,
+                                 valid=live_valid if valid is None else valid)
         return d, _remap_gids(li, gids_dev)
 
 
@@ -260,12 +356,16 @@ class IndexView:
     point-in-time state even while the live index mutates or compacts.
     """
 
-    __slots__ = ("segments", "delta")
+    __slots__ = ("segments", "delta", "store")
 
     def __init__(self, segments: tuple[SealedSegment, ...],
-                 delta: DeltaView | None):
+                 delta: DeltaView | None, store=None):
         self.segments = segments
         self.delta = delta
+        # the index's MetadataStore (schema + categorical vocab) — None on
+        # metadata-less indexes; vocab growth is append-only, so a frozen
+        # view may safely share the live store
+        self.store = store
 
     @property
     def n_live(self) -> int:
@@ -311,7 +411,12 @@ class IndexView:
         slots: dist +inf, id -1.
         """
         params = params if params is not None else SearchParams(**params_kw)
+        bad = params.violations()
+        if bad:
+            raise ValueError("params cannot be served: " + ", ".join(bad))
         q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+        if params.filter is not None:
+            return self._search_filtered(q, params)
         segments = self.segments
         if (len(segments) == 1 and self.delta is None
                 and segments[0].n_dead == 0 and segments[0].identity_gids):
@@ -324,15 +429,68 @@ class IndexView:
             parts.append(seg.search(q, params))
         if self.delta is not None:
             parts.append(self.delta.search(q, params))
+        return self._merge(q, parts, params.k)
+
+    def _merge(self, q, parts, k: int):
         if not parts:
-            b = q.shape[0]
-            return (jnp.full((b, params.k), jnp.inf, jnp.float32),
-                    jnp.full((b, params.k), -1, jnp.int32))
+            return (jnp.full((q.shape[0], k), jnp.inf, jnp.float32),
+                    jnp.full((q.shape[0], k), -1, jnp.int32))
         if len(parts) == 1:
             return parts[0]
         cat_d = jnp.concatenate([p[0] for p in parts], axis=1)
         cat_i = jnp.concatenate([p[1] for p in parts], axis=1)
-        return _merge_parts(cat_d, cat_i, params.k)
+        return _merge_parts(cat_d, cat_i, k)
+
+    def _search_filtered(self, q: jax.Array, params: SearchParams
+                         ) -> tuple[jax.Array, jax.Array]:
+        """Predicate-filtered fan-out (DESIGN.md §13).
+
+        Per segment: compile the predicate into a match bitmap (cached),
+        AND with the tombstones, and hand the combined mask to the exact
+        ``valid=`` path the engines already serve.  The match counts give
+        the filter's TRUE selectivity (the bitmap is exact, not an
+        estimate); below the brute-force threshold the query exact-scans
+        only the matching rows (the fused kernel issues no DMA for masked
+        slots, so cost tracks the matches), otherwise the candidate budget
+        is widened by ``repro.filter.predicate.widen_params`` so ~1/s
+        fewer surviving candidates still fill k slots.
+        """
+        from repro.filter.predicate import use_brute_force, widen_params
+        if self.store is None:
+            raise ValueError(
+                "params.filter is set but this index carries no metadata — "
+                "build with build_index(..., metadata={col: values}) to "
+                "enable filtered search")
+        pred = params.filter
+        seg_parts: list[tuple[SealedSegment, int, jax.Array]] = []
+        n_match = 0
+        for seg in self.segments:
+            if seg.n_live == 0:
+                continue
+            cnt, vdev = seg.filter_valid(pred, self.store)
+            if cnt:
+                seg_parts.append((seg, cnt, vdev))
+                n_match += cnt
+        delta_cnt, delta_valid = 0, None
+        if self.delta is not None:
+            delta_cnt, delta_valid = self.delta.filter_valid(pred, self.store)
+            n_match += delta_cnt
+        if n_match == 0:
+            return self._merge(q, [], params.k)
+        selectivity = n_match / max(self.n_live, 1)
+        brute = use_brute_force(selectivity, n_match)
+        eff = params if brute else widen_params(params, selectivity)
+        parts = []
+        for seg, _, vdev in seg_parts:
+            if brute:
+                d, li = brute_force_topk(q, seg.engine.db_dev, params,
+                                         valid=vdev)
+                parts.append((d, _remap_gids(li, seg.gids_dev)))
+            else:
+                parts.append(seg.search(q, eff, valid=vdev))
+        if delta_cnt:
+            parts.append(self.delta.search(q, params, valid=delta_valid))
+        return self._merge(q, parts, params.k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

@@ -15,9 +15,11 @@ never exists anywhere; the shortlist's HBM traffic drops ~4x for real
 Contract (mirrored by ``kernels.ref.fused_gather_topk_int8_ref``):
   q (B, d) f32, ids (B, M) int32 with -1 marking invalid slots,
   q8 (N, d) int8, scale (N,) f32  ->  (dists (B, k) f32, ids (B, k) int32);
-  invalid slots: +inf / -1.  Metric is L2 only — the symmetric per-row
-  quantization is L2-calibrated (DESIGN.md §11); the exact metric of record
-  is applied by the fp32 rerank of the shortlist, not here.
+  invalid slots: +inf / -1.  The metric (l2 | dot | chi2 | cosine) scores
+  the DEQUANTIZED rows, so the coarse shortlist ranks under the same
+  metric the fp32 rerank of record applies (DESIGN.md §13); the symmetric
+  per-row quantization stays L2-calibrated (DESIGN.md §11) — for chi2 the
+  dequantized values are promoted to f32 before the divide.
 
 The -1-id masking vocabulary is identical to fused_query.py, so segment
 tombstones compose unchanged: a dead row's slot is -1 before the kernel,
@@ -35,9 +37,11 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 from repro.kernels.common import POS_INF, merge_topk, select_topk_block
 
+EPS = 1e-12
+
 
 def _kernel(ids_smem, q_ref, ids_ref, q8_ref, scale_ref, out_d_ref, out_i_ref,
-            rows, srow, sem, *, bq: int, bm: int, k: int):
+            rows, srow, sem, *, bq: int, bm: int, k: int, metric: str):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -78,11 +82,22 @@ def _kernel(ids_smem, q_ref, ids_ref, q8_ref, scale_ref, out_d_ref, out_i_ref,
     jax.lax.fori_loop(0, bq * bm, _start, 0)
     jax.lax.fori_loop(0, bq * bm, _wait, 0)
 
-    # ---- dequantize in registers and score (always L2) --------------------
+    # ---- dequantize in registers and score under the metric ---------------
     q = q_ref[...].astype(jnp.float32)[:, None, :]          # (bq, 1, d)
     deq = rows[...].astype(jnp.float32) * srow[...][:, :, None]
-    diff = q - deq
-    scores = jnp.sum(diff * diff, axis=-1)                  # (bq, bm)
+    if metric == "l2":
+        diff = q - deq
+        scores = jnp.sum(diff * diff, axis=-1)              # (bq, bm)
+    elif metric == "dot":
+        scores = -jnp.sum(q * deq, axis=-1)
+    elif metric == "chi2":
+        scores = jnp.sum((q - deq) ** 2 / (q + deq + EPS), axis=-1)
+    elif metric == "cosine":
+        qn = q / (jnp.sqrt(jnp.sum(q * q, -1, keepdims=True)) + EPS)
+        cn = deq / (jnp.sqrt(jnp.sum(deq * deq, -1, keepdims=True)) + EPS)
+        scores = 1.0 - jnp.sum(qn * cn, axis=-1)
+    else:
+        raise ValueError(metric)
     ids_vec = ids_ref[...]
     scores = jnp.where(ids_vec >= 0, scores, POS_INF)
 
@@ -93,13 +108,15 @@ def _kernel(ids_smem, q_ref, ids_ref, q8_ref, scale_ref, out_d_ref, out_i_ref,
     out_i_ref[...] = mi
 
 
-@functools.partial(jax.jit, static_argnames=("k", "bq", "bm", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "metric", "bq", "bm",
+                                             "interpret"))
 def fused_gather_topk_int8(q: jax.Array, ids: jax.Array, q8: jax.Array,
-                           scale: jax.Array, k: int, bq: int = 8,
-                           bm: int = 32, interpret: bool = False
+                           scale: jax.Array, k: int, metric: str = "l2",
+                           bq: int = 8, bm: int = 32, interpret: bool = False
                            ) -> tuple[jax.Array, jax.Array]:
     """q (B, d), ids (B, M) int32 (-1 = invalid), q8 (N, d) int8,
-    scale (N,) f32 -> coarse-L2 top-k (B, k).
+    scale (N,) f32 -> coarse top-k (B, k) under ``metric`` on the
+    dequantized rows.
 
     Never materializes the gathered or dequantized (B, M, d) tensor: int8
     rows + scales are DMA'd HBM -> VMEM tile-by-tile inside the kernel.
@@ -133,7 +150,7 @@ def fused_gather_topk_int8(q: jax.Array, ids: jax.Array, q8: jax.Array,
         ],
     )
     out_d, out_i = pl.pallas_call(
-        functools.partial(_kernel, bq=bq, bm=bm, k=k),
+        functools.partial(_kernel, bq=bq, bm=bm, k=k, metric=metric),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((b + b_pad, k), jnp.float32),

@@ -78,20 +78,23 @@ def fused_rerank(q, ids, db, k: int, metric: str = "l2", mode: Mode = "auto",
     return _ref.fused_gather_topk_ref(q, ids, db, k, metric=metric)
 
 
-def fused_rerank_int8(q, ids, q8, scale, k: int, mode: Mode = "auto",
-                      bq: int = 8, bm: int = 32):
-    """Fused int8-row gather + dequantize + coarse-L2 top-k over one chunk.
+def fused_rerank_int8(q, ids, q8, scale, k: int, metric: str = "l2",
+                      mode: Mode = "auto", bq: int = 8, bm: int = 32):
+    """Fused int8-row gather + dequantize + coarse top-k over one chunk.
 
     ids (B, M) int32 with -1 marking invalid slots; q8 (N, d) int8 rows with
-    per-row f32 scales.  The Pallas kernel DMAs d + 4 bytes per candidate
-    (kernels/fused_query_int8.py); the ref branch is the retired jnp
-    dequant-gather, kept as the oracle.
+    per-row f32 scales; ``metric`` scores the dequantized rows so the coarse
+    shortlist ranks like the fp32 rerank of record.  The Pallas kernel DMAs
+    d + 4 bytes per candidate (kernels/fused_query_int8.py); the ref branch
+    is the retired jnp dequant-gather, kept as the oracle.
     """
     use_pallas, interp = _resolve(mode)
     if use_pallas:
-        return _fused_i8.fused_gather_topk_int8(q, ids, q8, scale, k, bq=bq,
+        return _fused_i8.fused_gather_topk_int8(q, ids, q8, scale, k,
+                                                metric=metric, bq=bq,
                                                 bm=bm, interpret=interp)
-    return _ref.fused_gather_topk_int8_ref(q, ids, q8, scale, k)
+    return _ref.fused_gather_topk_int8_ref(q, ids, q8, scale, k,
+                                           metric=metric)
 
 
 def embedding_bag(ids, weights, table, mode: Mode = "auto"):

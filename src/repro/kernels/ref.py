@@ -105,21 +105,33 @@ def fused_gather_topk_ref(q: jax.Array, ids: jax.Array, db: jax.Array, k: int,
     return d, jnp.where(jnp.isinf(d), -1, i)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
 def fused_gather_topk_int8_ref(q: jax.Array, ids: jax.Array, q8: jax.Array,
-                               scale: jax.Array, k: int
+                               scale: jax.Array, k: int, metric: str = "l2"
                                ) -> tuple[jax.Array, jax.Array]:
     """Oracle for kernels.fused_query_int8.fused_gather_topk_int8.
 
     This is the retired jnp dequant-gather the int8 coarse stage used to run
     in production (``core.pipeline`` pre-§11): an XLA gather materializes the
-    dequantized (B, M, d) f32 block for the chunk, scored with coarse L2.
+    dequantized (B, M, d) f32 block for the chunk, scored under ``metric``.
     The caller streams chunks, so M here is one chunk's width.
     """
     valid = ids >= 0
     safe = jnp.where(valid, ids, 0)
     deq = q8[safe].astype(jnp.float32) * scale[safe][:, :, None]
-    d = jnp.sum((q.astype(jnp.float32)[:, None, :] - deq) ** 2, axis=-1)
+    qf = q.astype(jnp.float32)[:, None, :]
+    if metric == "l2":
+        d = jnp.sum((qf - deq) ** 2, axis=-1)
+    elif metric == "dot":
+        d = -jnp.sum(qf * deq, axis=-1)
+    elif metric == "chi2":
+        d = jnp.sum((qf - deq) ** 2 / (qf + deq + EPS), axis=-1)
+    elif metric == "cosine":
+        qn = qf / (jnp.sqrt(jnp.sum(qf * qf, -1, keepdims=True)) + EPS)
+        cn = deq / (jnp.sqrt(jnp.sum(deq * deq, -1, keepdims=True)) + EPS)
+        d = 1.0 - jnp.sum(qn * cn, axis=-1)
+    else:
+        raise ValueError(metric)
     d = jnp.where(valid, d, POS_INF)
     neg_d, pos = jax.lax.top_k(-d, k)
     out_d = -neg_d

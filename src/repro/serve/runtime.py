@@ -131,6 +131,18 @@ class ServingRuntime:
         self.slo_p99_ms = slo_p99_ms
         total_trees = int(getattr(index.spec.forest, "n_trees", 1))
         self.params = self._resolve_params(index, params, use_tuned)
+        # same capability surface as Index.search / make_query_fn: the ONE
+        # violations() definition (DESIGN.md §13), checked at stand-up so a
+        # bad operating point fails here, not per-request in the batcher.
+        bad = self.params.violations()
+        if mesh is not None and self.params.filter is not None:
+            # .sharded() strips perf knobs silently because that only
+            # degrades latency; silently dropping a filter would change
+            # which rows come back, so it is refused instead.
+            bad.append("filter=<predicate> (filtered search is host-local; "
+                       "serve filtered queries on an unsharded runtime)")
+        if bad:
+            raise ValueError("params cannot be served: " + ", ".join(bad))
         if ladder is None:
             ladder = build_ladder(self.params, total_trees)
         if not degrade:

@@ -1,0 +1,425 @@
+"""Filtered search subsystem (DESIGN.md §13): predicate AST, metadata
+store, validity-path enforcement, manifest v5 persistence.
+
+The contract under test everywhere: a filtered search returns exactly (or,
+on the widened approximate path, nearly) the brute-force top-k over the
+LIVE rows matching the predicate — never a non-matching or dead row.
+"""
+import dataclasses
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.distances import PAIRWISE
+from repro.core.forest import ForestConfig
+from repro.filter import And, Eq, In, Not, Or, Range, from_dict
+from repro.filter.metadata import MetaBlock, MetadataStore
+from repro.filter.predicate import use_brute_force, widen_params
+from repro.index import IndexSpec, SearchParams, build_index, load_index
+
+SEED = 0
+LSH_RADII = (0.5, 1.0, 2.0)
+BACKENDS = ["bruteforce", "rpf", "rpf+int8", "lsh-cascade"]
+
+
+def _spec(backend):
+    return IndexSpec(backend=backend,
+                     forest=ForestConfig(n_trees=10, capacity=16),
+                     lsh_radii=LSH_RADII, lsh_tables=8, lsh_bits=8, seed=0)
+
+
+def _corpus(n=600, d=16, seed=SEED):
+    from repro.data.synthetic import clustered_gaussians
+    db = np.abs(clustered_gaussians(n, d, n_clusters=12, seed=seed))
+    db /= np.linalg.norm(db, axis=1, keepdims=True)
+    rng = np.random.default_rng(seed + 1)
+    q = np.abs(db[:8] + 0.003 * rng.normal(size=(8, d)).astype(np.float32))
+    meta = {
+        "shop": np.array([f"s{i % 5}" for i in range(n)]),
+        "price": (np.arange(n) * 7 % 100).astype(np.int64),
+        "ts": np.int64(1_700_000_000_000_000_000) + np.arange(n),
+    }
+    return db, q, meta
+
+
+def _match_mask(meta, pred):
+    """Numpy oracle for predicate matching on raw (unencoded) metadata."""
+    if isinstance(pred, Eq):
+        return meta[pred.column] == pred.value
+    if isinstance(pred, In):
+        return np.isin(meta[pred.column], list(pred.values))
+    if isinstance(pred, Range):
+        col = meta[pred.column]
+        out = np.ones(len(col), bool)
+        if pred.lo is not None:
+            out &= col >= pred.lo
+        if pred.hi is not None:
+            out &= col <= pred.hi
+        return out
+    if isinstance(pred, And):
+        out = np.ones(len(next(iter(meta.values()))), bool)
+        for c in pred.children:
+            out &= _match_mask(meta, c)
+        return out
+    if isinstance(pred, Or):
+        out = np.zeros(len(next(iter(meta.values()))), bool)
+        for c in pred.children:
+            out |= _match_mask(meta, c)
+        return out
+    if isinstance(pred, Not):
+        return ~_match_mask(meta, pred.child)
+    raise TypeError(pred)
+
+
+def _oracle(q, rows, gids, metric, k):
+    """Exact top-k (gids) over the given rows under the metric."""
+    if len(rows) == 0:
+        return [set() for _ in range(len(q))]
+    d = np.asarray(PAIRWISE[metric](jax.numpy.asarray(q),
+                                    jax.numpy.asarray(rows)))
+    out = []
+    for row in d:
+        order = np.lexsort((gids, row))
+        out.append(set(gids[order[:k]].tolist()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# predicate AST
+# ---------------------------------------------------------------------------
+
+
+def test_predicate_roundtrip_and_validation():
+    p = And(Or(Eq("shop", "s1"), In("price", [3, 5, 7])),
+            Not(Range("ts", 10, None)))
+    assert from_dict(p.to_dict()) == p
+    assert p.columns() == {"shop", "price", "ts"}
+    assert In("price", [5, 3, 3]).values == (5, 3, 3)
+    with pytest.raises(TypeError):
+        And()          # no children
+    with pytest.raises(ValueError):
+        Range("ts", None, None)   # unbounded both sides
+    with pytest.raises(ValueError):
+        from_dict({"op": "between", "column": "ts"})
+
+
+def test_range_on_categorical_rejected():
+    store, block = MetadataStore.from_arrays(
+        {"shop": np.array(["a", "b"])}, 2)
+    with pytest.raises(ValueError, match="categorical"):
+        Range("shop", "a", "b").evaluate(block, store)
+
+
+def test_unseen_categorical_matches_nothing():
+    store, block = MetadataStore.from_arrays(
+        {"shop": np.array(["a", "b", "a"])}, 3)
+    assert not block.match(Eq("shop", "zzz"), store).any()
+    assert block.match(Eq("shop", "a"), store).tolist() == [True, False, True]
+
+
+def test_metablock_concat_take():
+    a = MetaBlock({"x": np.arange(4, dtype=np.int64)})
+    b = MetaBlock({"x": np.arange(10, 14, dtype=np.int64)})
+    cat = MetaBlock.concat([a, b])
+    assert cat.column("x").tolist() == [0, 1, 2, 3, 10, 11, 12, 13]
+    assert cat.take(np.array([1, 5])).column("x").tolist() == [1, 11]
+
+
+# ---------------------------------------------------------------------------
+# selectivity-aware plan
+# ---------------------------------------------------------------------------
+
+
+def test_use_brute_force_thresholds():
+    assert use_brute_force(0.01, 100_000)       # selective enough
+    assert use_brute_force(0.5, 1000)           # tiny match set
+    assert not use_brute_force(0.5, 100_000)    # broad filter, big set
+
+
+def test_widen_params_scales_with_selectivity():
+    p = SearchParams(k=10, n_probes=2, min_candidates=8, n_trees=4)
+    w = widen_params(p, 0.25)
+    assert w.n_probes == 4                       # 2 / sqrt(0.25)
+    assert w.min_candidates >= 2 * 10 / 0.25
+    assert w.n_trees == 0                        # full forest under filter
+    assert w.filter is p.filter
+    assert widen_params(p, 1e-9).n_probes <= 16  # capped
+
+
+# ---------------------------------------------------------------------------
+# filtered search == brute force over matching live rows (all backends)
+# ---------------------------------------------------------------------------
+
+
+PREDICATES = [
+    Eq("shop", "s2"),
+    And(In("shop", ["s0", "s3"]), Range("price", 20, 60)),
+    Or(Eq("price", 7), Eq("price", 14)),
+    Not(Eq("shop", "s1")),
+    Range("ts", 1_700_000_000_000_000_100, 1_700_000_000_000_000_400),
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_filtered_search_matches_oracle(backend):
+    db, q, meta = _corpus()
+    idx = build_index(jax.random.key(SEED), db, _spec(backend),
+                      metadata=meta)
+    for pred in PREDICATES:
+        for metric in ("l2", "cosine"):
+            p = SearchParams(k=5, metric=metric, filter=pred,
+                             min_candidates=64)
+            d, ids = map(np.asarray, idx.search(q, p))
+            mask = _match_mask(meta, pred)
+            want = _oracle(q, db[mask], np.where(mask)[0], metric, 5)
+            for r, got_row in enumerate(ids):
+                got = set(int(g) for g in got_row if g >= 0)
+                # small corpora ride the exact brute path: full equality
+                assert got == want[r], \
+                    f"{backend}/{metric}/{pred}: {got} vs {want[r]}"
+            assert (d[ids < 0] == np.inf).all()
+
+
+def test_filtered_search_widened_path_recall():
+    """Above the brute-force thresholds the widened approximate path must
+    still deliver high recall vs the filtered oracle."""
+    from repro.data.synthetic import clustered_gaussians
+    n = 12_000
+    db = clustered_gaussians(n, 16, n_clusters=32, seed=3)
+    meta = {"bucket": (np.arange(n) % 2).astype(np.int64)}
+    rng = np.random.default_rng(4)
+    q = db[rng.integers(0, n, 16)] + 0.003
+    idx = build_index(jax.random.key(SEED), db,
+                      _spec("rpf"), metadata=meta)
+    pred = Eq("bucket", 1)                      # selectivity 0.5, 6k rows
+    assert not use_brute_force(0.5, n // 2)     # really the widened path
+    base = SearchParams(k=10, n_probes=4)       # a solid operating point
+    d, ids = map(np.asarray, idx.search(
+        q, dataclasses.replace(base, filter=pred)))
+    mask = _match_mask(meta, pred)
+    assert (np.asarray(ids) % 2 == 1).all()     # only matching rows surface
+    want = _oracle(q, db[mask], np.where(mask)[0], "l2", 10)
+    hit = np.mean([len(set(r[r >= 0].tolist()) & want[i]) / 10
+                   for i, r in enumerate(ids)])
+    assert hit >= 0.9, f"widened-path recall {hit:.2f} < 0.9"
+    # and widening COMPENSATES: recall under filter >= unfiltered recall
+    # of the same base point vs its own (unfiltered) oracle
+    du, iu = map(np.asarray, idx.search(q, base))
+    want_u = _oracle(q, db, np.arange(n), "l2", 10)
+    hit_u = np.mean([len(set(r[r >= 0].tolist()) & want_u[i]) / 10
+                     for i, r in enumerate(iu)])
+    assert hit >= hit_u - 0.05, f"filter lost recall: {hit} vs {hit_u}"
+
+
+def test_empty_match_returns_empty():
+    db, q, meta = _corpus()
+    idx = build_index(jax.random.key(SEED), db, _spec("bruteforce"),
+                      metadata=meta)
+    d, ids = map(np.asarray, idx.search(q, SearchParams(
+        k=5, filter=Eq("shop", "nope"))))
+    assert (ids == -1).all() and np.isinf(d).all()
+
+
+# ---------------------------------------------------------------------------
+# randomized sweep: ANY data / predicate tree / deletion set, every backend
+# (the hypothesis-driven generalization lives in test_filter_property.py;
+# this deterministic sweep keeps the invariant exercised when hypothesis
+# is absent)
+# ---------------------------------------------------------------------------
+
+
+def random_predicate(rng, depth=2):
+    roll = rng.integers(0, 6 if depth > 0 else 3)
+    if roll == 0:
+        return Eq("cat", rng.choice(["a", "b", "c", "zzz"]))
+    if roll == 1:
+        return In("price", tuple(rng.integers(0, 31, rng.integers(1, 4))))
+    if roll == 2:
+        lo = int(rng.integers(0, 16))
+        return Range("price", lo, int(rng.integers(lo, 31)))
+    kids = [random_predicate(rng, depth - 1) for _ in range(2)]
+    if roll == 3:
+        return And(*kids)
+    if roll == 4:
+        return Or(*kids)
+    return Not(kids[0])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_filtered_search_random_sweep(backend):
+    """For varied corpora, predicate trees and deletion sets: filtered
+    search == brute force over the matching LIVE rows."""
+    for trial in range(4):
+        rng = np.random.default_rng(1000 * trial + BACKENDS.index(backend))
+        n = int(rng.integers(60, 250))
+        db = np.abs(rng.normal(size=(n, 8)).astype(np.float32)) + 1e-3
+        db /= np.linalg.norm(db, axis=1, keepdims=True)
+        meta = {"cat": rng.choice(["a", "b", "c"], n),
+                "price": rng.integers(0, 31, n).astype(np.int64)}
+        idx = build_index(jax.random.key(trial), db, _spec(backend),
+                          metadata=meta)
+        dead = rng.choice(n, size=int(rng.integers(0, 20)), replace=False)
+        for g in dead:
+            idx.delete(int(g))
+        pred = random_predicate(rng)
+        q = db[rng.integers(0, n, 4)] + 0.001
+        d, ids = map(np.asarray, idx.search(q, SearchParams(
+            k=5, filter=pred, min_candidates=64)))
+        mask = _match_mask(meta, pred)
+        mask[dead] = False
+        want = _oracle(q, db[mask], np.where(mask)[0], "l2", 5)
+        for r, got_row in enumerate(ids):
+            got = set(int(g) for g in got_row if g >= 0)
+            assert got == want[r], f"trial {trial} pred={pred}"
+
+
+# ---------------------------------------------------------------------------
+# mutation lifecycle: add/upsert/delete/flush/compact with metadata
+# ---------------------------------------------------------------------------
+
+
+def test_metadata_survives_mutation_lifecycle():
+    db, q, meta = _corpus(n=300)
+    idx = build_index(jax.random.key(SEED), db, _spec("rpf"), metadata=meta)
+    pred = Eq("shop", "s9")                      # only new rows match
+    rng = np.random.default_rng(7)
+    new_gids = []
+    for i in range(40):
+        v = np.abs(rng.normal(size=16).astype(np.float32))
+        v /= np.linalg.norm(v)
+        g = idx.add(v, metadata={"shop": "s9", "price": 1000 + i,
+                                 "ts": 2_000_000_000_000_000_000 + i})
+        new_gids.append(g)
+    idx.delete(new_gids[0])
+    idx.upsert(new_gids[1], np.abs(db[0]),
+               metadata={"shop": "s9", "price": 5000,
+                         "ts": 2_100_000_000_000_000_000})
+    for stage in ("delta", "flushed", "compacted"):
+        d, ids = map(np.asarray, idx.search(q, SearchParams(k=50,
+                                                            filter=pred)))
+        got = set(ids[ids >= 0].tolist())
+        assert got == set(new_gids[1:]), f"stage={stage}: {got}"
+        if stage == "delta":
+            idx.flush()
+        elif stage == "flushed":
+            idx.compact()
+    # price update via upsert is visible
+    d, ids = map(np.asarray, idx.search(q, SearchParams(
+        k=10, filter=Range("price", 4000, 6000))))
+    assert set(ids[ids >= 0].tolist()) == {new_gids[1]}
+
+
+def test_add_without_metadata_on_meta_index_raises():
+    db, q, meta = _corpus(n=100)
+    idx = build_index(jax.random.key(SEED), db, _spec("rpf"), metadata=meta)
+    with pytest.raises(ValueError, match="metadata"):
+        idx.add(db[0])
+    # and a filter on a metadata-less index is a clear error, not a KeyError
+    bare = build_index(jax.random.key(SEED), db, _spec("rpf"))
+    with pytest.raises(ValueError, match="no metadata"):
+        bare.search(q, SearchParams(k=5, filter=Eq("shop", "s0")))
+
+
+# ---------------------------------------------------------------------------
+# capability surface: the ONE violations() definition
+# ---------------------------------------------------------------------------
+
+
+def test_violations_surface():
+    p = SearchParams(k=5, metric="bogus")
+    assert any("metric" in v for v in p.violations())
+    db, q, meta = _corpus(n=100)
+    idx = build_index(jax.random.key(SEED), db, _spec("rpf"), metadata=meta)
+    with pytest.raises(ValueError, match="metric"):
+        idx.search(q, p)
+    bad_filter = SearchParams(k=5, filter="price > 3")
+    assert any("Predicate" in v for v in bad_filter.violations())
+    with pytest.raises(ValueError, match="Predicate"):
+        idx.search(q, bad_filter)
+    # sharded: filter is a listed violation and sharded() strips it
+    fp = SearchParams(k=5, filter=Eq("shop", "s0"))
+    assert any("filter" in v for v in fp.sharded_violations())
+    assert fp.violations() == []
+    assert fp.sharded().filter is None
+    assert fp.sharded().sharded_violations() == []
+
+
+def test_serving_runtime_consults_violations():
+    from repro.serve.runtime import ServingRuntime
+    db, q, meta = _corpus(n=200)
+    idx = build_index(jax.random.key(SEED), db, _spec("rpf"), metadata=meta)
+    with pytest.raises(ValueError, match="metric"):
+        ServingRuntime(idx, params=SearchParams(k=5, metric="bogus"),
+                       warmup=False)
+    # a filter is fine on the host-local runtime
+    rt = ServingRuntime(idx, params=SearchParams(
+        k=5, filter=Eq("shop", "s0")), warmup=False)
+    try:
+        d, ids = rt(q[0])
+        shop = meta["shop"]
+        assert all(shop[g] == "s0" for g in np.asarray(ids) if g >= 0)
+    finally:
+        rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# manifest v5 + read shims
+# ---------------------------------------------------------------------------
+
+
+def _manifest_path(root):
+    return glob.glob(os.path.join(root, "step_*", "manifest.json"))[0]
+
+
+def test_manifest_v5_roundtrip_with_metadata(tmp_path):
+    db, q, meta = _corpus(n=250)
+    idx = build_index(jax.random.key(SEED), db, _spec("rpf"), metadata=meta)
+    idx.delete(3)
+    idx.add(np.abs(db[1]), metadata={"shop": "s1", "price": 12,
+                                     "ts": 2_000_000_000_000_000_000})
+    pred = And(Eq("shop", "s1"), Range("price", 0, 50))
+    p = SearchParams(k=5, filter=pred)
+    d0, i0 = map(np.asarray, idx.search(q, p))
+    path = str(tmp_path / "v5")
+    idx.save(path)
+    with open(_manifest_path(path)) as fh:
+        man = json.load(fh)
+    assert man["extra"]["format"] == 5
+    assert set(man["extra"]["meta_schema"]["columns"]) == set(meta)
+
+    loaded = load_index(path)
+    d1, i1 = map(np.asarray, loaded.search(q, p))
+    assert np.array_equal(i0, i1) and np.array_equal(d0, d1)   # bitwise
+    # int64 timestamp columns survive losslessly (no 32-bit truncation)
+    seg = loaded._view.segments[0]
+    assert seg.meta.column("ts").dtype == np.int64
+    assert int(seg.meta.column("ts").max()) >= 1_700_000_000_000_000_000
+    # tuned filter params survive via to_dict/from_dict
+    assert SearchParams.from_dict(p.to_dict()) == p
+
+
+def test_manifest_v4_shim_drops_metadata(tmp_path):
+    """A manifest rewritten as a v4 writer would have produced it (no
+    meta_schema, no meta leaves in the skeleton) still loads and serves;
+    filtered search then fails with the no-metadata error."""
+    db, q, meta = _corpus(n=200)
+    idx = build_index(jax.random.key(SEED), db, _spec("rpf"), metadata=meta)
+    d0, i0 = map(np.asarray, idx.search(q))
+    path = str(tmp_path / "v4shim")
+    idx.save(path)
+    mp = _manifest_path(path)
+    with open(mp) as fh:
+        man = json.load(fh)
+    man["extra"]["format"] = 4
+    man["extra"].pop("meta_schema")
+    with open(mp, "w") as fh:
+        json.dump(man, fh)
+    legacy = load_index(path)
+    d1, i1 = map(np.asarray, legacy.search(q))
+    assert np.array_equal(i0, i1) and np.array_equal(d0, d1)
+    with pytest.raises(ValueError, match="no metadata"):
+        legacy.search(q, SearchParams(k=5, filter=Eq("shop", "s0")))

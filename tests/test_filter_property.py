@@ -1,0 +1,62 @@
+"""Hypothesis property test for filtered search (DESIGN.md §13).
+
+For ANY corpus, predicate tree and deletion set, on EVERY backend, a
+filtered search must equal the brute force over the matching LIVE rows.
+The deterministic sweep twin (runs without hypothesis) is
+``test_filter.test_filtered_search_random_sweep``.
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.filter import And, Eq, In, Not, Or, Range  # noqa: E402
+from repro.index import SearchParams, build_index  # noqa: E402
+from test_filter import BACKENDS, _match_mask, _oracle, _spec  # noqa: E402
+
+
+def _predicates(max_price):
+    leaf = st.one_of(
+        st.builds(Eq, st.just("cat"),
+                  st.sampled_from(["a", "b", "c", "zzz"])),
+        st.builds(In, st.just("price"),
+                  st.lists(st.integers(0, max_price), min_size=1,
+                           max_size=4).map(tuple)),
+        st.builds(Range, st.just("price"), st.integers(0, max_price // 2),
+                  st.integers(max_price // 2, max_price)),
+    )
+    return st.recursive(
+        leaf,
+        lambda kids: st.one_of(
+            st.builds(lambda a, b: And(a, b), kids, kids),
+            st.builds(lambda a, b: Or(a, b), kids, kids),
+            st.builds(Not, kids)),
+        max_leaves=4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(60, 250), backend=st.sampled_from(BACKENDS),
+       pred=_predicates(30), n_del=st.integers(0, 20),
+       seed=st.integers(0, 2**30))
+def test_filtered_search_property(n, backend, pred, n_del, seed):
+    rng = np.random.default_rng(seed)
+    db = np.abs(rng.normal(size=(n, 8)).astype(np.float32)) + 1e-3
+    db /= np.linalg.norm(db, axis=1, keepdims=True)
+    meta = {"cat": rng.choice(["a", "b", "c"], n),
+            "price": rng.integers(0, 31, n).astype(np.int64)}
+    idx = build_index(jax.random.key(seed % 997), db, _spec(backend),
+                      metadata=meta)
+    dead = rng.choice(n, size=min(n_del, n - 1), replace=False)
+    for g in dead:
+        idx.delete(int(g))
+    q = db[rng.integers(0, n, 4)] + 0.001
+    d, ids = map(np.asarray, idx.search(q, SearchParams(
+        k=5, filter=pred, min_candidates=64)))
+    mask = _match_mask(meta, pred)
+    mask[dead] = False
+    want = _oracle(q, db[mask], np.where(mask)[0], "l2", 5)
+    for r, got_row in enumerate(ids):
+        assert set(int(g) for g in got_row if g >= 0) == want[r]

@@ -77,7 +77,9 @@ def test_manifest_v4_roundtrip(tmp_path, corpus):
     path = str(tmp_path / "v4")
     index.save(path)
     with open(_manifest_path(path)) as fh:
-        assert json.load(fh)["extra"]["format"] == 4
+        man = json.load(fh)
+    assert man["extra"]["format"] == 5
+    assert man["extra"]["meta_schema"] is None   # no metadata attached
 
     loaded = load_index(path)
     # the full v4 payload survives: tuned point, per-shard points, plan
@@ -113,6 +115,7 @@ def test_manifest_v3_v2_read_shims(tmp_path, corpus, fmt):
     with open(mp) as fh:
         man = json.load(fh)
     man["extra"]["format"] = fmt
+    man["extra"].pop("meta_schema")
     man["extra"].pop("shard_params")
     man["extra"].pop("serving_plan")
     if fmt == 2:

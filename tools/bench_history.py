@@ -56,6 +56,9 @@ SOURCES = [
      ["p99_ms_at_rated_qps", "rated_qps", "slo_p99_ms", "recall_at_rated",
       "recall_target", "slo_ok", "recall_ok", "overload_bounded",
       "shed_nonzero", "ladder_no_worse", "shed_steps"]),
+    ("filtered_search", "BENCH_filtered_search.json",
+     ["worst_recall", "recall_001_ok", "recall_all_ok", "no_leaks",
+      "n_db", "k"]),
 ]
 
 # (section, metric, direction); a move beyond --max-regress against the
@@ -145,6 +148,21 @@ def check_gates(history: list[dict], point: dict, max_regress: float,
                                  "degradation ladder never engaged")):
             if sv.get(flag) is False:
                 errors.append(f"serving_slo.{flag} is False: {why}")
+    fs = point.get("filtered_search", {})
+    if fs:
+        # hard filtered-search gates (DESIGN.md §13): the acceptance
+        # criterion (recall@10 >= 0.9 at selectivity 0.01 on all four
+        # backends), the 0.85 all-cells floor, and the contract that a
+        # predicate-failing row is never returned
+        for flag, why in (
+                ("recall_001_ok", "recall@10 at selectivity 0.01 fell "
+                                  "below 0.9 on some backend"),
+                ("recall_all_ok", "a filtered cell fell below the 0.85 "
+                                  "recall floor"),
+                ("no_leaks", "filtered search returned a row that fails "
+                             "the predicate")):
+            if fs.get(flag) is False:
+                errors.append(f"filtered_search.{flag} is False: {why}")
     recent = history[-window:]
     for section, metric, direction in GATES:
         new = point.get(section, {}).get(metric)
@@ -198,7 +216,7 @@ def main(argv: list[str]) -> int:
     print(f"bench history: {len(history)} point(s) -> "
           f"{os.path.relpath(args.out)}")
     for key in ("build_time", "recall_frontier", "million_row",
-                "serving_slo"):
+                "serving_slo", "filtered_search"):
         if key in point:
             print(f"  {key}: {point[key]}")
     for e in errors:
