@@ -1,0 +1,192 @@
+"""Per-query probe scheduling benchmark (core/schedule.py, DESIGN.md §14).
+
+The fixed multi-probe budget charges every query the price of the hardest
+one; the per-query scheduler (``SearchParams.probe_schedule``) lets easy
+queries stop at the width where their top-k stops moving.  This benchmark
+measures that trade on mixed ANN serving traffic over the MNIST-statistics
+corpus:
+
+  * corpus — ``mnist_like`` rows plus planted micro-clusters of
+    near-duplicate rows (duplicated images, the classic easy case: a
+    lookup's whole top-k sits in one leaf),
+  * traffic — a majority of near-duplicate lookups (easy) blended with
+    held-out queries (hard), the skew the scheduler exists for,
+  * baseline — the smallest fixed ``n_probes`` reaching the recall
+    target on this traffic (the operating point a fixed-budget operator
+    would tune to),
+  * scheduled — ``probe_schedule`` capped at that same budget.
+
+Headline numbers (the CI acceptance gate, checked in
+tools/bench_history.py):
+  * ``recall_ok``           — scheduled recall@10 >= 0.9,
+  * ``probes_below_fixed``  — mean probes PROCESSED per scheduled query
+    (cumulative over re-descent rounds — the honest compute charge, the
+    same number ``tune()`` cost-models) strictly below the fixed budget,
+  * ``p99_ok``              — scheduled batch p99 latency <= 1.1x fixed,
+  * ``p99_ratio``           — scheduled/fixed batch p99 (the lower-is-
+    better history series).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.probe_schedule [--smoke]
+
+Writes artifacts/BENCH_probe_schedule.json and merges into
+artifacts/bench_results.json.  docs/TUNING.md's "Scheduling probes per
+query" entry walks this output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import ForestConfig, exact_knn, recall_at_k
+from repro.core.schedule import probe_widths
+from repro.data.synthetic import mnist_like
+from repro.index import IndexSpec, SearchParams, build_index
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_probe_schedule.json")
+
+RECALL_FLOOR = 0.9        # the CI acceptance gate (ISSUE 9)
+P99_REGRESSION_CAP = 1.1  # scheduled p99 may not exceed 1.1x fixed
+
+
+def _mixed_corpus(n_base: int, n_clusters: int, dup: int, n_easy: int,
+                  n_hard: int, seed: int):
+    """MNIST-statistics rows + planted near-duplicate micro-clusters, and
+    a query blend of micro-cluster lookups (easy) + held-out (hard)."""
+    base, _, test_q, _ = mnist_like(n=n_base, n_test=max(n_hard, 8),
+                                    seed=seed)
+    rng = np.random.default_rng(seed + 2)
+    centers = base[rng.choice(n_base, n_clusters, replace=False)]
+    dups = (np.repeat(centers, dup, 0)
+            + 1e-3 * rng.normal(size=(n_clusters * dup, base.shape[1]))
+            ).astype(np.float32)
+    db = np.concatenate([base, dups])
+    easy = (centers[:n_easy]
+            + 1e-3 * rng.normal(size=(n_easy, base.shape[1]))
+            ).astype(np.float32)
+    queries = np.concatenate([easy, test_q[:n_hard]]).astype(np.float32)
+    return db, queries
+
+
+def _batch_p99_ms(index, q, params, iters: int, reps: int = 3) -> float:
+    """p99 over jit-warm full-batch search latencies; best of `reps`
+    measurement blocks (the repo's reduce="min" idiom — scheduler noise
+    only ever inflates a tail percentile)."""
+    for _ in range(2):     # warm every (bucket, width) jit variant
+        jax.block_until_ready(index.search(q, params))
+    p99s = []
+    for _ in range(reps):
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(index.search(q, params))
+            times.append(time.perf_counter() - t0)
+        p99s.append(np.percentile(times, 99))
+    return float(min(p99s) * 1e3)
+
+
+def run(n_base: int, n_clusters: int, dup: int, n_easy: int, n_hard: int,
+        k: int, target: float, tol: float, iters: int) -> dict:
+    db, queries = _mixed_corpus(n_base, n_clusters, dup, n_easy, n_hard,
+                                seed=0)
+    print(f"  corpus: mnist-statistics n={db.shape[0]} d={db.shape[1]} "
+          f"({n_clusters} micro-clusters x{dup}) "
+          f"traffic B={queries.shape[0]} ({n_easy} easy + {n_hard} hard)")
+    _, true_ids = exact_knn(jnp.asarray(queries), jnp.asarray(db), k=k)
+
+    cfg = ForestConfig(n_trees=16, capacity=24, split_ratio=0.3)
+    index = build_index(jax.random.key(0), db,
+                        IndexSpec(backend="rpf", forest=cfg))
+
+    # fixed-budget baseline: the smallest n_probes reaching the target on
+    # this traffic — what a fixed-budget operator would tune to
+    frontier = []
+    fixed_probes = None
+    for p in (1, 2, 4, 6, 8, 12, 16):
+        _, ids = index.search(queries, SearchParams(k=k, n_probes=p))
+        rec = float(recall_at_k(ids, true_ids))
+        frontier.append(dict(n_probes=p, recall=round(rec, 4)))
+        print(f"  fixed n_probes={p:2d}: recall@{k}={rec:.3f}")
+        if rec >= target and fixed_probes is None:
+            fixed_probes = p
+    if fixed_probes is None:
+        raise RuntimeError(f"no fixed budget reaches recall {target}")
+    fixed_params = SearchParams(k=k, n_probes=fixed_probes)
+    _, ids = index.search(queries, fixed_params)
+    recall_fixed = float(recall_at_k(ids, true_ids))
+
+    # scheduled: same cap, per-query convergence gate
+    sched_params = SearchParams(k=k, probe_schedule=fixed_probes, tol=tol)
+    _, ids = index.search(queries, sched_params)
+    recall_sched = float(recall_at_k(ids, true_ids))
+    mean_probes = float(index.last_mean_probes)
+
+    p99_fixed = _batch_p99_ms(index, queries, fixed_params, iters)
+    p99_sched = _batch_p99_ms(index, queries, sched_params, iters)
+    p99_ratio = p99_sched / p99_fixed
+
+    print(f"  fixed  n_probes={fixed_probes}: recall={recall_fixed:.3f} "
+          f"p99={p99_fixed:.1f}ms")
+    print(f"  sched  cap={fixed_probes} tol={tol}: recall={recall_sched:.3f} "
+          f"mean_probes={mean_probes:.2f} p99={p99_sched:.1f}ms "
+          f"ratio={p99_ratio:.2f}")
+
+    return dict(
+        n=int(db.shape[0]), d=int(db.shape[1]), k=k,
+        n_easy=n_easy, n_hard=n_hard, target_recall=target, tol=tol,
+        frontier=frontier,
+        fixed_n_probes=fixed_probes, recall_fixed=round(recall_fixed, 4),
+        recall_scheduled=round(recall_sched, 4),
+        mean_probes_scheduled=round(mean_probes, 3),
+        max_probes_budget=sum(probe_widths(fixed_probes)),
+        p99_fixed_ms=round(p99_fixed, 2),
+        p99_scheduled_ms=round(p99_sched, 2),
+        p99_ratio=round(p99_ratio, 3),
+        recall_ok=bool(recall_sched >= RECALL_FLOOR),
+        probes_below_fixed=bool(mean_probes < fixed_probes),
+        p99_ok=bool(p99_ratio <= P99_REGRESSION_CAP),
+    )
+
+
+def main(smoke: bool = False, k: int = 10, target: float = 0.98,
+         tol: float = 0.01) -> dict:
+    print(f"[probe_schedule] smoke={smoke}")
+    if smoke:
+        # B=128: large enough that per-round probe work dominates the
+        # scheduler's per-round dispatch overhead (tiny batches hide the
+        # win behind fixed per-round cost, especially on CPU)
+        out = run(n_base=4000, n_clusters=96, dup=12, n_easy=96, n_hard=32,
+                  k=k, target=target, tol=tol, iters=20)
+    else:
+        out = run(n_base=20000, n_clusters=128, dup=12, n_easy=128,
+                  n_hard=64, k=k, target=target, tol=tol, iters=50)
+    out.update(smoke=smoke, backend=jax.default_backend())
+
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    record({}, "probe_schedule", out)
+    print(f"  -> {os.path.relpath(ARTIFACT)} "
+          f"recall_ok={out['recall_ok']} "
+          f"probes_below_fixed={out['probes_below_fixed']} "
+          f"p99_ok={out['p99_ok']}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--target-recall", type=float, default=0.98)
+    ap.add_argument("--tol", type=float, default=0.01)
+    args = ap.parse_args()
+    main(smoke=args.smoke, k=args.k, target=args.target_recall,
+         tol=args.tol)

@@ -12,9 +12,9 @@ import sys
 import time
 
 from benchmarks import (build_time, fig4_mnist, fig5_iss, filtered_search,
-                        fused_vs_staged, million_row, recall_frontier,
-                        retrieval_compare, roofline_table, serving_slo,
-                        speedup_table, tree_stats)
+                        fused_vs_staged, million_row, probe_schedule,
+                        recall_frontier, retrieval_compare, roofline_table,
+                        serving_slo, speedup_table, tree_stats)
 from benchmarks.common import csv_row, record
 
 
@@ -24,7 +24,8 @@ def main() -> None:
                    help="full N=60000/250736 runs (slow on CPU)")
     p.add_argument("--only", default="",
                    help="comma list: fig4,fig5,speedup,tree,retrieval,"
-                        "fused,frontier,build,roof,million,serving")
+                        "fused,frontier,build,roof,million,serving,"
+                        "filtered,schedule")
     args = p.parse_args()
     fast = not args.paper_scale
     only = set(args.only.split(",")) if args.only else None
@@ -128,6 +129,17 @@ def main() -> None:
             f";recall={worst['recall']:.3f}"
             f";gate001={r['recall_001_ok']};all={r['recall_all_ok']}"
             f";no_leaks={r['no_leaks']}"))
+    if want("schedule"):
+        r = probe_schedule.main(smoke=fast)
+        record(results, "probe_schedule", r)
+        rows.append(csv_row(
+            "probe_schedule", r["p99_scheduled_ms"] * 1e3,
+            f"mean_probes={r['mean_probes_scheduled']}"
+            f"/fixed={r['fixed_n_probes']}"
+            f";recall={r['recall_scheduled']:.3f}"
+            f";p99_ratio={r['p99_ratio']}"
+            f";gates={r['recall_ok']}/{r['probes_below_fixed']}"
+            f"/{r['p99_ok']}"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

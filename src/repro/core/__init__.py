@@ -4,6 +4,7 @@ from repro.core.forest import (Forest, ForestConfig, build_forest,
                                query_forest, traverse, traverse_multiprobe)
 from repro.core.knn import exact_knn
 from repro.core.pipeline import fused_query, rerank_fused, staged_query
+from repro.core.schedule import probe_widths, scheduled_query
 from repro.core.search import (mask_duplicates, merge_topk_pairs, recall_at_k,
                                rerank_topk)
 
@@ -13,4 +14,5 @@ __all__ = [
     "traverse_multiprobe", "exact_knn", "mask_duplicates",
     "merge_topk_pairs", "recall_at_k", "rerank_topk",
     "fused_query", "rerank_fused", "staged_query",
+    "probe_widths", "scheduled_query",
 ]

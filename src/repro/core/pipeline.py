@@ -25,6 +25,12 @@ the int8 shortlist — derive their chunk width and batch-slab height from
 the SAME helpers (``pick_rerank_chunk`` / ``pick_rows_budget``), so the
 two paths cannot disagree on slab shape.
 
+``core.schedule.scheduled_query`` layers per-query probe scheduling on top
+of this module (DESIGN.md §14): it calls ``fused_query`` once per doubling
+probe width on a shrinking active-query batch, so everything here — chunk
+streaming, both rerank sources, the validity mask — composes with the
+schedule unchanged.
+
 The staged path stays available as ``staged_query`` — it is the oracle the
 fused path is tested against, never a dispatch target.  Likewise the int8
 coarse stage's jnp dequant-gather now lives only in

@@ -183,6 +183,12 @@ class Index:
         self._tuned_params: SearchParams | None = None
         self._shard_params: tuple[SearchParams, ...] | None = None
         self._serving_plan: dict | None = None
+        # what the last tune() saw (sample queries + kwargs + live-row
+        # count), session-local: compact() retunes from it when the live
+        # set has drifted past the staleness threshold (DESIGN.md §14)
+        self._tune_ctx: dict | None = None
+        self._tuned_n_live = 0
+        self._n_retunes = 0
         self._meta_store = meta_store
         self._segments = list(segments)
         self._delta = DeltaBuffer(self._d, meta_store=meta_store)
@@ -265,6 +271,7 @@ class Index:
                 "n_segments": len(segments),
                 "n_seals": self._n_seals,
                 "n_compactions": self._n_compactions,
+                "n_retunes": self._n_retunes,
                 "compaction_in_progress": self._compacting,
                 "metadata_columns": (sorted(self._meta_store.columns)
                                      if self._meta_store is not None else []),
@@ -506,6 +513,12 @@ class Index:
         The rebuild itself rides the batched cross-tree forest builder
         (DESIGN.md §10), so compaction cost scales like one fast build,
         not L tree builds.
+
+        Tuner-aware: when the index was tuned and the live-row count has
+        since drifted past the staleness threshold, the swap is followed
+        by a retune from the recorded tuning context, so the compacted
+        index never keeps serving a pre-churn operating point
+        (:meth:`_maybe_retune`, counted in ``stats()['n_retunes']``).
         """
         with self._lock:
             if self._compacting:
@@ -563,17 +576,48 @@ class Index:
                         self._segments = newer
                     self._n_compactions += 1
                     self._publish_locked()
-                    return {"n_rows": int(rows.shape[0]),
-                            "n_segments_in": len(snap),
-                            "n_segments_out": len(self._segments)}
+                    stats = {"n_rows": int(rows.shape[0]),
+                             "n_segments_in": len(snap),
+                             "n_segments_out": len(self._segments)}
             finally:
                 self._compacting = False
+            # retune (if stale) only after the swap is published and the
+            # compaction flag dropped: the tuner searches the index, and a
+            # concurrent compact() must not be blocked by it
+            self._maybe_retune()
+            return stats
 
         if block:
             return _rebuild()
         t = threading.Thread(target=_rebuild, daemon=True)
         t.start()
         return t
+
+    # staleness threshold: retune when the live-row count has drifted by
+    # more than this fraction since the operating point was tuned
+    _RETUNE_STALENESS = 0.25
+
+    def _maybe_retune(self) -> None:
+        """Close the stale-tune gap: after compaction, refresh the tuned
+        operating point when the live set no longer resembles the one the
+        last ``tune()`` measured.
+
+        A tuned probe budget is a statement about a specific corpus; heavy
+        churn (deletes halving the index, bulk adds doubling it) silently
+        invalidates it, and before this hook ``compact()`` kept serving the
+        pre-churn ``tuned_params``.  Requires a recorded tuning context
+        (``tune()`` ran in this session — the context is session-local, it
+        does not ride the manifest); retunes with the same sample queries
+        and kwargs, so the refreshed point answers the same recall target.
+        """
+        ctx, tuned_n = self._tune_ctx, self._tuned_n_live
+        if ctx is None or tuned_n <= 0:
+            return
+        if abs(self.n_rows - tuned_n) / tuned_n < self._RETUNE_STALENESS:
+            return
+        from repro.index.tune import tune_report   # deferred: avoids a cycle
+        tune_report(self, ctx["queries"], **ctx["kwargs"])
+        self._n_retunes += 1
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> str:

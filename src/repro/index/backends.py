@@ -11,8 +11,10 @@ materializes on any of them:
                backend: what the others are measured against)
 
 ``SearchParams.adaptive_wave`` composes with both rpf backends (early-exit
-wave scheduling, core/adaptive.py); ``expand`` tunes the int8 shortlist;
-``n_probes``/``n_trees`` walk the probes-vs-trees frontier (DESIGN.md §9).
+wave scheduling, core/adaptive.py), as does ``probe_schedule`` (per-query
+convergence-gated probe widening, core/schedule.py — DESIGN.md §14);
+``expand`` tunes the int8 shortlist; ``n_probes``/``n_trees`` walk the
+probes-vs-trees frontier (DESIGN.md §9).
 Knobs that do not apply to a backend are inert (lsh-cascade and bruteforce
 ignore the forest-only knobs), so one tuned ``SearchParams`` can be carried
 across backends safely.
@@ -40,6 +42,7 @@ from repro.core.forest import Forest, ForestConfig, build_forest
 from repro.core.lsh import CascadedLSH
 from repro.core.pipeline import fused_query, rerank_fused
 from repro.core.quantized import QuantizedDB, quantize_db
+from repro.core.schedule import scheduled_query
 from repro.index.api import Index, register_backend
 from repro.index.params import IndexSpec, SearchParams
 from repro.index.segments import brute_force_topk
@@ -67,7 +70,11 @@ class RPFEngine:
     leaves, ``params.n_trees`` restricts the query to a prefix of the
     built forest (trees are independent, so any prefix is a valid smaller
     forest — the prefix sub-pytree is cached per width), and
-    ``params.adaptive_wave`` composes with both.
+    ``params.adaptive_wave`` composes with both.  ``params.probe_schedule``
+    replaces the fixed probe budget with the per-query convergence-gated
+    widening of ``core.schedule`` (DESIGN.md §14); the probes each query
+    actually consumed land in ``last_mean_probes`` for the tuner's
+    measured-cost discount.
     """
 
     def __init__(self, spec: IndexSpec, key: jax.Array, rows: np.ndarray):
@@ -77,6 +84,7 @@ class RPFEngine:
         self.forest = build_forest(key, self.db_dev, spec.forest,
                                    tree_chunk=spec.tree_chunk)
         self.last_trees_used = spec.forest.n_trees
+        self.last_mean_probes = 0.0
         self._prefix_cache: dict[int, Forest] = {}
 
     def _rerank_source(self) -> jax.Array | QuantizedDB:
@@ -98,6 +106,17 @@ class RPFEngine:
                ) -> tuple[jax.Array, jax.Array]:
         src = self._rerank_source()
         forest, cfg = self._forest_prefix(params.n_trees)
+        if params.probe_schedule > 0:
+            # per-query convergence-gated probe widening (DESIGN.md §14);
+            # violations() rejects the adaptive_wave combination upstream
+            d, i, _, processed = scheduled_query(
+                forest, q, src, params.k, cfg, cap=params.probe_schedule,
+                tol=params.tol, metric=params.metric, mode=params.mode,
+                chunk=params.chunk, expand=params.expand,
+                dedup=params.dedup, valid=valid)
+            self.last_trees_used = cfg.n_trees
+            self.last_mean_probes = float(processed.mean())
+            return d, i
         if params.adaptive_wave > 0:
             d, i, used = adaptive_query(
                 forest, q, src, params.k, cfg,
@@ -106,8 +125,10 @@ class RPFEngine:
                 expand=params.expand, dedup=params.dedup,
                 n_probes=params.n_probes, valid=valid)
             self.last_trees_used = used
+            self.last_mean_probes = float(params.n_probes)
             return d, i
         self.last_trees_used = cfg.n_trees
+        self.last_mean_probes = float(params.n_probes)
         return fused_query(forest, q, src, params.k, cfg,
                            metric=params.metric, dedup=params.dedup,
                            mode=params.mode, chunk=params.chunk,
@@ -132,6 +153,7 @@ class RPFEngine:
         obj.db_dev = jnp.asarray(obj.db)
         obj.forest = state["forest"]
         obj.last_trees_used = spec.forest.n_trees
+        obj.last_mean_probes = 0.0
         obj._prefix_cache = {}
         return obj
 
@@ -259,6 +281,13 @@ class RPFIndex(Index):
     @property
     def last_trees_used(self) -> int:
         return self._primary_engine.last_trees_used
+
+    @property
+    def last_mean_probes(self) -> float:
+        """Mean probes per query the primary engine processed on its last
+        search (the scheduled path's honest cumulative charge; equals
+        ``params.n_probes`` on the fixed-budget paths)."""
+        return self._primary_engine.last_mean_probes
 
     def _extra_stats(self) -> dict:
         return {"n_trees": self.spec.forest.n_trees}

@@ -40,6 +40,16 @@ class SearchParams:
                    the pre-multi-probe path); >1 adds the smallest-margin
                    alternate branches, trading one tree's memory for many
                    trees' recall
+    probe_schedule rpf backends: >0 schedules probes PER QUERY up to this
+                   cap (DESIGN.md §14) — every query starts at one probe
+                   and is re-descended at doubling widths while its k-th
+                   distance still improves by more than ``tol`` per round;
+                   ``n_probes`` is ignored on that path (the schedule owns
+                   the probe axis).  0 = the fixed budget above.  Does not
+                   compose with ``adaptive_wave`` (both consume the same
+                   convergence signal — :meth:`violations` rejects the
+                   pair) and is host-scheduled, so the sharded path
+                   rejects it (``sharded_violations``)
     n_trees        rpf backends: query only the first ``n_trees`` trees of
                    the built forest (0 = all).  Any prefix of the forest
                    is itself a valid smaller forest (the trees are
@@ -68,6 +78,7 @@ class SearchParams:
     min_candidates: int = 1
     n_probes: int = 1
     n_trees: int = 0
+    probe_schedule: int = 0
     filter: Any = None
 
     def __post_init__(self):
@@ -79,6 +90,9 @@ class SearchParams:
             raise ValueError(f"n_probes must be >= 1, got {self.n_probes}")
         if self.n_trees < 0:
             raise ValueError(f"n_trees must be >= 0, got {self.n_trees}")
+        if self.probe_schedule < 0:
+            raise ValueError(f"probe_schedule must be >= 0, got "
+                             f"{self.probe_schedule}")
         # alias-resolve the metric ("ip" -> "dot"); unknown names survive
         # construction and are reported by violations() — every search
         # path checks it, so they fail with a capability message, not a
@@ -99,6 +113,13 @@ class SearchParams:
         if self.metric not in METRICS:
             known = sorted(set(METRICS) | set(METRIC_ALIASES))
             bad.append(f"metric={self.metric!r} (known: {known})")
+        if self.probe_schedule and self.adaptive_wave:
+            # both knobs consume the same k-th-distance convergence signal
+            # (per query across probe rounds vs batch-mean across tree
+            # waves); composing them would double-count it
+            bad.append(f"probe_schedule={self.probe_schedule} with "
+                       f"adaptive_wave={self.adaptive_wave} (pick one "
+                       f"convergence-gated axis)")
         if self.filter is not None:
             from repro.filter.predicate import Predicate
             if not isinstance(self.filter, Predicate):
@@ -111,11 +132,13 @@ class SearchParams:
         (a superset of :meth:`violations` — sharded serving adds limits).
 
         ``core.sharded_index.make_query_fn`` serves only the per-cell knobs
-        (k/metric/dedup/mode/chunk/n_probes): adaptive waves and the lsh
-        cascade don't compose with the cell-local rerank + tiny top-k merge,
-        trees are a build-time shard property (a search-time ``n_trees``
-        restriction is meaningless there), and metadata filters need the
-        host-side bitmap compiler, which the SPMD hot loop has no seam for.
+        (k/metric/dedup/mode/chunk/n_probes): adaptive waves, the per-query
+        probe schedule and the lsh cascade don't compose with the cell-local
+        rerank + tiny top-k merge (the first two are host-side convergence
+        loops with data-dependent round counts), trees are a build-time
+        shard property (a search-time ``n_trees`` restriction is
+        meaningless there), and metadata filters need the host-side bitmap
+        compiler, which the SPMD hot loop has no seam for.
         ``make_query_fn`` REJECTS such params; this lists what it would
         reject (empty = the params are sharded-legal), and :meth:`sharded`
         strips exactly the same set — one definition, so accept and reject
@@ -128,6 +151,10 @@ class SearchParams:
             bad.append(f"min_candidates={self.min_candidates}")
         if self.n_trees:
             bad.append(f"n_trees={self.n_trees}")
+        if self.probe_schedule:
+            # the active-set shrink is host-scheduled (data-dependent round
+            # count); the SPMD hot loop traces one fixed program
+            bad.append(f"probe_schedule={self.probe_schedule}")
         if self.filter is not None:
             bad.append("filter=<predicate> (filtered search is host-local)")
         return bad
@@ -137,13 +164,13 @@ class SearchParams:
 
         Neutralizes exactly the knobs :meth:`sharded_violations` names
         (``adaptive_wave=0``, ``min_candidates=1``, ``n_trees=0``,
-        ``filter=None``); the result always passes ``make_query_fn``'s
-        params check.  The serving runtime uses this to project a
+        ``probe_schedule=0``, ``filter=None``); the result always passes
+        ``make_query_fn``'s params check.  The serving runtime uses this to project a
         host-tuned operating point onto the mesh instead of crashing on
         it — and counts the downgrade.
         """
         return dataclasses.replace(self, adaptive_wave=0, min_candidates=1,
-                                   n_trees=0, filter=None)
+                                   n_trees=0, probe_schedule=0, filter=None)
 
     def to_dict(self) -> dict[str, Any]:
         """JSON-ready dict (the manifest-v3 ``tuned_params`` payload);

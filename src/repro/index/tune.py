@@ -29,7 +29,9 @@ the fused rerank's HBM traffic is linear in (DESIGN.md §4).  For the rpf
 backends that is ``trees_used * n_probes * leaf_pad`` (int8 backends pay a
 quarter of it at the coarse stage plus ``expand * k`` exact rows); for
 lsh-cascade it is the measured mean candidate count.  Adaptive entries are
-charged for the trees they actually used on the sample.
+charged for the trees they actually used on the sample; scheduled entries
+(``probe_schedule`` — DESIGN.md §14) for the mean probes they actually
+processed.
 """
 from __future__ import annotations
 
@@ -60,7 +62,9 @@ def _tree_grid(n_trees: int, tree_fracs: Sequence[float]) -> list[int]:
 def _candidate_grid(index, k: int, metric: str, mode: str,
                     probe_grid: Sequence[int], tree_fracs: Sequence[float],
                     adaptive_waves: Sequence[int],
-                    expand_grid: Sequence[int]) -> list[SearchParams]:
+                    expand_grid: Sequence[int],
+                    schedule_grid: Sequence[int] = (0,)
+                    ) -> list[SearchParams]:
     """Backend-specific search grid, deterministic order."""
     backend = getattr(index, "backend", "")
     base = dict(k=k, metric=metric, mode=mode)
@@ -87,6 +91,17 @@ def _candidate_grid(index, k: int, metric: str, mode: str,
                     grid.append(SearchParams(
                         **base, n_trees=0 if t == total else t,
                         n_probes=p, adaptive_wave=w, expand=e))
+        # scheduled entries (DESIGN.md §14) ride the tree axis but own the
+        # probe axis themselves (n_probes is inert under a schedule); the
+        # default schedule_grid=(0,) adds nothing, keeping the historical
+        # grid — and the determinism pin — unchanged
+        for s in sorted(set(schedule_grid)):
+            if s < 1:
+                continue
+            for e in expands:
+                grid.append(SearchParams(
+                    **base, n_trees=0 if t == total else t,
+                    probe_schedule=s, expand=e))
     return grid
 
 
@@ -99,7 +114,15 @@ def _static_cost(index, params: SearchParams, k: int) -> float:
         return float(params.min_candidates)
     cfg = index.spec.forest.resolved(max(index.n_rows, 2))
     trees = params.n_trees or index.spec.forest.n_trees
-    rows = trees * params.n_probes * cfg.leaf_pad
+    if params.probe_schedule:
+        # a never-converging query is re-descended at every width of the
+        # doubling schedule, so the honest upper bound is their sum
+        # (~2x the cap), not the cap itself
+        from repro.core.schedule import probe_widths
+        probes = sum(probe_widths(params.probe_schedule))
+    else:
+        probes = params.n_probes
+    rows = trees * probes * cfg.leaf_pad
     if backend == "rpf+int8":
         return 0.25 * rows + params.expand * k
     return float(rows)
@@ -112,12 +135,14 @@ def _single_segment(index) -> bool:
 
 def _measured_cost(index, params: SearchParams, k: int) -> float:
     """Like _static_cost but charging adaptive entries for the trees they
-    actually used (``engine.last_trees_used``) on the sample queries.
+    actually used (``engine.last_trees_used``) and scheduled entries for
+    the probes they actually processed (``engine.last_mean_probes``) on
+    the sample queries.
 
-    The adaptive discount applies only to single-segment indexes:
-    ``last_trees_used`` reflects the primary segment's engine, and on a
-    mutated (multi-segment) index every segment early-exits independently,
-    so the static upper bound is the honest charge there.
+    Both discounts apply only to single-segment indexes: the counters
+    reflect the primary segment's engine, and on a mutated (multi-segment)
+    index every segment converges independently, so the static upper bound
+    is the honest charge there.
     """
     backend = getattr(index, "backend", "")
     if backend == "lsh-cascade":
@@ -132,6 +157,16 @@ def _measured_cost(index, params: SearchParams, k: int) -> float:
         if backend == "rpf+int8":
             return 0.25 * rows + params.expand * k
         return float(rows)
+    if backend in ("rpf", "rpf+int8") and params.probe_schedule \
+            and _single_segment(index):
+        cfg = index.spec.forest.resolved(max(index.n_rows, 2))
+        trees = params.n_trees or index.spec.forest.n_trees
+        probes = float(getattr(index, "last_mean_probes", 0.0)) or \
+            float(params.probe_schedule)
+        rows = trees * probes * cfg.leaf_pad
+        if backend == "rpf+int8":
+            return 0.25 * rows + params.expand * k
+        return float(rows)
     return _static_cost(index, params, k)
 
 
@@ -141,6 +176,7 @@ def tune_report(index, queries, target_recall: float = 0.95, k: int = 10,
                 tree_fracs: Iterable[float] = (0.25, 0.5, 1.0),
                 adaptive_waves: Iterable[int] = (0,),
                 expand_grid: Iterable[int] = (2, 4),
+                schedule_grid: Iterable[int] = (0,),
                 persist: bool = True
                 ) -> tuple[SearchParams, list[dict]]:
     """``tune`` returning ``(params, report)`` — one report row per grid
@@ -158,7 +194,7 @@ def tune_report(index, queries, target_recall: float = 0.95, k: int = 10,
 
     grid = _candidate_grid(index, k, metric, mode, tuple(probe_grid),
                            tuple(tree_fracs), tuple(adaptive_waves),
-                           tuple(expand_grid))
+                           tuple(expand_grid), tuple(schedule_grid))
     if not grid:
         raise ValueError(
             "tuner grid is empty — probe_grid/tree_fracs/adaptive_waves "
@@ -167,16 +203,17 @@ def tune_report(index, queries, target_recall: float = 0.95, k: int = 10,
             f"(L={getattr(index.spec.forest, 'n_trees', '?')})")
     grid.sort(key=lambda p: (_static_cost(index, p, k), p.n_probes,
                              p.n_trees, p.expand, p.adaptive_wave,
-                             p.min_candidates))
+                             p.probe_schedule, p.min_candidates))
 
     report: list[dict] = []
     best: tuple[float, SearchParams] | None = None       # (cost, params)
     fallback: tuple[float, float, SearchParams] | None = None
     for params in grid:
         if best is not None and _static_cost(index, params, k) >= best[0] \
-                and not params.adaptive_wave:
+                and not params.adaptive_wave and not params.probe_schedule:
             # static cost is an upper bound on measured cost only for
-            # non-adaptive entries; those can never beat the incumbent
+            # non-adaptive, non-scheduled entries; those can never beat
+            # the incumbent
             continue
         _, ids = index.search(queries, params)
         rec = _recall(np.asarray(ids), true_ids)
@@ -191,6 +228,19 @@ def tune_report(index, queries, target_recall: float = 0.95, k: int = 10,
     chosen = best[1] if best is not None else fallback[2]
     if persist:
         index.tuned_params = chosen
+        # remember what this tune saw, so compact() can detect a stale
+        # operating point after heavy churn and retune with the same
+        # arguments (DESIGN.md §14; session-local, not in the manifest)
+        index._tune_ctx = {
+            "queries": np.asarray(queries),
+            "kwargs": dict(target_recall=target_recall, k=k, metric=metric,
+                           mode=mode, probe_grid=tuple(probe_grid),
+                           tree_fracs=tuple(tree_fracs),
+                           adaptive_waves=tuple(adaptive_waves),
+                           expand_grid=tuple(expand_grid),
+                           schedule_grid=tuple(schedule_grid)),
+        }
+        index._tuned_n_live = index.n_rows
     return chosen, report
 
 
@@ -200,6 +250,7 @@ def tune(index, queries, target_recall: float = 0.95, k: int = 10,
          tree_fracs: Iterable[float] = (0.25, 0.5, 1.0),
          adaptive_waves: Iterable[int] = (0,),
          expand_grid: Iterable[int] = (2, 4),
+         schedule_grid: Iterable[int] = (0,),
          persist: bool = True) -> SearchParams:
     """Find the cheapest ``SearchParams`` meeting ``target_recall``.
 
@@ -209,7 +260,9 @@ def tune(index, queries, target_recall: float = 0.95, k: int = 10,
 
     * ``rpf`` / ``rpf+int8`` — ``n_trees`` x ``n_probes`` (the
       probes-vs-trees frontier of DESIGN.md §9), optionally early-exit
-      waves (``adaptive_waves``, 0 = off) and, for the int8 backend, the
+      waves (``adaptive_waves``, 0 = off), per-query probe schedules
+      (``schedule_grid`` of caps, 0 = off — DESIGN.md §14, charged their
+      measured mean probes processed) and, for the int8 backend, the
       shortlist width ``expand_grid``;
     * ``lsh-cascade`` — the cascade stop threshold ``min_candidates``;
     * ``bruteforce`` — nothing to tune (always exact).
@@ -227,7 +280,8 @@ def tune(index, queries, target_recall: float = 0.95, k: int = 10,
                             k=k, metric=metric, mode=mode,
                             probe_grid=probe_grid, tree_fracs=tree_fracs,
                             adaptive_waves=adaptive_waves,
-                            expand_grid=expand_grid, persist=persist)
+                            expand_grid=expand_grid,
+                            schedule_grid=schedule_grid, persist=persist)
     return params
 
 

@@ -45,7 +45,14 @@ __all__ = ["ServingRuntime", "build_ladder", "uniform_shard_params"]
 def _ladder_cost(p: SearchParams, total_trees: int) -> float:
     """Relative cost of a rung: candidate rows/query (tuner cost units)."""
     trees = p.n_trees or total_trees
-    cost = float(trees * p.n_probes)
+    if p.probe_schedule:
+        # per-query scheduling (DESIGN.md §14): the cap bounds the final
+        # width, but most queries converge well below it — charge an
+        # empirical ~0.6 of the cap (the tuner's measured mean replaces
+        # this estimate once tune() has run with a schedule_grid)
+        cost = float(trees * p.probe_schedule) * 0.6
+    else:
+        cost = float(trees * p.n_probes)
     if p.adaptive_wave:
         # early exit can only reduce trees actually visited
         cost *= 0.75
@@ -56,15 +63,22 @@ def build_ladder(params: SearchParams, total_trees: int,
                  max_rungs: int = 6) -> tuple[SearchParams, ...]:
     """Degradation ladder: rung 0 = the tuned point, then strictly cheaper.
 
-    Policy: halve ``n_probes`` to 1 first (multi-probe buys recall cheaply,
-    so it is also the cheapest recall to give back — DESIGN.md §9), then
-    halve the trees queried (``n_trees``; skipped when the base point has
+    Policy: halve the probe axis to 1 first (multi-probe buys recall
+    cheaply, so it is also the cheapest recall to give back — DESIGN.md
+    §9); on a scheduled base point that axis is the ``probe_schedule`` cap
+    (the rungs keep the per-query convergence gate, a cap of 1 degenerates
+    to the single descent), otherwise the fixed ``n_probes``.  Then halve
+    the trees queried (``n_trees``; skipped when the base point has
     adaptive waves, which already scale trees).  Rungs are deduplicated and
     strictly cost-decreasing; the last rung is the cheapest the backend can
     answer at all (1 probe, >=1/4 of the trees).
     """
     rungs = [params]
     p = params
+    while p.probe_schedule > 1:
+        p = dataclasses.replace(p,
+                                probe_schedule=max(1, p.probe_schedule // 2))
+        rungs.append(p)
     while p.n_probes > 1:
         p = dataclasses.replace(p, n_probes=max(1, p.n_probes // 2))
         rungs.append(p)

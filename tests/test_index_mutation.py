@@ -435,3 +435,49 @@ def test_delete_everything_then_readd(corpus):
     gid = index.add(small[0])
     _, i = index.search(small[:1], SearchParams(k=1))
     assert int(np.asarray(i)[0, 0]) == gid
+
+
+# ---------------------------------------------------------------------------
+# stale-tune gap (ISSUE 9): compact() after heavy churn must retune
+# ---------------------------------------------------------------------------
+
+
+def test_compact_retunes_stale_operating_point(corpus):
+    """A tuned operating point is a statement about a specific corpus:
+    after churn that removes >25% of the live rows, compact() must refresh
+    it from the recorded tuning context (and count it in stats), and the
+    refreshed point must still clear the original recall target on the
+    post-churn live set.  Mild churn below the staleness threshold — and
+    a compaction with no churn at all — must NOT retune."""
+    from repro.index import tune
+
+    db, q = corpus
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=4, capacity=16))
+    index = build_index(jax.random.key(0), db, spec)
+    tune(index, q, target_recall=0.9, k=5, probe_grid=(1, 2, 4),
+         tree_fracs=(1.0,))
+    assert index.stats()["n_retunes"] == 0
+
+    index.compact()                      # no churn: not stale
+    assert index.stats()["n_retunes"] == 0
+
+    index.delete(list(range(0, 80)))     # 80/220 > 25% drift
+    index.compact()
+    assert index.stats()["n_retunes"] == 1
+    assert index.tuned_params is not None
+
+    # the refreshed default operating point answers the ORIGINAL target
+    # on the post-churn live set (the regression: it used to keep the
+    # pre-churn point)
+    gids, rows = index.live_points()
+    from repro.core.knn import exact_knn
+    _, pos = exact_knn(q, rows, k=5)
+    true_ids = np.asarray(gids)[np.asarray(pos)]
+    _, ids = index.search(q)             # bare search -> tuned_params
+    hits = (np.asarray(ids)[:, :, None] == true_ids[:, None, :]).any(1)
+    assert hits.mean() >= 0.9
+
+    index.delete(list(range(80, 90)))    # 10/140 < 25% drift
+    index.compact()
+    assert index.stats()["n_retunes"] == 1

@@ -1,0 +1,225 @@
+"""Per-query adaptive probe scheduling (core/schedule.py, DESIGN.md §14).
+
+The contract under test: the scheduler may only move a query along the
+fixed-budget multi-probe frontier, never off it —
+
+  * with the convergence threshold disabled (``tol = 0.0``) the scheduled
+    path is BITWISE-identical to fixed ``n_probes = cap`` on every
+    registered backend (the ISSUE-9 acceptance pin; replacement semantics
+    make the final round literally the fixed-budget call),
+  * recall is monotone in the widening cap (doubling schedules are
+    prefix-nested, so a larger cap only ever re-descends with more probes),
+  * a query the scheduler declares converged has nothing left to gain:
+    its top-k equals its full-budget top-k (the per-query oracle),
+  * tombstones and metadata filters compose unchanged (the schedule rides
+    the same ``valid=`` path as every other search),
+  * the sharded path rejects scheduled params exactly as
+    ``sharded_violations()`` reports, and ``.sharded()`` strips them.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ForestConfig
+from repro.core.forest import build_forest
+from repro.core.pipeline import fused_query
+from repro.core.quantized import quantize_db
+from repro.core.schedule import probe_widths, scheduled_query
+from repro.core.search import recall_at_k
+from repro.core.knn import exact_knn
+from repro.index import IndexSpec, SearchParams, build_index
+
+N, D, K = 2000, 24, 10
+CFG = ForestConfig(n_trees=8, capacity=12)
+CAP = 6
+
+LSH_SPEC = dict(lsh_radii=(0.5, 1.0, 2.0), lsh_tables=6, lsh_bits=8)
+
+
+@pytest.fixture(scope="module")
+def corpus(shared_builds):
+    db = shared_builds.clustered_db(N, D, n_clusters=16, seed=0)
+    rng = np.random.default_rng(1)
+    q = np.asarray(db[:32]) + 0.05 * rng.normal(size=(32, D)).astype(
+        np.float32)
+    return db, q.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the schedule itself
+# ---------------------------------------------------------------------------
+
+
+def test_probe_widths_shape():
+    assert probe_widths(1) == [1]
+    assert probe_widths(2) == [1, 2]
+    assert probe_widths(6) == [1, 2, 4, 6]
+    assert probe_widths(8) == [1, 2, 4, 8]
+    with pytest.raises(ValueError, match="cap"):
+        probe_widths(0)
+
+
+def test_params_validation():
+    with pytest.raises(ValueError, match="probe_schedule"):
+        SearchParams(probe_schedule=-1)
+    # both knobs consume the same convergence signal: rejected, and by the
+    # ONE violations() surface so every search path refuses it identically
+    bad = SearchParams(probe_schedule=4, adaptive_wave=2)
+    assert any("probe_schedule" in v for v in bad.violations())
+
+
+def test_search_rejects_schedule_with_adaptive(shared_builds, corpus):
+    db, q = corpus
+    index = shared_builds.index("rpf", 0, db, forest_cfg=CFG)
+    with pytest.raises(ValueError, match="probe_schedule"):
+        index.search(q, SearchParams(k=K, probe_schedule=4, adaptive_wave=2))
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin: tol = 0.0  =>  bitwise-identical to fixed n_probes = cap
+# ---------------------------------------------------------------------------
+
+
+def test_bitwise_parity_core_fp32_and_int8(shared_builds, corpus):
+    """scheduled_query(tol=0) == fused_query(n_probes=cap) on both rerank
+    sources, with full-cap probe accounting."""
+    db, q = corpus
+    forest, cfg = shared_builds.forest(0, CFG, db)
+    for src in (db, quantize_db(db)):
+        want_d, want_i = fused_query(forest, q, src, K, cfg, n_probes=CAP)
+        got_d, got_i, final, processed = scheduled_query(
+            forest, q, src, K, cfg, cap=CAP, tol=0.0)
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+        np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+        assert (final == CAP).all()
+        assert (processed == sum(probe_widths(CAP))).all()
+
+
+@pytest.mark.parametrize("backend", ["rpf", "rpf+int8", "lsh-cascade",
+                                     "bruteforce"])
+def test_bitwise_parity_all_backends(shared_builds, corpus, backend):
+    """Index.search with (probe_schedule=cap, tol=0) == the fixed-budget
+    path on every backend; the non-forest backends ignore the knob."""
+    db, q = corpus
+    kw = LSH_SPEC if backend == "lsh-cascade" else {"forest_cfg": CFG}
+    index = shared_builds.index(backend, 0, db, **kw)
+    fixed = SearchParams(k=K, n_probes=CAP if backend.startswith("rpf")
+                         else 1)
+    sched = dataclasses.replace(fixed, n_probes=1, probe_schedule=CAP,
+                                tol=0.0)
+    dw, iw = map(np.asarray, index.search(q, fixed))
+    dg, ig = map(np.asarray, index.search(q, sched))
+    np.testing.assert_array_equal(ig, iw)
+    np.testing.assert_array_equal(dg, dw)
+
+
+# ---------------------------------------------------------------------------
+# scheduling behavior: monotone cap, convergence oracle, accounting
+# ---------------------------------------------------------------------------
+
+
+def test_monotone_recall_in_cap(shared_builds, corpus):
+    """Doubling schedules are prefix-nested (widths(2^j) is a prefix of
+    widths(2^{j+1}) plus one wider final round), so a larger cap can only
+    re-descend active queries with more probes: recall is non-decreasing."""
+    db, q = corpus
+    forest, cfg = shared_builds.forest(0, CFG, db)
+    _, true_i = exact_knn(q, db, k=K)
+    recalls = []
+    for cap in (1, 2, 4, 8):
+        _, ids, _, _ = scheduled_query(forest, q, db, K, cfg, cap=cap,
+                                       tol=0.02)
+        recalls.append(float(recall_at_k(ids, true_i)))
+    assert all(b >= a for a, b in zip(recalls, recalls[1:])), recalls
+    assert recalls[-1] > recalls[0]
+
+
+def test_converged_query_oracle(shared_builds, corpus):
+    """A query the scheduler stopped early had nothing left to gain: its
+    top-k must equal its full-budget (n_probes=cap) top-k."""
+    db, q = corpus
+    forest, cfg = shared_builds.forest(0, CFG, db)
+    cap = 8
+    # tight tolerance: a declared plateau must be a REAL plateau (looser
+    # tolerances trade this guarantee for cost — that envelope is
+    # test_property.py's job, not the oracle's)
+    d, ids, final, _ = scheduled_query(forest, q, db, K, cfg, cap=cap,
+                                       tol=1e-3)
+    full_d, full_i = fused_query(forest, q, db, K, cfg, n_probes=cap)
+    converged = np.flatnonzero(final < cap)
+    assert converged.size > 0, "corpus must converge some queries"
+    np.testing.assert_array_equal(np.asarray(ids)[converged],
+                                  np.asarray(full_i)[converged])
+    np.testing.assert_array_equal(np.asarray(d)[converged],
+                                  np.asarray(full_d)[converged])
+
+
+def test_probe_accounting_on_instant_convergence(shared_builds, corpus):
+    """tol=inf converges every query at the first checkpoint (width 2):
+    final width 2, processed 1+2 — convergence needs one comparison round,
+    so the cheapest scheduled query still costs 3 probes."""
+    db, q = corpus
+    forest, cfg = shared_builds.forest(0, CFG, db)
+    _, _, final, processed = scheduled_query(forest, q, db, K, cfg, cap=8,
+                                             tol=np.inf)
+    assert (final == 2).all()
+    assert (processed == 3).all()
+
+
+def test_scheduled_cost_below_fixed_on_clustered_data(shared_builds, corpus):
+    """The point of the feature: on clustered data most queries converge
+    early, so the mean probes processed lands below the all-pay-the-cap
+    fixed budget's cumulative cost."""
+    db, q = corpus
+    forest, cfg = shared_builds.forest(0, CFG, db)
+    cap = 8
+    _, _, final, processed = scheduled_query(forest, q, db, K, cfg, cap=cap,
+                                             tol=0.05)
+    assert float(processed.mean()) < sum(probe_widths(cap))
+    assert final.max() <= cap
+
+
+# ---------------------------------------------------------------------------
+# composition: tombstones + filters ride the same valid= path
+# ---------------------------------------------------------------------------
+
+
+def test_tombstone_and_filter_composition(corpus):
+    db, q = corpus
+    db = np.asarray(db)
+    meta = {"shop": np.array([f"s{i % 4}" for i in range(N)])}
+    index = build_index(jax.random.key(0), db,
+                        IndexSpec(backend="rpf", forest=CFG), metadata=meta)
+    index.delete(list(range(0, 400)))
+    from repro.filter import Eq
+    fixed = SearchParams(k=K, n_probes=CAP, filter=Eq("shop", "s1"))
+    sched = dataclasses.replace(fixed, n_probes=1, probe_schedule=CAP,
+                                tol=0.0)
+    dw, iw = map(np.asarray, index.search(q, fixed))
+    dg, ig = map(np.asarray, index.search(q, sched))
+    np.testing.assert_array_equal(ig, iw)
+    np.testing.assert_array_equal(dg, dw)
+    surfaced = ig[ig >= 0]
+    assert (surfaced >= 400).all(), "tombstoned rows must not surface"
+    assert (surfaced % 4 == 1).all(), "filtered-out rows must not surface"
+
+
+# ---------------------------------------------------------------------------
+# sharded path: reject-or-support parity with sharded_violations()
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_reject_parity():
+    from repro import compat
+    from repro.core.sharded_index import make_query_fn
+    p = SearchParams(k=5, probe_schedule=CAP)
+    assert any("probe_schedule" in v for v in p.sharded_violations())
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="probe_schedule"):
+        make_query_fn(ForestConfig(n_trees=4), 128, mesh, params=p)
+    stripped = p.sharded()
+    assert stripped.probe_schedule == 0
+    assert not stripped.sharded_violations()
+    make_query_fn(ForestConfig(n_trees=4), 128, mesh, params=stripped)

@@ -215,3 +215,35 @@ def test_rotation_invariance_mace(seed):
                   jnp.asarray(s), jnp.asarray(r_))["energy"]
     np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=2e-4,
                                atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(150, 400), d=st.integers(4, 16),
+       cap=st.sampled_from([2, 4, 6, 8]),
+       tol=st.floats(0.0, 0.5), seed=st.integers(0, 2**30))
+def test_probe_schedule_envelope(n, d, cap, tol, seed):
+    """For ANY (data, seed, threshold): the per-query probe scheduler
+    (DESIGN.md §14) may only trade inside its envelope — recall at least
+    the fixed n_probes=1 floor (round 0 IS that search, and replacement
+    rounds rerank supersets of its candidates), probes processed at most
+    the never-converge cumulative budget, final width at most the cap."""
+    from repro.core.knn import exact_knn
+    from repro.core.pipeline import fused_query
+    from repro.core.schedule import probe_widths, scheduled_query
+    from repro.core.search import recall_at_k
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(8, d)).astype(np.float32))
+    cfg = ForestConfig(n_trees=3, capacity=8)
+    forest = build_forest(jax.random.key(seed % 9973), x, cfg)
+    rcfg = cfg.resolved(n)
+    k = 5
+    _, true_i = exact_knn(q, x, k=k)
+    _, base_i = fused_query(forest, q, x, k, rcfg, n_probes=1)
+    _, sched_i, final, processed = scheduled_query(
+        forest, q, x, k, rcfg, cap=cap, tol=tol)
+    assert float(recall_at_k(sched_i, true_i)) >= \
+        float(recall_at_k(base_i, true_i))
+    assert processed.max() <= sum(probe_widths(cap))
+    assert final.max() <= cap
+    assert final.min() >= 1

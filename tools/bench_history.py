@@ -59,6 +59,10 @@ SOURCES = [
     ("filtered_search", "BENCH_filtered_search.json",
      ["worst_recall", "recall_001_ok", "recall_all_ok", "no_leaks",
       "n_db", "k"]),
+    ("probe_schedule", "BENCH_probe_schedule.json",
+     ["p99_ratio", "mean_probes_scheduled", "fixed_n_probes",
+      "recall_scheduled", "recall_ok", "probes_below_fixed", "p99_ok",
+      "n", "k"]),
 ]
 
 # (section, metric, direction); a move beyond --max-regress against the
@@ -69,7 +73,11 @@ GATES = [("build_time", "speedup", "higher"),
          # serving p99 at the planner's RATED qps: the rate scales with the
          # runner (derived from measured service time), so the p99 it must
          # hold is runner-relative too — safe to history-gate
-         ("serving_slo", "p99_ms_at_rated_qps", "lower")]
+         ("serving_slo", "p99_ms_at_rated_qps", "lower"),
+         # scheduled-vs-fixed batch p99 at equal recall target: the whole
+         # point of per-query scheduling is the tail, so the ratio may
+         # only drift down
+         ("probe_schedule", "p99_ratio", "lower")]
 
 # million_row.bytes_ratio may never exceed this, history or not: the int8
 # shortlist must keep candidate traffic under 0.30x fp32 (DESIGN.md §11)
@@ -163,6 +171,22 @@ def check_gates(history: list[dict], point: dict, max_regress: float,
                              "the predicate")):
             if fs.get(flag) is False:
                 errors.append(f"filtered_search.{flag} is False: {why}")
+    ps = point.get("probe_schedule", {})
+    if ps:
+        # hard probe-schedule gates (DESIGN.md §14, the ISSUE-9 acceptance
+        # criterion): scheduled recall@10 >= 0.9, mean probes processed
+        # strictly below the fixed budget at the same recall target, and
+        # batch p99 within 1.1x of the fixed budget
+        for flag, why in (
+                ("recall_ok", "scheduled recall@10 fell below the 0.9 "
+                              "floor"),
+                ("probes_below_fixed", "mean scheduled probes were not "
+                                       "below the fixed budget at equal "
+                                       "recall"),
+                ("p99_ok", "scheduled batch p99 regressed more than 10% "
+                           "vs the fixed budget")):
+            if ps.get(flag) is False:
+                errors.append(f"probe_schedule.{flag} is False: {why}")
     recent = history[-window:]
     for section, metric, direction in GATES:
         new = point.get(section, {}).get(metric)
@@ -216,7 +240,7 @@ def main(argv: list[str]) -> int:
     print(f"bench history: {len(history)} point(s) -> "
           f"{os.path.relpath(args.out)}")
     for key in ("build_time", "recall_frontier", "million_row",
-                "serving_slo", "filtered_search"):
+                "serving_slo", "filtered_search", "probe_schedule"):
         if key in point:
             print(f"  {key}: {point[key]}")
     for e in errors:
