@@ -1,0 +1,224 @@
+"""Autoscaling benchmark: a 2x-rated burst must scale up, not shed forever.
+
+The serving_slo benchmark proved the degradation ladder keeps a 2x burst
+BOUNDED — at the cost of sustained recall shedding, because a static fleet
+has no capacity actuator.  This benchmark closes that loop (DESIGN.md §15):
+
+  1. build + tune an index, calibrate the traffic model, derive a
+     runner-speed-relative SLO and the single-replica rated QPS (same
+     recipe as serving_slo, so the two benchmarks agree on "rated"),
+  2. stand up a ONE-replica ``ReplicaFleet`` with the ``Autoscaler``
+     control loop running against the calibrated model,
+  3. leg 1 (scale-up window): open-loop traffic at 2x the single-replica
+     rated QPS — the autoscaler must scale up within the leg,
+  4. leg 2 (post-scale window): the same offered load against the
+     now-scaled fleet — windowed shed fraction must return to <= 0.01 and
+     p999 must stay bounded,
+  5. control: the same 2x load against a STATIC single replica — it must
+     shed, demonstrating the burst actually exceeds one replica.
+
+Gates (hard flags in tools/bench_history.py):
+  scaled_up        autoscaler reached >= 2 replicas during leg 1
+  shed_recovered   leg-2 shed fraction <= 0.01
+  p999_bounded     no timeouts/failures in either leg, leg-2 p999 <= 10xSLO
+  control_sheds    static single replica sheds > 0.01 at the same load
+  no_flapping      resize-to-resize gaps respect the autoscaler cooldowns
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.autoscale [--smoke]
+
+Writes artifacts/BENCH_autoscale.json (uploaded + gated by CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ForestConfig
+from repro.index import IndexSpec, build_index, tune
+from repro.serve import loadgen, planner
+from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ReplicaFleet
+from repro.serve.runtime import ServingRuntime
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_autoscale.json")
+
+# same rated-QPS recipe as serving_slo: budget >= 5*t(B) makes the planner
+# factor >= 0.56 > 0.5, so 2x rated ALWAYS exceeds one replica's saturation
+SLO_SERVICE_MULT = 5.0
+UTILIZATION = 0.7
+SERVICE_SLEEP_S = 0.010  # added per-batch service cost: pins one replica's
+#                          saturation far below the host dispatch ceiling,
+#                          so 2x rated is a REPLICA shortage (fixable by
+#                          scaling) rather than a GIL shortage (not)
+
+
+class _SleepIndex:
+    """Index proxy adding a fixed per-batch service cost.
+
+    The calibrated traffic model sees the sleep (it measures through the
+    runtime), so the planner's rated QPS, the autoscaler's re-plan, and the
+    actual service rate all agree — the benchmark then tests the CONTROL
+    LOOP, not how many queries a shared CI host can push through Python
+    dispatch per second.
+    """
+
+    def __init__(self, index, sleep_s: float):
+        self._index = index
+        self._sleep_s = float(sleep_s)
+
+    def search(self, q, params):
+        time.sleep(self._sleep_s)
+        return self._index.search(q, params)
+
+    def __getattr__(self, name):
+        return getattr(self._index, name)
+
+
+def run_burst(n_db: int, dim: int, n_trees: int, capacity: int,
+              target_recall: float, k: int, max_batch: int,
+              leg_s: float, seed: int = 0) -> dict:
+    from repro.data.synthetic import clustered_gaussians
+
+    db = clustered_gaussians(n_db, dim, n_clusters=max(16, n_db // 256),
+                             seed=seed)
+    spec = IndexSpec(backend="rpf",
+                     forest=ForestConfig(n_trees=n_trees,
+                                         capacity=capacity))
+    index = build_index(jax.random.key(seed), db, spec)
+    queries = db[np.random.default_rng(seed).integers(0, n_db, size=128)] \
+        + 0.003
+    tune(index, queries[:64], target_recall=target_recall, k=k,
+         probe_grid=(1, 2, 4, 8))
+    index = _SleepIndex(index, SERVICE_SLEEP_S)
+
+    # ---- calibrate + derive the runner-relative SLO / rated rate
+    probe = ServingRuntime(index, max_batch=max_batch, max_wait_s=0.008)
+    model = probe.calibrate(queries, batch_grid=(1, max_batch // 4,
+                                                 max_batch))
+    probe.stop()
+    slo_p99_ms = (model.max_wait_s
+                  + SLO_SERVICE_MULT * model.service_s(max_batch)) * 1e3
+    rated = planner.rated_qps(model, slo_p99_ms, max_batch,
+                              utilization=UTILIZATION)
+    if rated <= 0:
+        raise RuntimeError(f"planner found no in-SLO rate (model "
+                           f"c0={model.c0_s}, c1={model.c1_s})")
+    offered = 2.0 * rated
+    n_leg = max(200, int(offered * leg_s))
+
+    def make_replica(batch: int | None = None):
+        return ServingRuntime(index, slo_p99_ms=slo_p99_ms,
+                              max_batch=int(batch or max_batch),
+                              max_wait_s=0.008, degrade=True)
+
+    # ---- elastic fleet: 1 replica + the control loop
+    cfg = AutoscalerConfig(slo_p99_ms=slo_p99_ms, min_replicas=1,
+                           max_replicas=4, interval_s=0.1,
+                           cooldown_s=0.5, scale_down_cooldown_s=30.0,
+                           utilization=UTILIZATION, demand_smoothing=0.7)
+    fleet = ReplicaFleet(make_replica, n_replicas=1, batch=max_batch)
+    scaler = Autoscaler(fleet, model, cfg, batch=max_batch).start()
+    leg1 = loadgen.run_open_loop(fleet, queries, offered,
+                                 n_requests=n_leg, seed=1)
+    replicas_after_leg1 = fleet.n_replicas
+    leg2 = loadgen.run_open_loop(fleet, queries, offered,
+                                 n_requests=n_leg, seed=2)
+    scaler.stop()
+    decisions = [d for d in scaler.history if d["action"] != "hold"]
+    fleet_stats = fleet.stats()
+    fleet.stop()
+
+    # ---- static control: same load, one replica, no control loop
+    control = make_replica()
+    ctl = loadgen.run_open_loop(control, queries, offered,
+                                n_requests=n_leg, seed=1)
+    control.stop()
+
+    # flapping check: consecutive resize decisions must respect the
+    # tighter of the two cooldowns (scale-downs are blocked for 30s here,
+    # so in practice this checks scale-up spacing)
+    ts = [d["t"] for d in decisions]
+    gaps = [b - a for a, b in zip(ts, ts[1:])]
+    min_gap = min(gaps) if gaps else float("inf")
+
+    return {
+        "n_db": n_db, "dim": dim, "n_trees": n_trees, "k": k,
+        "max_batch": max_batch,
+        "traffic_model": model.to_dict(),
+        "slo_p99_ms": round(slo_p99_ms, 3),
+        "rated_qps_1replica": round(rated, 1),
+        "offered_qps": round(offered, 1),
+        "n_requests_per_leg": n_leg,
+        "replicas_after_leg1": replicas_after_leg1,
+        "replicas_final": fleet_stats["n_replicas"],
+        "resizes": fleet_stats["resizes"],
+        "decisions": decisions,
+        "min_resize_gap_s": (round(min_gap, 3)
+                             if min_gap != float("inf") else None),
+        "scaleup_leg": leg1,
+        "scaled_leg": leg2,
+        "static_control": ctl,
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    print(f"[autoscale] smoke={smoke}")
+    if smoke:
+        row = run_burst(n_db=20000, dim=64, n_trees=32, capacity=32,
+                        target_recall=0.9, k=10, max_batch=8, leg_s=4.0)
+    else:
+        row = run_burst(n_db=60000, dim=128, n_trees=40, capacity=32,
+                        target_recall=0.95, k=10, max_batch=32, leg_s=6.0)
+    slo = row["slo_p99_ms"]
+    leg1, leg2, ctl = row["scaleup_leg"], row["scaled_leg"], \
+        row["static_control"]
+    scaled_up = row["replicas_after_leg1"] >= 2
+    shed_recovered = leg2["shed_fraction"] <= 0.01
+    p999_bounded = (leg1["n_timeout"] == 0 and leg1["n_failed"] == 0
+                    and leg2["n_timeout"] == 0 and leg2["n_failed"] == 0
+                    and leg2["p999_ms"] <= 10.0 * slo)
+    control_sheds = ctl["shed_fraction"] > 0.01
+    no_flapping = (row["min_resize_gap_s"] is None
+                   or row["min_resize_gap_s"] >= 0.5 * 0.95)
+    print(f"  rated {row['rated_qps_1replica']} qps/replica @ "
+          f"p99<={slo:.1f}ms; offered {row['offered_qps']} qps (2x)")
+    print(f"  leg1 (scale-up): p99={leg1['p99_ms']:.1f}ms "
+          f"shed={leg1['shed_fraction']:.1%} -> "
+          f"{row['replicas_after_leg1']} replicas ({row['resizes']} "
+          f"resizes) -> scaled_up={scaled_up}")
+    print(f"  leg2 (scaled):   p99={leg2['p99_ms']:.1f}ms "
+          f"p999={leg2['p999_ms']:.1f}ms shed={leg2['shed_fraction']:.1%} "
+          f"-> shed_recovered={shed_recovered} p999_bounded={p999_bounded}")
+    print(f"  static control:  p99={ctl['p99_ms']:.1f}ms "
+          f"shed={ctl['shed_fraction']:.1%} -> control_sheds={control_sheds}")
+    print(f"  min resize gap {row['min_resize_gap_s']}s -> "
+          f"no_flapping={no_flapping}")
+    out = {**row, "smoke": smoke, "backend": jax.default_backend(),
+           "scaled_up": scaled_up, "shed_recovered": shed_recovered,
+           "p999_bounded": p999_bounded, "control_sheds": control_sheds,
+           "no_flapping": no_flapping,
+           # the history-gated headline metric
+           "shed_after_scaleup": leg2["shed_fraction"]}
+    os.makedirs(os.path.dirname(os.path.abspath(ARTIFACT)), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  -> {os.path.relpath(ARTIFACT)}")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-size corpus + short legs (tens of seconds)")
+    args = p.parse_args()
+    t0 = time.perf_counter()
+    result = main(smoke=args.smoke)
+    print(f"[autoscale] total {time.perf_counter() - t0:.1f}s")
+    from benchmarks.common import record
+    record({}, "autoscale", result)

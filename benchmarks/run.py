@@ -11,10 +11,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import (build_time, fig4_mnist, fig5_iss, filtered_search,
-                        fused_vs_staged, million_row, probe_schedule,
-                        recall_frontier, retrieval_compare, roofline_table,
-                        serving_slo, speedup_table, tree_stats)
+from benchmarks import (autoscale, build_time, fig4_mnist, fig5_iss,
+                        filtered_search, fused_vs_staged, million_row,
+                        probe_schedule, recall_frontier, retrieval_compare,
+                        roofline_table, serving_slo, speedup_table,
+                        tree_stats)
 from benchmarks.common import csv_row, record
 
 
@@ -25,7 +26,7 @@ def main() -> None:
     p.add_argument("--only", default="",
                    help="comma list: fig4,fig5,speedup,tree,retrieval,"
                         "fused,frontier,build,roof,million,serving,"
-                        "filtered,schedule")
+                        "filtered,schedule,autoscale")
     args = p.parse_args()
     fast = not args.paper_scale
     only = set(args.only.split(",")) if args.only else None
@@ -140,6 +141,16 @@ def main() -> None:
             f";p99_ratio={r['p99_ratio']}"
             f";gates={r['recall_ok']}/{r['probes_below_fixed']}"
             f"/{r['p99_ok']}"))
+    if want("autoscale"):
+        r = autoscale.main(smoke=fast)
+        record(results, "autoscale", r)
+        rows.append(csv_row(
+            "autoscale", r["scaled_leg"]["p99_ms"] * 1e3,
+            f"replicas={r['replicas_after_leg1']}"
+            f";shed_scaled={r['shed_after_scaleup']:.3f}"
+            f";shed_static={r['static_control']['shed_fraction']:.2f}"
+            f";gates={r['scaled_up']}/{r['shed_recovered']}"
+            f"/{r['no_flapping']}"))
     if want("roof"):
         r = roofline_table.main(fast=fast)
         record(results, "roofline", r)

@@ -14,6 +14,51 @@ from typing import Any
 from repro.core.distances import METRIC_ALIASES, METRICS
 from repro.core.forest import ForestConfig
 
+#: The capability contexts a SearchParams can be checked against.
+#: ``local``   — ``Index.search`` / ``IndexView.search`` on one host.
+#: ``sharded`` — ``repro.core.sharded_index.ShardedIndex.search`` over a
+#:               device mesh (host-driven: filters and probe schedules ARE
+#:               served there; only the raw SPMD step builder
+#:               ``make_query_fn`` still rejects them).
+#: ``serving`` — ``ServingRuntime``'s batched path (host-local runtime;
+#:               a mesh runtime composes ``serving`` + ``sharded``).
+CONTEXTS = ("local", "sharded", "serving")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One capability the given context cannot honor for a params.
+
+    ``str(v)`` renders the legacy message format, so code (and tests)
+    that matched substrings of ``violations()`` strings keeps working;
+    structured callers read ``knob``/``context``/``hint`` instead.
+    """
+
+    knob: str       # the SearchParams field (or index property) at fault
+    context: str    # which CONTEXTS entry rejected it
+    message: str    # human text, normally starting "knob=value (...)"
+    hint: str = ""  # what to do instead, if anything
+
+    def __str__(self) -> str:
+        return self.message + (f" — {self.hint}" if self.hint else "")
+
+
+class CapabilityError(ValueError):
+    """A params asked for capabilities its context cannot honor.
+
+    Subclasses ValueError so every pre-existing ``except ValueError`` /
+    ``pytest.raises(ValueError)`` around the search paths still catches
+    it; carries the structured entries in ``.violations``.
+    """
+
+    def __init__(self, violations, context: str = "local",
+                 prefix: str = "params cannot be served"):
+        self.violations = tuple(violations)
+        self.context = context
+        super().__init__(
+            f"{prefix} [{context}]: "
+            + "; ".join(str(v) for v in self.violations))
+
 
 @dataclasses.dataclass(frozen=True)
 class SearchParams:
@@ -47,9 +92,10 @@ class SearchParams:
                    ``n_probes`` is ignored on that path (the schedule owns
                    the probe axis).  0 = the fixed budget above.  Does not
                    compose with ``adaptive_wave`` (both consume the same
-                   convergence signal — :meth:`violations` rejects the
-                   pair) and is host-scheduled, so the sharded path
-                   rejects it (``sharded_violations``)
+                   convergence signal — :meth:`capabilities` rejects the
+                   pair).  Host-scheduled, so the one-fixed-program
+                   ``make_query_fn`` rejects it, but ``ShardedIndex``
+                   serves it on a mesh (host rounds over per-width steps)
     n_trees        rpf backends: query only the first ``n_trees`` trees of
                    the built forest (0 = all).  Any prefix of the forest
                    is itself a valid smaller forest (the trees are
@@ -58,8 +104,10 @@ class SearchParams:
     filter         optional ``repro.filter`` predicate AST: only rows
                    matching it can surface, enforced through the same
                    validity-bitmap path as tombstones (DESIGN.md §13).
-                   Requires a metadata-carrying index; rejected on the
-                   sharded path (``sharded_violations``)
+                   Requires a metadata-carrying index.  Served on the
+                   sharded path too (DESIGN.md §15): ``ShardedIndex``
+                   compiles the bitmap host-side in ``live_points`` order
+                   and ANDs it onto the row-sharded validity argument
 
     Typically hand-written for exploration and produced by
     ``repro.index.tune`` for operation: the tuner returns the cheapest
@@ -100,77 +148,113 @@ class SearchParams:
         object.__setattr__(self, "metric",
                            METRIC_ALIASES.get(self.metric, self.metric))
 
-    def violations(self) -> list[str]:
-        """Capability violations of this operating point (empty = servable).
+    def capabilities(self, context: str = "local") -> list[Violation]:
+        """Capability violations of this operating point in ``context``
+        (empty = servable there).
 
-        THE one definition of "can this params be served": ``Index.search``
-        / ``IndexView.search``, the sharded path (via
-        :meth:`sharded_violations`) and ``ServingRuntime`` all consult it,
-        so accept and reject can never drift between surfaces
-        (previously each path had its own ad-hoc checks or none).
+        THE one definition of "can this params be served where": every
+        search surface — ``Index.search`` / ``IndexView.search``
+        (``local``), ``ShardedIndex.search`` and the raw ``make_query_fn``
+        step builder (``sharded``), and ``ServingRuntime`` (``serving``,
+        composed with ``sharded`` on a mesh) — consults this matrix, so
+        accept and reject can never drift between surfaces.  The legacy
+        :meth:`violations` / :meth:`sharded_violations` are shims over it.
+
+        ``local`` / ``serving``: unknown metrics, malformed filters, and
+        the ``probe_schedule``×``adaptive_wave`` combination (both consume
+        the same k-th-distance convergence signal) are rejected.
+
+        ``sharded`` adds the knobs the per-cell rerank + tiny top-k merge
+        cannot honor: ``adaptive_wave`` (host wave loop with a
+        data-dependent round count), ``min_candidates != 1`` (the lsh
+        cascade is not built sharded) and ``n_trees`` (trees are a
+        build-time shard property).  ``probe_schedule`` and ``filter`` are
+        sharded-LEGAL since the host-driven ``ShardedIndex`` schedules
+        rounds and compiles predicate bitmaps onto the row-sharded
+        validity argument; only the single fixed SPMD program that
+        ``make_query_fn`` compiles still rejects them (it points at
+        ``ShardedIndex.search``).
         """
-        bad = []
+        if context not in CONTEXTS:
+            raise ValueError(f"context must be one of {CONTEXTS}, "
+                             f"got {context!r}")
+        bad: list[Violation] = []
         if self.metric not in METRICS:
             known = sorted(set(METRICS) | set(METRIC_ALIASES))
-            bad.append(f"metric={self.metric!r} (known: {known})")
+            bad.append(Violation(
+                "metric", context,
+                f"metric={self.metric!r} (known: {known})"))
         if self.probe_schedule and self.adaptive_wave:
             # both knobs consume the same k-th-distance convergence signal
             # (per query across probe rounds vs batch-mean across tree
             # waves); composing them would double-count it
-            bad.append(f"probe_schedule={self.probe_schedule} with "
-                       f"adaptive_wave={self.adaptive_wave} (pick one "
-                       f"convergence-gated axis)")
+            bad.append(Violation(
+                "probe_schedule", context,
+                f"probe_schedule={self.probe_schedule} with "
+                f"adaptive_wave={self.adaptive_wave} (pick one "
+                f"convergence-gated axis)"))
         if self.filter is not None:
             from repro.filter.predicate import Predicate
             if not isinstance(self.filter, Predicate):
-                bad.append(f"filter must be a repro.filter Predicate, got "
-                           f"{type(self.filter).__name__}")
+                bad.append(Violation(
+                    "filter", context,
+                    f"filter must be a repro.filter Predicate, got "
+                    f"{type(self.filter).__name__}"))
+        if context == "sharded":
+            if self.adaptive_wave:
+                bad.append(Violation(
+                    "adaptive_wave", context,
+                    f"adaptive_wave={self.adaptive_wave} (host-side wave "
+                    f"loop with a data-dependent round count)"))
+            if self.min_candidates != 1:
+                bad.append(Violation(
+                    "min_candidates", context,
+                    f"min_candidates={self.min_candidates} (the lsh "
+                    f"cascade is not built sharded)"))
+            if self.n_trees:
+                bad.append(Violation(
+                    "n_trees", context,
+                    f"n_trees={self.n_trees} (trees are a build-time "
+                    f"shard property)"))
         return bad
+
+    def require(self, context: str = "local") -> "SearchParams":
+        """Raise :class:`CapabilityError` unless servable in ``context``;
+        returns self so it chains (``params.require("sharded")``)."""
+        bad = self.capabilities(context)
+        if bad:
+            raise CapabilityError(bad, context)
+        return self
+
+    def violations(self) -> list[str]:
+        """Deprecated shim: ``capabilities("local")`` rendered as the
+        legacy message strings.  Prefer :meth:`capabilities`."""
+        return [str(v) for v in self.capabilities("local")]
 
     def sharded_violations(self) -> list[str]:
-        """Knobs of this params that the sharded query path cannot honor
-        (a superset of :meth:`violations` — sharded serving adds limits).
+        """Deprecated shim: ``capabilities("sharded")`` rendered as the
+        legacy message strings.  Prefer :meth:`capabilities`.
 
-        ``core.sharded_index.make_query_fn`` serves only the per-cell knobs
-        (k/metric/dedup/mode/chunk/n_probes): adaptive waves, the per-query
-        probe schedule and the lsh cascade don't compose with the cell-local
-        rerank + tiny top-k merge (the first two are host-side convergence
-        loops with data-dependent round counts), trees are a build-time
-        shard property (a search-time ``n_trees`` restriction is
-        meaningless there), and metadata filters need the host-side bitmap
-        compiler, which the SPMD hot loop has no seam for.
-        ``make_query_fn`` REJECTS such params; this lists what it would
-        reject (empty = the params are sharded-legal), and :meth:`sharded`
-        strips exactly the same set — one definition, so accept and reject
-        can never drift.
+        Note the matrix is narrower than the pre-matrix behavior:
+        ``probe_schedule`` and ``filter`` are now sharded-legal (served by
+        ``ShardedIndex``'s host driver), so they no longer appear here.
         """
-        bad = self.violations()
-        if self.adaptive_wave:
-            bad.append(f"adaptive_wave={self.adaptive_wave}")
-        if self.min_candidates != 1:
-            bad.append(f"min_candidates={self.min_candidates}")
-        if self.n_trees:
-            bad.append(f"n_trees={self.n_trees}")
-        if self.probe_schedule:
-            # the active-set shrink is host-scheduled (data-dependent round
-            # count); the SPMD hot loop traces one fixed program
-            bad.append(f"probe_schedule={self.probe_schedule}")
-        if self.filter is not None:
-            bad.append("filter=<predicate> (filtered search is host-local)")
-        return bad
+        return [str(v) for v in self.capabilities("sharded")]
 
     def sharded(self) -> "SearchParams":
-        """This operating point restricted to the sharded-legal knobs.
+        """This operating point projected onto the sharded-legal knobs.
 
-        Neutralizes exactly the knobs :meth:`sharded_violations` names
-        (``adaptive_wave=0``, ``min_candidates=1``, ``n_trees=0``,
-        ``probe_schedule=0``, ``filter=None``); the result always passes
-        ``make_query_fn``'s params check.  The serving runtime uses this to project a
-        host-tuned operating point onto the mesh instead of crashing on
-        it — and counts the downgrade.
+        Neutralizes exactly what ``capabilities("sharded")`` rejects
+        (``adaptive_wave=0``, ``min_candidates=1``, ``n_trees=0``) and
+        KEEPS ``probe_schedule`` and ``filter`` — ``ShardedIndex`` serves
+        both, so projecting an operating point onto a mesh no longer
+        silently drops a predicate (that used to be a correctness trap:
+        unfiltered results for a filtered request).  The serving runtime
+        uses this to project a host-tuned point onto the mesh — and counts
+        any perf-knob downgrade.
         """
         return dataclasses.replace(self, adaptive_wave=0, min_candidates=1,
-                                   n_trees=0, probe_schedule=0, filter=None)
+                                   n_trees=0)
 
     def to_dict(self) -> dict[str, Any]:
         """JSON-ready dict (the manifest-v3 ``tuned_params`` payload);
@@ -190,6 +274,66 @@ class SearchParams:
             from repro.filter.predicate import from_dict as pred_from_dict
             d["filter"] = pred_from_dict(d["filter"])
         return cls(**d)
+
+
+# The README "Capability matrix" table is GENERATED from these rows
+# (``python tools/capability_table.py --write``; CI runs ``--check``), so
+# the docs can never drift from what :meth:`SearchParams.capabilities`
+# actually accepts.  Columns: knob, per-context verdicts, notes.
+CAPABILITY_MATRIX: tuple[dict[str, str], ...] = (
+    {"knob": "`metric` (l2 / chi2 / cosine / ip)",
+     "local": "yes", "sharded": "yes", "serving": "yes",
+     "notes": "aliases canonicalize at construction; unknown names are a "
+              "violation in every context"},
+    {"knob": "`k` / `expand` / `chunk` / `mode` / `dedup`",
+     "local": "yes", "sharded": "yes", "serving": "yes",
+     "notes": "per-cell knobs: compiled straight into every query step"},
+    {"knob": "`n_probes` (fixed multiprobe)",
+     "local": "yes", "sharded": "yes", "serving": "yes",
+     "notes": "descends each tree once per probe; sharded cells probe "
+              "their local trees"},
+    {"knob": "`probe_schedule` (per-query probes)",
+     "local": "yes", "sharded": "yes — host-scheduled rounds over "
+              "per-width mesh steps", "serving": "yes",
+     "notes": "does not compose with `adaptive_wave` (same convergence "
+              "signal); raw `make_query_fn` compiles one fixed program "
+              "and points at `ShardedIndex.search`"},
+    {"knob": "`filter` (metadata predicate)",
+     "local": "yes", "sharded": "yes — host bitmap ANDed onto the "
+              "row-sharded validity argument", "serving": "yes",
+     "notes": "needs a metadata-carrying index (a structured "
+              "`CapabilityError` names the entry otherwise); never "
+              "silently stripped"},
+    {"knob": "`adaptive_wave` (tree waves)",
+     "local": "yes", "sharded": "no", "serving": "yes",
+     "notes": "host wave loop with a data-dependent round count; "
+              "`sharded()` neutralizes it"},
+    {"knob": "`min_candidates` ≠ 1 (lsh cascade)",
+     "local": "yes", "sharded": "no", "serving": "yes",
+     "notes": "the lsh cascade is not built sharded; `sharded()` "
+              "neutralizes it"},
+    {"knob": "`n_trees` (forest prefix)",
+     "local": "yes", "sharded": "no", "serving": "yes",
+     "notes": "trees are a build-time shard property; `sharded()` "
+              "neutralizes it"},
+)
+
+
+def capability_table_md() -> str:
+    """Render :data:`CAPABILITY_MATRIX` as the README markdown table.
+
+    ``serving`` describes the host-local ``ServingRuntime``; a mesh
+    runtime composes the ``serving`` and ``sharded`` columns.
+    """
+    lines = [
+        "| knob | local `Index.search` | sharded `ShardedIndex.search` | "
+        "`ServingRuntime` | notes |",
+        "|---|---|---|---|---|",
+    ]
+    for row in CAPABILITY_MATRIX:
+        lines.append(f"| {row['knob']} | {row['local']} | {row['sharded']} "
+                     f"| {row['serving']} | {row['notes']} |")
+    return "\n".join(lines)
 
 
 @dataclasses.dataclass(frozen=True)

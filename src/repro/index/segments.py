@@ -391,6 +391,39 @@ class IndexView:
             return np.zeros(0, np.int32), np.zeros((0, 0), np.float32)
         return np.concatenate(gids), np.concatenate(rows)
 
+    def filter_match_live(self, predicate) -> np.ndarray:
+        """Host predicate-match bits over the live point set, in
+        :meth:`live_points` row order.
+
+        This is the sharded path's bitmap compiler (DESIGN.md §15): the
+        sharded DB is laid out in exactly ``live_points()`` order, so
+        these bits — padded to the even row split and ANDed with the
+        pad-row mask — drop straight onto the row-sharded validity
+        argument of the mesh query step.  Reuses the per-segment cached
+        ``MetaBlock.match`` bitmaps the host-local filtered path warms.
+        """
+        if self.store is None:
+            raise ValueError(
+                "predicate given but this index carries no metadata — "
+                "build with build_index(..., metadata={col: values}) to "
+                "enable filtered search")
+        parts = []
+        for seg in self.segments:
+            idx = np.flatnonzero(seg.live)
+            if idx.size:
+                parts.append(
+                    np.asarray(seg.meta.match(predicate, self.store))[idx])
+        if self.delta is not None:
+            from repro.filter.metadata import MetaBlock
+            buf = self.delta._buffer
+            block = MetaBlock({name: col[:self.delta.count]
+                               for name, col in buf._meta.items()})
+            m = np.asarray(block.match(predicate, self.store))
+            parts.append(m[np.flatnonzero(self.delta.live)])
+        if not parts:
+            return np.zeros(0, bool)
+        return np.concatenate(parts)
+
     # small host-side accessors for live_points (delta internals)
     def live_delta_mask(self) -> np.ndarray:
         return self.delta.live
@@ -411,9 +444,10 @@ class IndexView:
         slots: dist +inf, id -1.
         """
         params = params if params is not None else SearchParams(**params_kw)
-        bad = params.violations()
+        bad = params.capabilities("local")
         if bad:
-            raise ValueError("params cannot be served: " + ", ".join(bad))
+            from repro.index.params import CapabilityError
+            raise CapabilityError(bad, "local")
         q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
         if params.filter is not None:
             return self._search_filtered(q, params)
@@ -457,10 +491,12 @@ class IndexView:
         """
         from repro.filter.predicate import use_brute_force, widen_params
         if self.store is None:
-            raise ValueError(
-                "params.filter is set but this index carries no metadata — "
+            from repro.index.params import CapabilityError, Violation
+            raise CapabilityError([Violation(
+                "filter", "local",
+                "params.filter is set but this index carries no metadata",
                 "build with build_index(..., metadata={col: values}) to "
-                "enable filtered search")
+                "enable filtered search")], "local")
         pred = params.filter
         seg_parts: list[tuple[SealedSegment, int, jax.Array]] = []
         n_match = 0

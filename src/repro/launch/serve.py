@@ -17,6 +17,14 @@ ROADMAP called out as broken.  ``--no-tuned`` is the escape hatch back to
 (serve/loadgen.py), so the reported p50/p99/p999 are coordinated-omission
 free; ``--sweep`` walks a QPS ladder past saturation to locate the knee
 and exercise the overload-degradation ladder.
+
+``--config fleet.yml`` switches to the config-driven stand-up
+(DESIGN.md §15): the file names the manifest, serving knobs, optional
+mesh, and optional autoscaling loop; the launcher builds the fleet with
+``serve.config.build_fleet`` and load-tests the FLEET (not a single
+runtime), printing any autoscaler decisions the traffic provoked:
+
+  PYTHONPATH=src python -m repro.launch.serve --config fleet.yml --qps 800
 """
 from __future__ import annotations
 
@@ -36,6 +44,53 @@ from repro.serve.runtime import ServingRuntime
 def _fmt_params(p: SearchParams) -> str:
     return (f"k={p.k} metric={p.metric} n_probes={p.n_probes} "
             f"n_trees={p.n_trees or 'all'} adaptive_wave={p.adaptive_wave}")
+
+
+def _serve_fleet(args) -> None:
+    """--config path: fleet.yml -> build_fleet -> open-loop load test."""
+    from repro.serve.config import build_fleet
+    handle = build_fleet(args.config)
+    index = handle.index
+    auto = handle.autoscaler
+    print(f"[serve] fleet from {args.config}: "
+          f"{handle.fleet.n_replicas} replica(s)"
+          + (f"; plan batch {handle.plan.batch}, rated "
+             f"{handle.plan.rated_qps_per_replica:.0f} qps/replica"
+             if handle.plan else "")
+          + ("; autoscaler ON" if auto else ""))
+    try:
+        # query near the index's own rows — the loaded manifest fixes the
+        # dimensionality, so synthetic queries must be drawn at ITS dim
+        gids, rows = index.live_points()
+        rng = np.random.default_rng(0)
+        pick = rng.integers(0, rows.shape[0], size=args.n_queries)
+        queries = (np.asarray(rows)[pick]
+                   + 0.01 * rng.standard_normal(
+                       (args.n_queries, rows.shape[1]))).astype(np.float32)
+        k_oracle = min(args.k, rows.shape[0])
+        _, pos = exact_knn(np.asarray(queries), rows, k=k_oracle,
+                           metric="l2")
+        true_ids = np.asarray(gids)[np.asarray(pos)]
+        qps = args.qps or float(
+            (handle.plan.rated_qps_per_replica * handle.plan.n_replicas)
+            if handle.plan else 100.0)
+        r = loadgen.run_open_loop(handle.fleet, np.asarray(queries), qps,
+                                  n_requests=args.requests,
+                                  true_ids=true_ids)
+        print(f"[serve] {r['n_ok']}/{r['n_requests']} ok at "
+              f"{r['achieved_qps']:.0f} qps; p50 {r['p50_ms']:.1f}ms "
+              f"p99 {r['p99_ms']:.1f}ms p999 {r['p999_ms']:.1f}ms; "
+              f"shed {r['shed_fraction']:.1%}; recall "
+              f"{r.get('recall_vs_oracle', float('nan')):.3f}")
+        print(f"[serve] fleet stats: {handle.fleet.stats()}")
+        if auto is not None:
+            acted = [d for d in auto.history if d["action"] != "hold"]
+            print(f"[serve] autoscaler: {auto.stats()}")
+            for d in acted:
+                print(f"[serve]   {d['action']} -> {d['n_replicas']} "
+                      f"({d['reason']}, demand {d['demand_qps']:.0f} qps)")
+    finally:
+        handle.stop()
 
 
 def main() -> None:
@@ -70,7 +125,15 @@ def main() -> None:
     p.add_argument("--no-degrade", action="store_true",
                    help="disable the overload degradation ladder (serve "
                         "rung 0 only — for A/B-ing the ladder)")
+    p.add_argument("--config", default="",
+                   help="fleet.yml: config-driven stand-up (index manifest "
+                        "+ serving + optional mesh/autoscale sections); "
+                        "load-tests the whole fleet")
     args = p.parse_args()
+
+    if args.config:
+        _serve_fleet(args)
+        return
 
     from repro.data.synthetic import iss_like, mnist_like
     if args.dataset == "mnist784":

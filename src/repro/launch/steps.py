@@ -534,8 +534,8 @@ def _mind_rpf_retrieval_program(spec: ArchSpec, cell: ShapeCell,
     def retrieve(params, hist, forest: Forest):
         interests = rs.mind_user_fwd(params, cfg, hist)      # (1, K, D)
         flat = interests.reshape(cfg.n_interests, cfg.embed_dim)
-        from repro.core.sharded_index import ShardedIndex
-        idx = ShardedIndex(forest=forest, n_local=n_local, cfg=local_cfg)
+        from repro.core.sharded_index import ShardedForest
+        idx = ShardedForest(forest=forest, n_local=n_local, cfg=local_cfg)
         d, ids = qstep(idx, flat, params["item_embed"])
         # merge the per-interest lists into one top-k
         from repro.core.sharded_index import merge_topk_pairs

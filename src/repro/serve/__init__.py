@@ -1,20 +1,27 @@
-"""Serving runtime subsystem (DESIGN.md §12).
+"""Serving runtime subsystem (DESIGN.md §12, §15).
 
     runtime.ServingRuntime   tuned (sharded) serving + overload degradation
     planner                  traffic-model capacity planner (QPS x SLO)
+    autoscaler               replica fleet + the control loop that re-runs
+                             the planner against measured demand
+    config                   fleet.yml -> plan() -> fleet stand-up
     loadgen                  open-loop Poisson load generation
     batching.DynamicBatcher  continuous-batching front-end
     ann_serve                legacy index+batcher bridge (kept; the runtime
                              is the serving surface going forward)
 """
+from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ReplicaFleet
 from repro.serve.batching import BatcherStopped, DynamicBatcher
+from repro.serve.config import FleetHandle, build_fleet, load_config
 from repro.serve.loadgen import arrival_schedule, run_open_loop, sweep
 from repro.serve.planner import CapacityPlan, TrafficModel, calibrate, plan
 from repro.serve.runtime import (ServingRuntime, build_ladder,
                                  uniform_shard_params)
 
 __all__ = [
-    "BatcherStopped", "CapacityPlan", "DynamicBatcher", "ServingRuntime",
-    "TrafficModel", "arrival_schedule", "build_ladder", "calibrate",
-    "plan", "run_open_loop", "sweep", "uniform_shard_params",
+    "Autoscaler", "AutoscalerConfig", "BatcherStopped", "CapacityPlan",
+    "DynamicBatcher", "FleetHandle", "ReplicaFleet", "ServingRuntime",
+    "TrafficModel", "arrival_schedule", "build_fleet", "build_ladder",
+    "calibrate", "load_config", "plan", "run_open_loop", "sweep",
+    "uniform_shard_params",
 ]

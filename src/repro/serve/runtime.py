@@ -9,9 +9,11 @@ operating point died at the manifest boundary: ``tune()`` persisted
     — per-shard tuned params (manifest v4) > host tuned params (v3) >
     explicit ``params`` > defaults;
   * serves either host-local (``index.search``, mutable while serving) or
-    mesh-sharded (rows partitioned via ``core.sharded_index``; the resolved
-    operating point is projected with ``SearchParams.sharded()`` and its
-    ``n_probes`` actually reaches ``make_query_fn``);
+    mesh-sharded (rows partitioned via ``core.sharded_index.ShardedIndex``;
+    the resolved operating point is projected with
+    ``SearchParams.sharded()`` — which keeps filters and probe schedules,
+    both served on the mesh since DESIGN.md §15 — and its knobs actually
+    reach the compiled mesh steps);
   * fronts everything with the DynamicBatcher, plus **overload
     degradation**: a precompiled ladder of operating points descending in
     cost (step ``n_probes`` down, then ``n_trees``/``adaptive_wave``); when
@@ -31,8 +33,6 @@ import dataclasses
 import time
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.index import SearchParams, load_index
@@ -145,23 +145,32 @@ class ServingRuntime:
         self.slo_p99_ms = slo_p99_ms
         total_trees = int(getattr(index.spec.forest, "n_trees", 1))
         self.params = self._resolve_params(index, params, use_tuned)
-        # same capability surface as Index.search / make_query_fn: the ONE
-        # violations() definition (DESIGN.md §13), checked at stand-up so a
-        # bad operating point fails here, not per-request in the batcher.
-        bad = self.params.violations()
-        if mesh is not None and self.params.filter is not None:
-            # .sharded() strips perf knobs silently because that only
-            # degrades latency; silently dropping a filter would change
-            # which rows come back, so it is refused instead.
-            bad.append("filter=<predicate> (filtered search is host-local; "
-                       "serve filtered queries on an unsharded runtime)")
+        # same capability surface as Index.search / ShardedIndex: the ONE
+        # capabilities() matrix (DESIGN.md §13/§15), checked at stand-up so
+        # a bad operating point fails here, not per-request in the batcher.
+        # Mesh runtimes serve filters and probe schedules since §15; the
+        # only filter refusal left is index-dependent (no metadata), and it
+        # surfaces as a structured CapabilityError naming the entry.
+        bad = self.params.capabilities("serving")
+        if (mesh is not None and self.params.filter is not None
+                and getattr(index, "meta_store", None) is None):
+            from repro.index.params import Violation
+            bad.append(Violation(
+                "filter", "sharded",
+                "params.filter is set but this index carries no metadata",
+                "build with build_index(..., metadata={col: values}) to "
+                "serve filtered queries on a mesh"))
         if bad:
-            raise ValueError("params cannot be served: " + ", ".join(bad))
+            from repro.index.params import CapabilityError
+            raise CapabilityError(bad, "serving")
         if ladder is None:
             ladder = build_ladder(self.params, total_trees)
         if not degrade:
             ladder = ladder[:1]
         if mesh is not None:
+            # project perf knobs onto the mesh-legal set (counted as a
+            # latency downgrade, not a correctness change); .sharded()
+            # KEEPS filter and probe_schedule — ShardedIndex serves both
             ladder = tuple(dict.fromkeys(p.sharded() for p in ladder))
         self.ladder: tuple[SearchParams, ...] = tuple(ladder)
         self._rung = 0
@@ -229,30 +238,14 @@ class ServingRuntime:
 
     # ------------------------------------------------------------ sharded
     def _init_sharded(self, db_axes: Sequence[str], tree_axis: str) -> None:
-        from repro.core.sharded_index import (build_sharded_index,
-                                              make_query_fn)
-        gids, rows = self.index.live_points()
-        d_shards = 1
-        for a in db_axes:
-            d_shards *= self.mesh.shape[a]
-        n = rows.shape[0]
-        pad = (-n) % d_shards
-        if pad:
-            # pad to an even row split; the validity bitmap masks pad rows
-            # out of every cell's top-k (same path as tombstones)
-            rows = np.concatenate([rows, np.repeat(rows[-1:], pad, axis=0)])
-        live = np.ones(rows.shape[0], bool)
-        live[n:] = False
-        self._gids = np.asarray(gids, np.int64)
-        self._db = jnp.asarray(rows)
-        self._live = jnp.asarray(live)
-        self._sharded = build_sharded_index(
-            self.index.key, self._db, self.index.spec.forest, self.mesh,
-            db_axes=db_axes, tree_axis=tree_axis)
-        self._qfns = [
-            make_query_fn(self._sharded.cfg, self._sharded.n_local,
-                          self.mesh, params=p, with_validity=True)
-            for p in self.ladder]
+        # the ShardedIndex facade owns the padded rows, validity bitmap,
+        # gid remap and per-rung compiled steps (DESIGN.md §15); ladder
+        # rungs are already .sharded()-projected, so strict mode never
+        # trips on a perf knob — it guards the unstrippable ones (filter)
+        from repro.core.sharded_index import ShardedIndex
+        self._sharded = ShardedIndex(self.index, self.mesh,
+                                     db_axes=db_axes, tree_axis=tree_axis,
+                                     strict=True)
         self._search = self._search_sharded
 
     def _search_local(self, q: np.ndarray, rung: int):
@@ -260,16 +253,8 @@ class ServingRuntime:
         return np.asarray(d), np.asarray(i)
 
     def _search_sharded(self, q: np.ndarray, rung: int):
-        with self.mesh:
-            d, i = self._qfns[rung](self._sharded, jnp.asarray(q),
-                                    self._db, self._live)
-        d, i = np.asarray(d), np.asarray(i)
-        # shard-local positions were globalized over the padded row order;
-        # remap to the index's global ids (pad rows are validity-masked, so
-        # positions >= n_live never appear in a top-k)
-        ok = (i >= 0) & (i < self._gids.shape[0])
-        return d, np.where(ok, self._gids[np.clip(i, 0, None)
-                                          % self._gids.shape[0]], -1)
+        d, i = self._sharded.search(q, self.ladder[rung])
+        return np.asarray(d), np.asarray(i)
 
     # ------------------------------------------------------------- serving
     def _serve_batch(self, payloads: list) -> list:

@@ -1,0 +1,386 @@
+"""Autoscaler + fleet + fleet.yml config tests (DESIGN.md §15).
+
+The control-loop tests run against a fake fleet with an injectable clock —
+``Autoscaler.step()`` is pure control logic over ``fleet.stats()``, so the
+scenarios (2x-rated burst, calm decay, panic override) are deterministic:
+no sleeps, no racing threads.  One live test drives a real ``ReplicaFleet``
+of sleep-cost runtimes through an actual burst.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ForestConfig
+from repro.index import IndexSpec, SearchParams
+from repro.serve import loadgen
+from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ReplicaFleet
+from repro.serve.config import _parse_simple_yaml, build_fleet, load_config
+from repro.serve.planner import TrafficModel, rated_qps
+from repro.serve.runtime import ServingRuntime
+
+# affine model: t(b) = 1ms + 1ms*b, 2ms batching wait
+MODEL = TrafficModel(c0_s=0.001, c1_s=0.001, max_wait_s=0.002,
+                     batch_grid=(1, 8, 32), measured_s=(), rows_per_query=1.0)
+SLO_MS = 50.0
+BATCH = 32
+RATED1 = rated_qps(MODEL, SLO_MS, BATCH)     # one replica's rated qps
+
+
+class _FakeFleet:
+    """Counter-driven fleet stand-in: tests feed the counters directly."""
+
+    def __init__(self):
+        self.n = 1
+        self.total = 0
+        self.depth = 0
+        self.degraded = 0
+        self.resize_log: list[tuple[float, int]] = []
+        self.clock = lambda: 0.0
+
+    @property
+    def n_replicas(self) -> int:
+        return self.n
+
+    def scale_to(self, n, batch=None):
+        self.resize_log.append((self.clock(), n))
+        self.n = n
+        return n
+
+    def stats(self) -> dict:
+        return {"requests_total": self.total, "depth": self.depth,
+                "requests_degraded": self.degraded}
+
+
+def _loop(cfg=None, **cfg_kw):
+    cfg = cfg or AutoscalerConfig(slo_p99_ms=SLO_MS, max_replicas=8,
+                                  cooldown_s=1.0, scale_down_cooldown_s=4.0,
+                                  demand_smoothing=1.0, **cfg_kw)
+    ff = _FakeFleet()
+    t = [0.0]
+    ff.clock = lambda: t[0]
+    a = Autoscaler(ff, MODEL, cfg, batch=BATCH, clock=lambda: t[0])
+    return a, ff, t
+
+
+def _tick(a, ff, t, dt, demand_qps):
+    """Advance the fake clock one control period under ``demand_qps``:
+    completions up to capacity, the excess piling into the queue."""
+    t[0] += dt
+    cap = ff.n * RATED1
+    served = min(demand_qps, cap)
+    ff.total += int(served * dt)
+    if demand_qps > cap:
+        ff.depth += int((demand_qps - cap) * dt)
+    else:
+        ff.depth = max(0, ff.depth - int((cap - demand_qps) * dt))
+    return a.step()
+
+
+# ---------------------------------------------------------------------------
+# fake-clock control-loop scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_burst_scales_up_then_cools_down():
+    a, ff, t = _loop()
+    a.step()                                    # baseline tick
+    # 3s of 2x one replica's rated qps: must scale up, and to the
+    # planner's target (2 replicas serve 2x rated with headroom)
+    for _ in range(12):
+        d = _tick(a, ff, t, 0.25, 2.0 * RATED1)
+    assert any(d["action"] == "up" for d in a.history), \
+        "2x-rated burst never scaled up"
+    assert ff.n == 2
+    up = next(d for d in a.history if d["action"] == "up")
+    assert up["planned_batch"] == BATCH         # planned at the REAL batch
+    # 8s of 0.2x rated: exactly one step-down after the calm window
+    for _ in range(32):
+        d = _tick(a, ff, t, 0.25, 0.2 * RATED1)
+    downs = [d for d in a.history if d["action"] == "down"]
+    assert len(downs) == 1 and ff.n == 1
+    # no flapping: resize-to-resize gaps respect the cooldowns
+    ts = [d["t"] for d in a.history if d["action"] != "hold"]
+    gaps = [b - x for x, b in zip(ts, ts[1:])]
+    assert all(g >= a.config.cooldown_s for g in gaps)
+    assert a.stats()["scale_ups"] == 1 and a.stats()["scale_downs"] == 1
+
+
+def test_plan_pins_the_fleet_batch():
+    # the planner's default grid would pick a smaller batch whose rated
+    # qps exceeds this demand (claiming one replica suffices) — but live
+    # replicas serve at their BUILT batch, so the re-plan must be pinned
+    a, ff, t = _loop()
+    a.step()
+    d = _tick(a, ff, t, 0.25, 2.0 * RATED1)
+    assert d["action"] == "up" and d["planned_batch"] == BATCH
+    # sanity: the default grid really does rate a smaller batch higher
+    assert rated_qps(MODEL, SLO_MS, 8) > 2.0 * RATED1 > RATED1
+
+
+def test_dead_band_holds_and_panic_overrides():
+    a, ff, t = _loop()
+    a.step()
+    # demand just above capacity but inside the 15% dead band: hold
+    d = _tick(a, ff, t, 0.25, 1.10 * RATED1)
+    assert d["action"] == "hold"
+    # same demand with a shed fraction above the panic threshold: scale,
+    # the fleet is visibly degrading even though demand reads in-band
+    ff.degraded += int(0.2 * RATED1 * 0.25)
+    d = _tick(a, ff, t, 0.25, 1.10 * RATED1)
+    assert d["action"] == "up" and d["reason"] == "panic"
+
+
+def test_cooldown_blocks_immediate_rescale():
+    a, ff, t = _loop()
+    a.step()
+    _tick(a, ff, t, 0.25, 2.0 * RATED1)
+    assert ff.n == 2
+    # push demand to 4x before the cooldown elapses: decision must wait
+    d = _tick(a, ff, t, 0.25, 4.0 * RATED1)
+    assert d["action"] == "hold" and d["reason"] == "cooldown"
+    # once the cooldown has passed, the deferred scale-up lands
+    for _ in range(3):
+        d = _tick(a, ff, t, 0.25, 4.0 * RATED1)
+    assert ff.n > 2
+
+
+def test_scale_down_waits_for_calm():
+    a, ff, t = _loop()
+    a.step()
+    for _ in range(8):
+        _tick(a, ff, t, 0.25, 2.0 * RATED1)
+    assert ff.n == 2
+    # calm traffic, but briefly interrupted: the calm window restarts
+    for _ in range(8):
+        _tick(a, ff, t, 0.25, 0.2 * RATED1)     # 2s calm < 4s window
+    # blip above 2-replica capacity but inside the dead band: no resize,
+    # yet the calm window restarts
+    _tick(a, ff, t, 0.25, 2.2 * RATED1)
+    for _ in range(8):
+        d = _tick(a, ff, t, 0.25, 0.2 * RATED1)
+    assert ff.n == 2 and d["action"] == "hold"
+    for _ in range(10):
+        d = _tick(a, ff, t, 0.25, 0.2 * RATED1)
+    assert ff.n == 1                            # calm finally long enough
+
+
+def test_infeasible_demand_pins_ceiling():
+    # demand beyond what max_replicas serves: plan() raises, the loop pins
+    # the ceiling instead of dying (shed handles the excess)
+    a, ff, t = _loop(cfg=AutoscalerConfig(
+        slo_p99_ms=SLO_MS, max_replicas=2, cooldown_s=0.0,
+        scale_down_cooldown_s=4.0, demand_smoothing=1.0))
+    a.step()
+    for _ in range(4):
+        _tick(a, ff, t, 0.25, 50.0 * RATED1)
+    assert ff.n == 2
+
+
+def test_config_roundtrip_and_unknown_keys():
+    cfg = AutoscalerConfig(slo_p99_ms=25.0, hysteresis=0.2)
+    assert AutoscalerConfig.from_dict(cfg.to_dict()) == cfg
+    # from_dict tolerates fleet.yml keys that aren't control knobs
+    c2 = AutoscalerConfig.from_dict({"slo_p99_ms": 25.0, "enabled": True,
+                                     "qps": 500.0, "hysteresis": 0.2})
+    assert c2 == cfg
+
+
+# ---------------------------------------------------------------------------
+# live fleet: real runtimes, real burst
+# ---------------------------------------------------------------------------
+
+
+class _SleepIndex:
+    """Sleep-cost index: deterministic service time, trivial results."""
+
+    def __init__(self, per_batch_s=0.008):
+        self.spec = IndexSpec(backend="rpf",
+                              forest=ForestConfig(n_trees=8))
+        self.tuned_params = SearchParams(k=5, n_probes=8)
+        self.shard_params = None
+        self.serving_plan = None
+        self.per_batch_s = per_batch_s
+
+    def search(self, q, params):
+        time.sleep(self.per_batch_s)
+        n = q.shape[0]
+        return (np.zeros((n, params.k), np.float32),
+                np.tile(np.arange(params.k), (n, 1)))
+
+    def live_points(self):
+        return np.arange(64), np.zeros((64, 4), np.float32)
+
+
+def test_replica_fleet_dispatch_scale_and_monotone_stats():
+    idx = _SleepIndex(per_batch_s=0.001)
+    fleet = ReplicaFleet(lambda batch=None: ServingRuntime(
+        idx, max_batch=int(batch or 8), max_wait_s=0.001), n_replicas=2)
+    try:
+        q = np.zeros(4, np.float32)
+        d, i = fleet(q)
+        assert i.shape == (5,)
+        for _ in range(20):
+            fleet(q)
+        before = fleet.stats()
+        assert before["n_replicas"] == 2
+        assert before["requests_total"] >= 21
+        fleet.scale_to(1)                       # retiree counters fold in
+        fleet(q)
+        after = fleet.stats()
+        assert after["n_replicas"] == 1
+        assert after["requests_total"] > before["requests_total"] - 1
+        assert len(fleet.resizes) == 1
+        fleet.scale_to(3)
+        assert fleet.n_replicas == 3
+    finally:
+        fleet.stop()
+
+
+def test_live_burst_scales_up():
+    idx = _SleepIndex(per_batch_s=0.016)
+    model = TrafficModel(c0_s=0.016, c1_s=0.0, max_wait_s=0.002,
+                         batch_grid=(8,), measured_s=(),
+                         rows_per_query=1.0)
+    rated = rated_qps(model, SLO_MS, 8)
+    fleet = ReplicaFleet(lambda batch=None: ServingRuntime(
+        idx, max_batch=int(batch or 8), max_wait_s=0.002,
+        slo_p99_ms=SLO_MS), n_replicas=1, batch=8)
+    cfg = AutoscalerConfig(slo_p99_ms=SLO_MS, max_replicas=4,
+                           interval_s=0.05, cooldown_s=0.3,
+                           scale_down_cooldown_s=60.0,
+                           demand_smoothing=0.7)
+    scaler = Autoscaler(fleet, model, cfg, batch=8).start()
+    try:
+        q = np.zeros((8, 4), np.float32)
+        offered = 2.0 * rated
+        loadgen.run_open_loop(fleet, q, offered,
+                              n_requests=int(offered * 2.0), seed=1,
+                              timeout_s=30.0)
+        assert fleet.n_replicas >= 2, \
+            f"live 2x burst never scaled up: {scaler.history[-3:]}"
+        ts = [d["t"] for d in scaler.history if d["action"] != "hold"]
+        gaps = [b - x for x, b in zip(ts, ts[1:])]
+        assert all(g >= 0.95 * cfg.cooldown_s for g in gaps)
+    finally:
+        scaler.stop()
+        fleet.stop()
+
+
+# ---------------------------------------------------------------------------
+# fleet.yml config
+# ---------------------------------------------------------------------------
+
+FLEET_YML = """\
+# fleet.yml
+index: {manifest}
+serving:
+  slo_p99_ms: 25.0
+  max_batch: 16
+  max_wait_s: 0.002
+  degrade: true
+mesh: {mesh}
+autoscale:
+  enabled: {enabled}
+  qps: 120.0
+  min_replicas: 1
+  max_replicas: 3
+  cooldown_s: 0.5
+"""
+
+
+def test_simple_yaml_parser_matches_schema():
+    text = FLEET_YML.format(manifest="/tmp/idx", mesh="", enabled="true")
+    cfg = _parse_simple_yaml(text)
+    assert cfg["index"] == "/tmp/idx"
+    assert cfg["serving"]["slo_p99_ms"] == 25.0
+    assert cfg["serving"]["max_batch"] == 16
+    assert cfg["serving"]["degrade"] is True
+    assert cfg["autoscale"]["enabled"] is True
+    assert cfg["autoscale"]["qps"] == 120.0
+    assert cfg["mesh"] is None
+    # inline lists + quotes (the mesh section's shape/axes spelling)
+    cfg = _parse_simple_yaml("mesh:\n  shape: [4, 2]\n"
+                             "  axes: ['data', 'model']\n")
+    assert cfg["mesh"]["shape"] == [4, 2]
+    assert cfg["mesh"]["axes"] == ["data", "model"]
+
+
+def test_simple_parser_agrees_with_pyyaml(tmp_path):
+    yaml = pytest.importorskip("yaml")
+    text = FLEET_YML.format(manifest="runs/w.idx", mesh="", enabled="false")
+    assert _parse_simple_yaml(text) == yaml.safe_load(text)
+
+
+def test_load_config(tmp_path):
+    p = tmp_path / "fleet.yml"
+    p.write_text(FLEET_YML.format(manifest="x.idx", mesh="", enabled="no"))
+    cfg = load_config(str(p))
+    assert cfg["index"] == "x.idx"
+    assert cfg["autoscale"]["enabled"] is False
+
+
+def test_build_fleet_requires_index():
+    with pytest.raises(ValueError, match="index"):
+        build_fleet({"serving": {"slo_p99_ms": 25.0}})
+
+
+def test_build_fleet_serves_and_autoscales(tmp_path):
+    # in-memory index override + explicit model: no manifest round-trip,
+    # no calibration — stands up 1 replica + the control loop
+    idx = _SleepIndex(per_batch_s=0.001)
+    model = TrafficModel(c0_s=0.001, c1_s=0.0001, max_wait_s=0.002,
+                         batch_grid=(16,), measured_s=(),
+                         rows_per_query=1.0)
+    cfg = {"serving": {"slo_p99_ms": 25.0, "max_batch": 16},
+           "autoscale": {"enabled": True, "qps": 50.0,
+                         "max_replicas": 3, "cooldown_s": 0.5}}
+    handle = build_fleet(cfg, index=idx, model=model)
+    try:
+        assert handle.autoscaler is not None
+        assert handle.plan is not None and handle.plan.n_replicas >= 1
+        assert handle.fleet.n_replicas == handle.plan.n_replicas
+        d, i = handle(np.zeros(4, np.float32))
+        assert i.shape == (5,)
+    finally:
+        handle.stop()
+
+
+def test_build_fleet_from_saved_manifest(tmp_path, shared_builds):
+    import jax
+    from repro.index import build_index
+    db = shared_builds.clustered_db(600, 8, n_clusters=8, seed=0)
+    index = build_index(jax.random.key(0), db,
+                        IndexSpec(backend="rpf",
+                                  forest=ForestConfig(n_trees=4,
+                                                      capacity=32)))
+    root = str(tmp_path / "idx")
+    index.save(root)
+    p = tmp_path / "fleet.yml"
+    p.write_text(f"index: {root}\nserving:\n  slo_p99_ms: 50.0\n"
+                 "  max_batch: 8\n")
+    handle = build_fleet(str(p))
+    try:
+        assert handle.autoscaler is None        # autoscale not enabled
+        assert handle.fleet.n_replicas == 1
+        d, i = handle(np.asarray(db[0], np.float32))
+        assert int(np.asarray(i)[0]) >= 0
+    finally:
+        handle.stop()
+
+
+def test_sharded_projection_keeps_filter_and_schedule():
+    # the regression the tentpole exists to prevent: projecting an
+    # operating point onto a mesh must not silently drop the predicate
+    from repro.filter import Eq
+    p = SearchParams(k=5, filter=Eq("shop", "s0"), probe_schedule=4,
+                     adaptive_wave=8)
+    sp = p.sharded()
+    assert sp.filter is p.filter
+    assert sp.probe_schedule == 4
+    assert sp.adaptive_wave == 0
+    assert dataclasses.replace(sp, filter=None,
+                               probe_schedule=0).sharded_violations() == []

@@ -1,0 +1,144 @@
+"""Capability-matrix API tests (DESIGN.md §15).
+
+``SearchParams.capabilities(context)`` is the ONE refusal surface —
+``violations()`` / ``sharded_violations()`` are deprecated shims over it,
+``require(context)`` raises the structured ``CapabilityError``, and the
+README table is generated from ``CAPABILITY_MATRIX`` so the docs cannot
+drift from the code.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.filter import Eq
+from repro.index import SearchParams
+from repro.index.params import (CAPABILITY_MATRIX, CONTEXTS,
+                                CapabilityError, Violation,
+                                capability_table_md)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# the matrix itself
+# ---------------------------------------------------------------------------
+
+
+def test_clean_params_pass_every_context():
+    p = SearchParams(k=10, n_probes=4)
+    for ctx in CONTEXTS:
+        assert p.capabilities(ctx) == []
+        assert p.require(ctx) is p
+
+
+def test_unknown_context_rejected():
+    with pytest.raises(ValueError, match="context"):
+        SearchParams().capabilities("gpu")
+
+
+def test_bad_metric_fails_everywhere():
+    p = SearchParams(metric="bogus")
+    for ctx in CONTEXTS:
+        bad = p.capabilities(ctx)
+        assert any(v.knob == "metric" for v in bad)
+        with pytest.raises(CapabilityError):
+            p.require(ctx)
+
+
+def test_sharded_context_matches_matrix_rows():
+    # every knob the matrix marks sharded-"no" must actually be refused,
+    # and every sharded-"yes" knob accepted
+    cases = {
+        "adaptive_wave": SearchParams(adaptive_wave=8),
+        "min_candidates": SearchParams(min_candidates=50),
+        "n_trees": SearchParams(n_trees=4),
+    }
+    for knob, p in cases.items():
+        bad = p.capabilities("sharded")
+        assert [v.knob for v in bad] == [knob]
+        assert p.capabilities("local") == []
+    legal = SearchParams(k=5, filter=Eq("shop", "s0"), probe_schedule=4)
+    assert legal.capabilities("sharded") == []
+
+
+def test_matrix_rows_agree_with_capabilities():
+    # the generated docs and the enforcement logic must tell one story:
+    # a "no" cell in the matrix row <-> capabilities() flags that knob
+    by_knob = {r["knob"]: r for r in CAPABILITY_MATRIX}
+    assert by_knob["`adaptive_wave` (tree waves)"]["sharded"] == "no"
+    assert by_knob["`n_trees` (forest prefix)"]["sharded"] == "no"
+    assert by_knob["`filter` (metadata predicate)"]["sharded"].startswith(
+        "yes")
+    assert by_knob["`probe_schedule` (per-query probes)"][
+        "sharded"].startswith("yes")
+    md = capability_table_md()
+    assert md.count("\n") == len(CAPABILITY_MATRIX) + 1
+    for row in CAPABILITY_MATRIX:
+        assert row["knob"] in md
+
+
+# ---------------------------------------------------------------------------
+# the structured error
+# ---------------------------------------------------------------------------
+
+
+def test_capability_error_structure():
+    p = SearchParams(metric="bogus", filter="not a predicate")
+    with pytest.raises(CapabilityError) as ei:
+        p.require("local")
+    err = ei.value
+    assert isinstance(err, ValueError)          # legacy handlers keep working
+    assert err.context == "local"
+    knobs = {v.knob for v in err.violations}
+    assert knobs == {"metric", "filter"}
+    assert "[local]" in str(err)
+    for v in err.violations:
+        assert v.message in str(err)
+
+
+def test_violation_str_includes_hint():
+    v = Violation(knob="filter", context="sharded", message="no metadata",
+                  hint="build with metadata=")
+    assert str(v) == "no metadata — build with metadata="
+    assert str(Violation(knob="k", context="local",
+                         message="bare")) == "bare"
+
+
+def test_deprecated_shims_render_messages():
+    p = SearchParams(metric="bogus")
+    assert p.violations() == [str(v) for v in p.capabilities("local")]
+    assert any("metric" in s for s in p.sharded_violations())
+    # legacy message substrings the old tests matched on still appear
+    fp = SearchParams(filter=12345)
+    assert any("Predicate" in s for s in fp.violations())
+
+
+# ---------------------------------------------------------------------------
+# consumers of the matrix
+# ---------------------------------------------------------------------------
+
+
+def test_make_query_fn_raises_structured_error():
+    from repro import compat
+    from repro.core import ForestConfig
+    from repro.core.sharded_index import make_query_fn
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    for p, knob in ((SearchParams(k=5, probe_schedule=4), "probe_schedule"),
+                    (SearchParams(k=5, filter=Eq("shop", "s0")), "filter")):
+        with pytest.raises(CapabilityError) as ei:
+            make_query_fn(ForestConfig(n_trees=4), 128, mesh, params=p)
+        assert any(v.knob == knob for v in ei.value.violations)
+        assert "ShardedIndex" in str(ei.value)  # points at the host driver
+
+
+def test_readme_table_in_sync():
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "capability_table.py"),
+         "--check"], capture_output=True, text=True)
+    assert r.returncode == 0, (
+        "README capability matrix drifted from "
+        f"SearchParams.CAPABILITY_MATRIX:\n{r.stdout}{r.stderr}")

@@ -340,12 +340,17 @@ def test_violations_surface():
     assert any("Predicate" in v for v in bad_filter.violations())
     with pytest.raises(ValueError, match="Predicate"):
         idx.search(q, bad_filter)
-    # sharded: filter is a listed violation and sharded() strips it
+    # sharded: the capability matrix makes filters sharded-LEGAL (host
+    # bitmap on the validity path), so the projection must NOT strip the
+    # predicate — silently dropping it would answer unfiltered results
     fp = SearchParams(k=5, filter=Eq("shop", "s0"))
-    assert any("filter" in v for v in fp.sharded_violations())
+    assert fp.sharded_violations() == []
     assert fp.violations() == []
-    assert fp.sharded().filter is None
-    assert fp.sharded().sharded_violations() == []
+    assert fp.sharded().filter is fp.filter
+    # knobs the mesh genuinely cannot serve still project away
+    wavy = SearchParams(k=5, adaptive_wave=8)
+    assert any("adaptive_wave" in v for v in wavy.sharded_violations())
+    assert wavy.sharded().adaptive_wave == 0
 
 
 def test_serving_runtime_consults_violations():

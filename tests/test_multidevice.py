@@ -124,6 +124,186 @@ def test_sharded_index_multiprobe():
     assert "OK multiprobe" in out
 
 
+def test_sharded_index_class_search_and_admission():
+    """ShardedIndex mirrors the Index protocol on a mesh: search honors
+    tombstones, strict mode raises the structured CapabilityError, and
+    non-strict projects (counting the downgrade) — never silently."""
+    out = _run("""
+        from repro.core import ForestConfig, exact_knn
+        from repro.core.sharded_index import ShardedIndex
+        from repro.data.synthetic import clustered_gaussians
+        from repro.index import IndexSpec, SearchParams, build_index
+        from repro.index.params import CapabilityError
+        N, d = 4096, 32
+        db = clustered_gaussians(N, d, seed=0)
+        q = db[:48] + 0.01
+        spec = IndexSpec(backend="rpf",
+                         forest=ForestConfig(n_trees=16, capacity=12))
+        index = build_index(jax.random.key(0), db, spec)
+        dead = list(range(0, 200, 2))
+        index.delete(dead)
+        sx = ShardedIndex(index, mesh)
+        dists, ids = sx.search(q, SearchParams(k=5))
+        ids = np.asarray(ids)
+        assert not np.isin(ids, dead).any(), "tombstoned id surfaced"
+        live_gids, live_rows = index.live_points()
+        td, tpos = exact_knn(q, live_rows, k=5)
+        tids = np.asarray(live_gids)[np.asarray(tpos)]
+        rec1 = float((ids[:, :1] == tids[:, :1]).any(1).mean())
+        assert rec1 > 0.9, rec1
+        assert (np.diff(np.asarray(dists), axis=1) >= -1e-6).all()
+        # strict (default): mesh-illegal knobs raise, naming the knob
+        wavy = SearchParams(k=5, adaptive_wave=8)
+        try:
+            sx.search(q, wavy)
+            raise AssertionError("strict ShardedIndex accepted "
+                                 "adaptive_wave")
+        except CapabilityError as e:
+            assert any(v.knob == "adaptive_wave" for v in e.violations)
+        # non-strict: projects the knob away and counts the downgrade
+        lax_sx = ShardedIndex(index, mesh, strict=False)
+        d2, i2 = lax_sx.search(q, wavy)
+        assert lax_sx.stats()["counters"]["stripped_knobs"] >= 1
+        st = sx.stats()
+        assert st["sharded"] and st["n_live"] == N - len(dead)
+        print("OK class", rec1)
+    """)
+    assert "OK class" in out
+
+
+def test_sharded_filtered_parity_with_host_oracle():
+    """The ISSUE-10 acceptance criterion: sharded filtered search answers
+    recall-identical to the single-host filtered oracle — in the brute
+    regime literally bitwise, in the ride-the-mesh regime leak-free with
+    oracle-level recall."""
+    out = _run("""
+        from repro.core import exact_knn, ForestConfig
+        from repro.core.sharded_index import ShardedIndex
+        from repro.data.synthetic import clustered_gaussians
+        from repro.filter import Eq, Range
+        from repro.index import IndexSpec, SearchParams, build_index
+        N, d = 12288, 32
+        db = clustered_gaussians(N, d, seed=0)
+        q = db[:32] + 0.01
+        meta = {"shop": np.asarray([f"s{i % 8}" for i in range(N)]),
+                "price": np.arange(N, dtype=np.int64)}
+        spec = IndexSpec(backend="rpf",
+                         forest=ForestConfig(n_trees=16, capacity=12))
+        index = build_index(jax.random.key(0), db, spec, metadata=meta)
+        sx = ShardedIndex(index, mesh)
+        # brute regime (1536 matching rows <= 4096): both paths scan the
+        # same canonical live rows -> bitwise-identical to the host oracle
+        pb = SearchParams(k=10, filter=Eq("shop", "s1"))
+        hd, hi = map(np.asarray, index.search(q, pb))
+        sd, si = map(np.asarray, sx.search(q, pb))
+        np.testing.assert_array_equal(si, hi)
+        np.testing.assert_array_equal(sd, hd)
+        assert (si[si >= 0] % 8 == 1).all()
+        # ride-the-mesh regime (6144 matches, selectivity 0.5): the host
+        # filter bitmap lands on the row-sharded validity argument
+        pm = SearchParams(k=10, filter=Range("price", 0, N // 2 - 1))
+        md_, mi = map(np.asarray, sx.search(q, pm))
+        ok = mi[mi >= 0]
+        assert (ok < N // 2).all(), "filtered-out row leaked on the mesh"
+        sub = db[:N // 2]
+        _, tpos = exact_knn(q, sub, k=10)
+        def rec(i, t):
+            return float((i[:, :, None] == t[:, None, :]).any(1).mean())
+        r_mesh = rec(mi, np.asarray(tpos))
+        hd2, hi2 = map(np.asarray, index.search(q, pm))
+        r_host = rec(hi2, np.asarray(tpos))
+        assert r_mesh >= r_host - 0.05, (r_mesh, r_host)
+        st = sx.stats()["counters"]
+        assert st["filtered_queries"] == 2 * len(q)
+        assert st["brute_filtered_queries"] == len(q)
+        print("OK filtered", r_mesh, r_host)
+    """)
+    assert "OK filtered" in out
+
+
+def test_sharded_probe_schedule_parity():
+    """probe_schedule rides the mesh: tol=0.0 is bitwise the fixed-cap
+    step (the scheduled_query invariant, now over per-width mesh steps),
+    and a loose tol processes fewer probes on average."""
+    out = _run("""
+        import dataclasses
+        from repro.core import ForestConfig
+        from repro.core.sharded_index import ShardedIndex
+        from repro.data.synthetic import clustered_gaussians
+        from repro.index import IndexSpec, SearchParams, build_index
+        N, d, CAP = 4096, 32, 4
+        db = clustered_gaussians(N, d, seed=0)
+        q = db[:64] + 0.01
+        spec = IndexSpec(backend="rpf",
+                         forest=ForestConfig(n_trees=16, capacity=12))
+        index = build_index(jax.random.key(0), db, spec)
+        sx = ShardedIndex(index, mesh)
+        fixed = SearchParams(k=5, n_probes=CAP)
+        sched = dataclasses.replace(fixed, n_probes=1, probe_schedule=CAP,
+                                    tol=0.0)
+        df, jf = map(np.asarray, sx.search(q, fixed))
+        ds, js = map(np.asarray, sx.search(q, sched))
+        np.testing.assert_array_equal(js, jf)
+        np.testing.assert_array_equal(ds, df)
+        st = sx.stats()["counters"]
+        assert st["scheduled_queries"] == len(q)
+        assert st["probe_rounds"] >= 1
+        # loose tol: easy queries converge below the cap, so the loose run
+        # processes strictly fewer probes than the tol=0.0 exhaustive run
+        # (counters are cumulative: diff isolates the loose run's cost)
+        exhaustive = st["probes_processed"]
+        loose = dataclasses.replace(sched, tol=0.05)
+        sx.search(q, loose)
+        st2 = sx.stats()["counters"]
+        assert st2["probes_processed"] - exhaustive < exhaustive
+        print("OK schedule")
+    """)
+    assert "OK schedule" in out
+
+
+def test_mesh_serving_runtime_filters_and_schedules():
+    """The serving bugfix: a mesh ServingRuntime SERVES filtered and
+    scheduled params; the one refusal left (filter without metadata) is a
+    structured CapabilityError naming the capabilities() entry."""
+    out = _run("""
+        from repro.core import ForestConfig
+        from repro.data.synthetic import clustered_gaussians
+        from repro.filter import Eq
+        from repro.index import IndexSpec, SearchParams, build_index
+        from repro.index.params import CapabilityError
+        from repro.serve.runtime import ServingRuntime
+        N, d = 2048, 32
+        db = clustered_gaussians(N, d, seed=0)
+        meta = {"shop": np.asarray([f"s{i % 4}" for i in range(N)])}
+        spec = IndexSpec(backend="rpf",
+                         forest=ForestConfig(n_trees=16, capacity=12))
+        index = build_index(jax.random.key(0), db, spec, metadata=meta)
+        p = SearchParams(k=5, filter=Eq("shop", "s1"), probe_schedule=4,
+                         tol=0.0)
+        rt = ServingRuntime(index, params=p, mesh=mesh, max_batch=8,
+                            max_wait_s=0.001)
+        try:
+            for j in range(8):
+                dists, ids = rt(np.asarray(db[j], np.float32))
+                ids = np.asarray(ids)
+                assert (ids[ids >= 0] % 4 == 1).all(), ids
+        finally:
+            rt.stop()
+        # no metadata -> structured refusal naming the filter entry
+        bare = build_index(jax.random.key(0), db, spec)
+        try:
+            ServingRuntime(bare, params=SearchParams(
+                k=5, filter=Eq("shop", "s1")), mesh=mesh, warmup=False)
+            raise AssertionError("mesh runtime accepted a filter with no "
+                                 "metadata")
+        except CapabilityError as e:
+            assert any(v.knob == "filter" for v in e.violations)
+            assert "metadata" in str(e)
+        print("OK mesh serving")
+    """)
+    assert "OK mesh serving" in out
+
+
 def test_dp_train_step_with_compression():
     out = _run("""
         from repro.configs.base import LMConfig

@@ -63,6 +63,10 @@ SOURCES = [
      ["p99_ratio", "mean_probes_scheduled", "fixed_n_probes",
       "recall_scheduled", "recall_ok", "probes_below_fixed", "p99_ok",
       "n", "k"]),
+    ("autoscale", "BENCH_autoscale.json",
+     ["shed_after_scaleup", "rated_qps_1replica", "replicas_after_leg1",
+      "resizes", "min_resize_gap_s", "scaled_up", "shed_recovered",
+      "p999_bounded", "control_sheds", "no_flapping"]),
 ]
 
 # (section, metric, direction); a move beyond --max-regress against the
@@ -171,6 +175,28 @@ def check_gates(history: list[dict], point: dict, max_regress: float,
                              "the predicate")):
             if fs.get(flag) is False:
                 errors.append(f"filtered_search.{flag} is False: {why}")
+    asc = point.get("autoscale", {})
+    if asc:
+        # hard autoscaling gates (DESIGN.md §15, the ISSUE-10 acceptance
+        # criterion): a 2x-rated burst must provoke a scale-up, the scaled
+        # fleet's shed fraction must return to <= 0.01 (while the static
+        # control sheds at the same load), and resizes must respect the
+        # control loop's cooldowns
+        for flag, why in (
+                ("scaled_up", "the 2x-rated burst never provoked a "
+                              "scale-up"),
+                ("shed_recovered", "shed fraction stayed above 0.01 after "
+                                   "the scale-up — capacity never caught "
+                                   "up with the burst"),
+                ("p999_bounded", "p999 after scale-up was unbounded "
+                                 "(queue growth / timeouts)"),
+                ("control_sheds", "the static control did NOT shed — the "
+                                  "burst never actually exceeded one "
+                                  "replica"),
+                ("no_flapping", "resizes came faster than the cooldown "
+                                "allows — the loop is oscillating")):
+            if asc.get(flag) is False:
+                errors.append(f"autoscale.{flag} is False: {why}")
     ps = point.get("probe_schedule", {})
     if ps:
         # hard probe-schedule gates (DESIGN.md §14, the ISSUE-9 acceptance
@@ -240,7 +266,8 @@ def main(argv: list[str]) -> int:
     print(f"bench history: {len(history)} point(s) -> "
           f"{os.path.relpath(args.out)}")
     for key in ("build_time", "recall_frontier", "million_row",
-                "serving_slo", "filtered_search", "probe_schedule"):
+                "serving_slo", "filtered_search", "probe_schedule",
+                "autoscale"):
         if key in point:
             print(f"  {key}: {point[key]}")
     for e in errors:

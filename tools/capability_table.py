@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Keep the README capability matrix in sync with SearchParams.
+
+The table between the ``<!-- capability-matrix:begin/end -->`` markers in
+README.md is GENERATED from ``repro.index.params.CAPABILITY_MATRIX`` (the
+same rows ``SearchParams.capabilities`` enforces), so the docs cannot
+drift from what the code accepts:
+
+  python tools/capability_table.py --write    # regenerate in place
+  python tools/capability_table.py --check    # CI: exit 1 on drift
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+README = os.path.join(os.path.dirname(__file__), "..", "README.md")
+BEGIN = "<!-- capability-matrix:begin -->"
+END = "<!-- capability-matrix:end -->"
+
+
+def render(readme_text: str) -> str:
+    from repro.index.params import capability_table_md
+    try:
+        head, rest = readme_text.split(BEGIN, 1)
+        _, tail = rest.split(END, 1)
+    except ValueError:
+        raise SystemExit(f"README.md is missing the {BEGIN} / {END} "
+                         "marker pair")
+    return f"{head}{BEGIN}\n{capability_table_md()}\n{END}{tail}"
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--check", action="store_true",
+                      help="exit 1 when README.md is out of sync")
+    mode.add_argument("--write", action="store_true",
+                      help="regenerate the README table in place")
+    ap.add_argument("--readme", default=README)
+    args = ap.parse_args(argv)
+
+    with open(args.readme) as f:
+        current = f.read()
+    fresh = render(current)
+    if args.write:
+        if fresh != current:
+            with open(args.readme, "w") as f:
+                f.write(fresh)
+            print(f"capability matrix: rewrote {os.path.relpath(args.readme)}")
+        else:
+            print("capability matrix: already in sync")
+        return 0
+    if fresh != current:
+        print("capability matrix: README.md is OUT OF SYNC with "
+              "SearchParams.CAPABILITY_MATRIX — run "
+              "`python tools/capability_table.py --write`", file=sys.stderr)
+        return 1
+    print("capability matrix: in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
